@@ -1,0 +1,30 @@
+"""Benchmark plumbing: wall-clock timing + CSV rows (name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import numpy as np
+import jax
+
+ROWS: List[str] = []
+
+
+def bench(fn: Callable, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall time per call in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn()
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def row(name: str, us_per_call: float, derived: str) -> None:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)

@@ -1,0 +1,42 @@
+"""Fig 10: per-operation latency — cycle model (calibrated to the paper's
+14ns search / 54ns insert at 370MHz, 16 PEs) + measured single-step latency
+of this implementation on CPU."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, row
+from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
+                        QueryBatch, apply_step, init_table)
+from repro.core.perfmodel import FPGA_U250, fpga_latency_ns
+
+# Yang et al. [12] latency reference points from Fig 10 (approximate, ns)
+YANG = {"search": 24.0, "insert": 75.0}
+
+
+def main() -> None:
+    for p in (4, 8, 16):
+        s = fpga_latency_ns("search", p)
+        i = fpga_latency_ns("insert", p)
+        row(f"fig10_model_p{p}", 0.0,
+            f"search_ns={s:.1f};insert_ns={i:.1f};"
+            f"yang_search_ns={YANG['search']};yang_insert_ns={YANG['insert']}")
+    # measured one-step latency (p=16 cycle-faithful batch)
+    cfg = HashTableConfig(p=16, k=16, buckets=1 << 12, slots=4,
+                          replicate_reads=False)
+    tab = init_table(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    for name, op in (("search", OP_SEARCH), ("insert", OP_INSERT),
+                     ("delete", OP_DELETE)):
+        batch = QueryBatch(
+            jnp.full((16,), op, jnp.int32),
+            jnp.array(rng.integers(1, 2 ** 32, (16, 1), dtype=np.uint32)),
+            jnp.array(rng.integers(1, 2 ** 32, (16, 1), dtype=np.uint32)))
+        us = bench(lambda: apply_step(tab, batch), iters=30)
+        row(f"fig10_measured_step_{name}", us, "one p=16 step on CPU")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Fig 4: SRAM requirements vs (PEs, NSQ ratio) — 50K entries, 2 slots,
+4B key + 4B value.  Ours (m*n blocks, shared read ports) vs LaForest
+n*(n-1+m); plus the compact TPU layout (replicate_reads=False)."""
+from __future__ import annotations
+
+from repro.core import HashTableConfig, memory_bytes, sram_blocks_laforest, \
+    sram_blocks_ours
+from benchmarks.common import row
+
+
+def main() -> None:
+    for p in (2, 4, 8, 16):
+        for ratio_num in (1, p // 2, p):
+            k = max(ratio_num, 1)
+            cfg = HashTableConfig(p=p, k=k, buckets=1 << 16, slots=2,
+                                  key_words=1, val_words=1)
+            mb = memory_bytes(cfg) / 1e6
+            cfg_c = HashTableConfig(p=p, k=k, buckets=1 << 16, slots=2,
+                                    key_words=1, val_words=1,
+                                    replicate_reads=False)
+            mb_c = memory_bytes(cfg_c) / 1e6
+            laf = sram_blocks_laforest(p, k) / sram_blocks_ours(p, k)
+            row(f"fig4_mem_p{p}_k{k}", 0.0,
+                f"paper_MB={mb:.1f};compact_MB={mb_c:.1f};"
+                f"laforest_overhead_x={laf:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Fig 5 / Fig 8: throughput (MOPS) vs number of PEs.
+
+Measured on this host (CPU, jnp fast path, compact layout) for the *scaling
+shape*; the FPGA-model and TPU-roofline-model columns give the cross-device
+view (the paper's absolute MOPS are Fmax-bound FPGA numbers and do not port).
+Mix: 50% search / 50% insert-update (the paper's uniform stimulus)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, row
+from repro.core import (HashTableConfig, OP_INSERT, OP_SEARCH, init_table,
+                        run_stream)
+from repro.core.perfmodel import fpga_throughput_mops, tpu_modeled_mops
+
+STEPS = 16
+QPP = 64          # wide-vector mode: queries per PE per step
+
+
+def run_one(p: int, qpp: int = QPP, steps: int = STEPS):
+    cfg = HashTableConfig(p=p, k=p, buckets=1 << 14, slots=4,
+                          replicate_reads=False, stagger_slots=True,
+                          queries_per_pe=qpp)
+    tab = init_table(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    N = cfg.queries_per_step
+    ops = rng.choice([OP_SEARCH, OP_INSERT], size=(steps, N)).astype(np.int32)
+    keys = rng.integers(1, 2 ** 32, size=(steps, N, 1), dtype=np.uint32)
+    vals = rng.integers(1, 2 ** 32, size=(steps, N, 1), dtype=np.uint32)
+    ops_j, keys_j, vals_j = jnp.array(ops), jnp.array(keys), jnp.array(vals)
+    fn = jax.jit(lambda t: run_stream(t, ops_j, keys_j, vals_j))
+    us = bench(lambda: fn(tab), iters=3, warmup=1)
+    mops = steps * N / us
+    return mops, cfg
+
+
+def main() -> None:
+    for p in (1, 2, 4, 8, 16):
+        mops, cfg = run_one(p)
+        fpga = fpga_throughput_mops(p, 370.0)
+        tpu = tpu_modeled_mops(cfg)
+        row(f"fig5_throughput_p{p}", 0.0,
+            f"measured_cpu_MOPS={mops:.2f};fpga_model_MOPS={fpga:.0f};"
+            f"tpu_v5e_model_MOPS={tpu:.0f}")
+
+
+if __name__ == "__main__":
+    main()

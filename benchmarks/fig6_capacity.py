@@ -1,0 +1,36 @@
+"""Fig 6 / Fig 9: maximum hash-table entries that fit a device budget vs PE
+count and NSQ configuration (64-bit k/v, 4 slots — Fig 6's setting)."""
+from __future__ import annotations
+
+from repro.core import HashTableConfig, memory_bytes
+from benchmarks.common import row
+
+U250_BYTES = 45 * 1024 * 1024          # 360 Mb URAM
+V5E_VMEM = 128 * 1024 * 1024
+
+
+def max_entries(p, k, budget, replicate=True):
+    """Largest power-of-two bucket count fitting the byte budget."""
+    best = 0
+    for bits in range(1, 29):
+        cfg = HashTableConfig(p=p, k=k, buckets=1 << bits, slots=4,
+                              key_words=2, val_words=2,
+                              replicate_reads=replicate)
+        if memory_bytes(cfg) <= budget:
+            best = 1 << bits
+        else:
+            break
+    return best
+
+
+def main() -> None:
+    for p in (2, 4, 8, 16):
+        for k in {1, max(p // 4, 1), p // 2 or 1, p}:
+            e_u250 = max_entries(p, k, U250_BYTES) * 4          # 4 slots
+            e_vmem = max_entries(p, k, V5E_VMEM, replicate=False) * 4
+            row(f"fig6_capacity_p{p}_k{k}", 0.0,
+                f"u250_paper_entries={e_u250};v5e_vmem_compact_entries={e_vmem}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Fig 7: throughput vs supported non-search-queries-per-cycle ratio (k/p),
+plus the memory saved by search-only PEs (the paper's workload
+customization)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, row
+from repro.core import (HashTableConfig, OP_INSERT, OP_SEARCH, init_table,
+                        memory_bytes, run_stream)
+
+P = 8
+QPP = 64
+STEPS = 16
+
+
+def main() -> None:
+    for k in (1, 2, 4, 8):
+        cfg = HashTableConfig(p=P, k=k, buckets=1 << 14, slots=4,
+                              replicate_reads=False, stagger_slots=True,
+                              queries_per_pe=QPP)
+        tab = init_table(cfg, jax.random.key(0))
+        rng = np.random.default_rng(0)
+        N = cfg.queries_per_step
+        # NSQ fraction == the supported ratio; NSQs on lanes with pe < k
+        ops = np.full((STEPS, N), OP_SEARCH, np.int32)
+        lanes = np.arange(N) % P
+        ops[:, lanes < k] = OP_INSERT
+        keys = rng.integers(1, 2 ** 32, size=(STEPS, N, 1), dtype=np.uint32)
+        vals = keys + 1
+        fn = jax.jit(lambda t: run_stream(t, jnp.array(ops), jnp.array(keys),
+                                          jnp.array(vals)))
+        us = bench(lambda: fn(tab), iters=3, warmup=1)
+        mops = STEPS * N / us
+        mem = memory_bytes(cfg) / 1e6
+        full = memory_bytes(HashTableConfig(
+            p=P, k=P, buckets=1 << 14, slots=4, replicate_reads=False)) / 1e6
+        row(f"fig7_nsq_p{P}_k{k}", 0.0,
+            f"ratio={k}/{P};measured_cpu_MOPS={mops:.2f};mem_MB={mem:.1f};"
+            f"saving_vs_full={100 * (1 - mem / full):.0f}%")
+
+
+if __name__ == "__main__":
+    main()

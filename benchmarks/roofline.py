@@ -1,0 +1,143 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) from the
+single-pod dry-run artifacts.
+
+  compute_s    = FLOPs / (chips * 197e12)       [bf16 peak, v5e]
+  memory_s     = HLO bytes-accessed per device / 819e9
+  collective_s = collective bytes per device / 50e9   [1 ICI link worst-case]
+
+FLOPs sources: ``hlo`` = compiled cost_analysis (NOTE: jax.lax.scan bodies are
+counted ONCE, not x trip-count — an undercount for deep stacks); ``model`` =
+analytic MODEL_FLOPS (6·N_active·D for train, 2·N_active·D prefill/decode,
+plus quadratic attention / recurrent-state terms).  The compute term uses
+max(hlo x chips, model); the ratio model/hlo is reported per cell.
+
+Writes experiments/roofline.csv and prints the table.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+from repro.configs import get_config
+from repro.launch.shapes import SHAPES
+from repro.models.model_config import (ModelConfig, attn_kinds, layer_kinds,
+                                       moe_mask)
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    n_active = cfg.param_count(active_only=True)
+    kinds = layer_kinds(cfg)
+    ak = attn_kinds(cfg)
+    hd = cfg.resolved_head_dim
+    H = cfg.n_heads
+
+    def attn_quad(tokens_q, tokens_k, mult):
+        """2-FLOP MACs for qk^T + av per attention layer."""
+        total = 0.0
+        for i, k in enumerate(kinds):
+            if k != "attn":
+                continue
+            Sk = min(tokens_k, cfg.sliding_window) if ak[i] == "local" \
+                else tokens_k
+            if cfg.use_mla:
+                qk, vd = (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim,
+                          cfg.v_head_dim)
+            else:
+                qk = vd = hd
+            total += mult * 2.0 * B * tokens_q * Sk * H * (qk + vd)
+        return total
+
+    def recur(tokens, mult):
+        total = 0.0
+        di = cfg.d_inner
+        for k in kinds:
+            if k == "mamba":
+                total += mult * 6.0 * B * tokens * di * cfg.ssm_state_dim
+            elif k == "mlstm":
+                dh = di // max(H, 1)
+                total += mult * 6.0 * B * tokens * di * dh
+            elif k == "slstm":
+                dh = cfg.d_model // max(H, 1)
+                total += mult * 8.0 * B * tokens * cfg.d_model * dh
+        return total
+
+    if kind == "train":
+        return (6.0 * n_active * B * S + attn_quad(S, S, 3.0)
+                + recur(S, 3.0))
+    if kind == "prefill":
+        return (2.0 * n_active * B * S + attn_quad(S, S, 1.0)
+                + recur(S, 1.0))
+    # decode: one token against S cache
+    return (2.0 * n_active * B + attn_quad(1, S, 1.0) + recur(1, 1.0))
+
+
+def analyze(dryrun_dir: str = "experiments/dryrun",
+            mesh: str = "pod") -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir,
+                                              f"*__{mesh}.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            rows.append(dict(arch=rec["arch"], shape=rec["shape"],
+                             status=rec.get("error", "error")))
+            continue
+        chips = rec["n_devices"]
+        cfg = get_config(rec["arch"])
+        m_flops = model_flops(cfg, rec["shape"])
+        hlo_flops_total = rec["flops_per_device"] * chips
+        flops = max(m_flops, hlo_flops_total)
+        compute_s = flops / (chips * PEAK_FLOPS)
+        memory_s = rec["bytes_accessed_per_device"] / HBM_BW
+        coll_b = sum(rec["collective_bytes_per_device"].values())
+        collective_s = coll_b / ICI_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": collective_s}
+        dominant = max(terms, key=terms.get)
+        bound_s = max(terms.values())
+        rows.append(dict(
+            arch=rec["arch"], shape=rec["shape"], status="ok", chips=chips,
+            compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+            dominant=dominant,
+            model_flops=m_flops, hlo_flops=hlo_flops_total,
+            model_over_hlo=(m_flops / hlo_flops_total
+                            if hlo_flops_total else float("inf")),
+            roofline_frac=compute_s / bound_s if bound_s else 0.0,
+            mem_temp_gb=rec["memory"]["temp_bytes"] / 1e9,
+            mem_args_gb=rec["memory"]["argument_bytes"] / 1e9,
+        ))
+    return rows
+
+
+def main() -> None:
+    rows = analyze()
+    os.makedirs("experiments", exist_ok=True)
+    cols = ["arch", "shape", "chips", "compute_s", "memory_s",
+            "collective_s", "dominant", "model_flops", "hlo_flops",
+            "model_over_hlo", "roofline_frac", "mem_temp_gb", "mem_args_gb"]
+    with open("experiments/roofline.csv", "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            if r.get("status") != "ok":
+                continue
+            f.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"roofline_{r['arch']}__{r['shape']},0.0,status=FAIL")
+            continue
+        print(f"roofline_{r['arch']}__{r['shape']},0.0,"
+              f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+              f"collective_s={r['collective_s']:.3e};dom={r['dominant']};"
+              f"frac={r['roofline_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Tables 1 & 2: resource utilization of the published configurations.
+
+The paper's rows (entries, PEs, NSQ ratio) mapped to our byte model, reported
+as % of the on-chip budget (U250 URAM 45MB / Stratix-10 M20K ~28.6MB /
+v5e VMEM 128MB compact layout)."""
+from __future__ import annotations
+
+from repro.core import HashTableConfig, memory_bytes
+from benchmarks.common import row
+
+U250 = 45 * 1024 * 1024
+S10 = int(229 / 8 * 1024 * 1024)     # 229 Mb M20K
+V5E = 128 * 1024 * 1024
+
+# Table 1 (Xilinx): entries, p, k (4 slots, 64-bit k/v)
+TABLE1 = [(128 * 1024, 4, 2), (64 * 1024, 8, 2), (32 * 1024, 16, 2),
+          (16 * 1024, 8, 8)]
+# Table 2 (Intel): 64-bit k/v, 4 slots
+TABLE2 = [(128 * 1024, 2, 2), (64 * 1024, 4, 2), (32 * 1024, 6, 2),
+          (16 * 1024, 8, 4)]
+
+
+def _pct(cfg, budget):
+    return 100.0 * memory_bytes(cfg) / budget
+
+
+def main() -> None:
+    for entries, p, k in TABLE1:
+        cfg = HashTableConfig(p=p, k=k, buckets=entries, slots=4,
+                              key_words=2, val_words=2)
+        cfgc = HashTableConfig(p=p, k=k, buckets=entries, slots=4,
+                               key_words=2, val_words=2,
+                               replicate_reads=False)
+        row(f"table1_{entries // 1024}K_p{p}_k{k}", 0.0,
+            f"u250_pct={_pct(cfg, U250):.0f}%;paper_pct=80%;"
+            f"v5e_vmem_compact_pct={_pct(cfgc, V5E):.0f}%")
+    for entries, p, k in TABLE2:
+        cfg = HashTableConfig(p=p, k=k, buckets=entries, slots=4,
+                              key_words=2, val_words=2)
+        row(f"table2_{entries // 1024}K_p{p}_k{k}", 0.0,
+            f"stratix10_pct={_pct(cfg, S10):.0f}%")
+
+
+if __name__ == "__main__":
+    main()

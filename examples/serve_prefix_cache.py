@@ -1,0 +1,48 @@
+"""End-to-end serving driver (the paper-kind e2e example): batched decode of a
+small LM with the hash-table-backed prefix cache.
+
+Run:  PYTHONPATH=src python examples/serve_prefix_cache.py
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_smoke
+from repro.models.lm import init_lm
+from repro.serving.engine import Engine, Request, ServeConfig
+
+
+def main():
+    cfg = get_smoke("smollm_135m")
+    params, _ = init_lm(cfg, jax.random.key(0))
+    scfg = ServeConfig(slots=4, s_max=160, block_tokens=16)
+    eng = Engine(cfg, params, scfg)
+
+    rng = np.random.default_rng(0)
+    # 12 requests sharing a long system-prompt-style prefix
+    shared = rng.integers(1, cfg.vocab_size, 96)
+    reqs = []
+    for i in range(12):
+        tail = rng.integers(1, cfg.vocab_size, 32)
+        r = Request(rid=i,
+                    prompt=np.concatenate([shared, tail]).astype(np.int32),
+                    max_new_tokens=8)
+        reqs.append(r)
+        eng.submit(r)
+
+    t0 = time.time()
+    eng.run()
+    wall = time.time() - t0
+    new_tokens = sum(len(r.out_tokens) for r in reqs)
+    print(f"served {len(reqs)} requests / {new_tokens} new tokens "
+          f"in {wall:.2f}s -> {new_tokens / wall:.1f} tok/s (CPU)")
+    print(f"prefix cache: hit rate {eng.prefix_cache.hit_rate:.1%} "
+          f"(hits={eng.prefix_cache.hits}, misses={eng.prefix_cache.misses})")
+    for r in reqs[:4]:
+        print(f"  req {r.rid}: cached prefix blocks={r.cached_blocks}, "
+              f"first tokens={r.out_tokens[:5]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Train a reduced smollm for a few hundred steps with checkpoint + resume.
+
+Demonstrates the fault-tolerant loop: trains 150 steps, "crashes", resumes
+from the latest checkpoint and finishes 300 — the two loss curves join.
+
+Run:  PYTHONPATH=src python examples/train_tiny_lm.py
+"""
+import shutil
+import tempfile
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ckpt = tempfile.mkdtemp(prefix="repro_train_")
+    common = ["--arch", "smollm-135m", "--smoke", "--batch", "8",
+              "--seq", "64", "--ckpt-dir", ckpt, "--ckpt-every", "50",
+              "--lr", "3e-3", "--log-every", "25"]
+    print("=== phase 1: train to step 150, then 'crash' ===")
+    train_main(["--steps", "150"] + common)
+    print("=== phase 2: resume from checkpoint, train to step 300 ===")
+    train_main(["--steps", "300", "--resume"] + common)
+    shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Architecture registry: the 10 assigned architectures + paper hash-table
+configs.  ``get_config(name)`` returns the exact published configuration;
+``get_smoke(name)`` returns the reduced same-family config used by CPU smoke
+tests (small widths/depths/vocabs, same block structure)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.model_config import ModelConfig
+
+ARCHS: List[str] = [
+    "gemma3_1b",
+    "granite_3_2b",
+    "command_r_plus_104b",
+    "smollm_135m",
+    "jamba_v01_52b",
+    "xlstm_1_3b",
+    "pixtral_12b",
+    "olmoe_1b_7b",
+    "deepseek_v3_671b",
+    "whisper_tiny",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def canon(name: str) -> str:
+    n = name.replace("-", "_").replace(".", "_")
+    if n not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCHS}")
+    return n
+
+
+def get_config(name: str) -> ModelConfig:
+    return importlib.import_module(f"repro.configs.{canon(name)}").CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return importlib.import_module(f"repro.configs.{canon(name)}").SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

@@ -1,0 +1,29 @@
+"""command-r-plus-104b [dense] — 64L d=12288 96H (GQA kv=8) d_ff=33792
+vocab=256000.  GQA, no-bias.  [hf:CohereForAI/c4ai-command-r-v01]"""
+from repro.models.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=33792,
+    vocab_size=256000,
+    use_bias=False,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="command-r-smoke",
+    family="dense",
+    n_layers=4,
+    d_model=96,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab_size=512,
+    tie_embeddings=True,
+    ssm_chunk=8,
+)

@@ -1,0 +1,59 @@
+"""deepseek-v3-671b [moe] — 61L d=7168 128H MLA, expert d_ff=2048
+vocab=129280; 1 shared + 256 routed top-8; 3 leading dense layers
+(dense d_ff=18432); MTP depth 1.  [arXiv:2412.19437]
+
+Deviations noted in DESIGN.md: softmax/sigmoid scoring per config but
+group-limited (node-limited) routing and aux-loss-free bias balancing are not
+implemented (standard aux losses instead)."""
+from repro.models.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=18432,               # dense FF for the 3 leading layers
+    vocab_size=129280,
+    use_mla=True,
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_rope_head_dim=64,
+    qk_nope_head_dim=128,
+    v_head_dim=128,
+    moe_period=1,
+    first_dense_layers=3,
+    n_experts=256,
+    experts_per_token=8,
+    n_shared_experts=1,
+    moe_d_ff=2048,
+    mtp_depth=1,
+    tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-smoke",
+    family="moe",
+    n_layers=5,               # 1 dense + 4 MoE
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    use_mla=True,
+    q_lora_rank=32,
+    kv_lora_rank=32,
+    qk_rope_head_dim=8,
+    qk_nope_head_dim=16,
+    v_head_dim=16,
+    moe_period=1,
+    first_dense_layers=1,
+    n_experts=8,
+    experts_per_token=2,
+    n_shared_experts=1,
+    moe_d_ff=32,
+    mtp_depth=1,
+    tie_embeddings=False,
+    ssm_chunk=8,
+)

@@ -1,0 +1,39 @@
+"""gemma3-1b [dense] — 26L d=1152 4H (GQA kv=1) d_ff=6912 vocab=262144.
+5:1 local:global interleave, 128k context.  [hf:google/gemma-3-1b-pt]"""
+from repro.models.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    attn_pattern=("local", "local", "local", "local", "local", "global"),
+    sliding_window=512,
+    rope_theta=1_000_000.0,
+    qk_norm=True,
+    tie_embeddings=True,
+    act="gelu_tanh",
+)
+
+SMOKE = ModelConfig(
+    name="gemma3-smoke",
+    family="dense",
+    n_layers=6,               # one full local:global period
+    d_model=96,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=32,
+    d_ff=192,
+    vocab_size=512,
+    attn_pattern=CONFIG.attn_pattern,
+    sliding_window=8,
+    qk_norm=True,
+    tie_embeddings=True,
+    act="gelu_tanh",
+    ssm_chunk=8,
+)

@@ -1,0 +1,50 @@
+"""jamba-v0.1-52b [hybrid] — 32L d=4096 32H (GQA kv=8) d_ff=14336 vocab=65536,
+MoE 16e top-2.  Mamba+attn 1:7 interleave (one attention layer per 8-layer
+block), MoE every other layer.  [arXiv:2403.19887]"""
+from repro.models.model_config import ModelConfig
+
+_PATTERN = ("mamba", "mamba", "mamba", "mamba", "attn", "mamba", "mamba",
+            "mamba")
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    block_pattern=_PATTERN,
+    moe_period=2,
+    moe_offset=1,
+    n_experts=16,
+    experts_per_token=2,
+    moe_d_ff=14336,
+    ssm_state_dim=16,
+    ssm_conv_dim=4,
+    ssm_expand=2,
+    tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="jamba-smoke",
+    family="hybrid",
+    n_layers=8,               # one full period
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    block_pattern=_PATTERN,
+    moe_period=2,
+    moe_offset=1,
+    n_experts=4,
+    experts_per_token=2,
+    moe_d_ff=128,
+    ssm_state_dim=4,
+    ssm_conv_dim=4,
+    ssm_expand=2,
+    ssm_chunk=8,
+    tie_embeddings=False,
+)

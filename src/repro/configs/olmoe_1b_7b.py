@@ -1,0 +1,36 @@
+"""olmoe-1b-7b [moe] — 16L d=2048 16H (GQA kv=16) expert d_ff=1024
+vocab=50304, MoE 64e top-8 on every layer.  [arXiv:2409.02060]"""
+from repro.models.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=0,                   # every layer is MoE; no dense FF
+    vocab_size=50304,
+    moe_period=1,
+    n_experts=64,
+    experts_per_token=8,
+    moe_d_ff=1024,
+    tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="olmoe-smoke",
+    family="moe",
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=512,
+    moe_period=1,
+    n_experts=8,
+    experts_per_token=2,
+    moe_d_ff=32,
+    tie_embeddings=False,
+    ssm_chunk=8,
+)

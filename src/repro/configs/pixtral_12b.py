@@ -1,0 +1,35 @@
+"""pixtral-12b [vlm] — 40L d=5120 32H (GQA kv=8) d_ff=14336 vocab=131072.
+pixtral-ViT + mistral-nemo backbone; the ViT frontend is a STUB —
+input_specs() supplies precomputed patch embeddings.  [hf:mistralai/Pixtral-12B-2409]"""
+from repro.models.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    frontend="vision_patches",
+    num_patches=256,
+    tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="pixtral-smoke",
+    family="vlm",
+    n_layers=4,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=128,
+    vocab_size=512,
+    frontend="vision_patches",
+    num_patches=8,
+    tie_embeddings=False,
+    ssm_chunk=8,
+)

@@ -1,0 +1,28 @@
+"""smollm-135m [dense] — 30L d=576 9H (GQA kv=3) d_ff=1536 vocab=49152.
+llama-arch small.  [hf:HuggingFaceTB/SmolLM-135M]"""
+from repro.models.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=1536,
+    vocab_size=49152,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="smollm-smoke",
+    family="dense",
+    n_layers=4,
+    d_model=72,
+    n_heads=9,
+    n_kv_heads=3,
+    d_ff=192,
+    vocab_size=512,
+    tie_embeddings=True,
+    ssm_chunk=8,
+)

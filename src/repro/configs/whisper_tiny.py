@@ -1,0 +1,43 @@
+"""whisper-tiny [audio] — enc-dec 4+4L d=384 6H d_ff=1536 vocab=51865.
+Conv frontend is a STUB — input_specs() supplies precomputed frame
+embeddings [B, T, d].  [arXiv:2212.04356]"""
+from repro.models.model_config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    n_encoder_layers=4,
+    encoder_seq=1500,
+    frontend="audio_frames",
+    norm_type="layernorm",
+    act="gelu",
+    use_bias=True,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke",
+    family="audio",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    is_encoder_decoder=True,
+    n_encoder_layers=2,
+    encoder_seq=24,
+    frontend="audio_frames",
+    norm_type="layernorm",
+    act="gelu",
+    use_bias=True,
+    tie_embeddings=True,
+    ssm_chunk=8,
+)

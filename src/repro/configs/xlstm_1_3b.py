@@ -1,0 +1,36 @@
+"""xlstm-1.3b [ssm] — 48L d=2048 4H d_ff=0 vocab=50304.  sLSTM + mLSTM blocks
+at 1:7 ratio (blocks are self-contained: mLSTM pre-up-projection x2, sLSTM
+post-up-projection 4/3).  [arXiv:2405.04517]"""
+from repro.models.model_config import ModelConfig
+
+_PATTERN = ("slstm",) + ("mlstm",) * 7
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=_PATTERN,
+    ssm_expand=2,
+    slstm_proj_factor=4 / 3,
+    tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-smoke",
+    family="ssm",
+    n_layers=8,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=512,
+    block_pattern=_PATTERN,
+    ssm_expand=2,
+    ssm_chunk=8,
+    tie_embeddings=False,
+)

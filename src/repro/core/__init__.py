@@ -1,0 +1,40 @@
+"""XOR-based data-agnostic parallel hash table (the paper's contribution).
+
+Public API:
+  HashTableConfig, init_table, apply_step, run_stream, schedule_queries
+  XorMemory                      — generic n-write-port XOR memory
+  h3_hash, make_h3_params        — Class-H3 universal hashing
+  distributed                    — shard_map multi-device replica table
+  baselines                      — partitioned-atomic table, FASTHash mode
+  consistency                    — Theorem-1 cycle simulator
+  perfmodel                      — FPGA cycle model + TPU roofline model
+"""
+from repro.core.config import (
+    HashTableConfig,
+    memory_bytes,
+    sram_blocks_laforest,
+    sram_blocks_ours,
+)
+from repro.core.hash_table import (
+    OP_DELETE,
+    OP_INSERT,
+    OP_NOP,
+    OP_SEARCH,
+    QueryBatch,
+    StepResults,
+    XorHashTable,
+    apply_step,
+    init_table,
+    run_stream,
+    schedule_queries,
+)
+from repro.core.hashing import h3_hash, make_h3_params
+from repro.core.xor_memory import XorMemory, xor_reduce
+
+__all__ = [
+    "HashTableConfig", "memory_bytes", "sram_blocks_ours", "sram_blocks_laforest",
+    "OP_NOP", "OP_SEARCH", "OP_INSERT", "OP_DELETE",
+    "QueryBatch", "StepResults", "XorHashTable",
+    "apply_step", "init_table", "run_stream", "schedule_queries",
+    "h3_hash", "make_h3_params", "XorMemory", "xor_reduce",
+]

@@ -1,0 +1,147 @@
+"""Baselines the paper compares against (Table 3).
+
+1. :class:`PartitionedHashTable` — the "prior work" design (e.g. Pontarelli
+   [11], CPU/GPU partitioned tables [18], [23]): the table is split into p
+   partitions, each owned by one pipeline; parallel queries that collide on a
+   partition are **serialized**.  We implement it honestly: a batch of N
+   queries costs ``max_j load(j)`` rounds, realised with a
+   ``jax.lax.while_loop`` whose trip count is genuinely data-dependent —
+   uniform traffic approaches N/p rounds, adversarial single-partition traffic
+   degenerates to N rounds (a serial table), which is exactly the pathology
+   the paper's XOR design eliminates.
+
+2. FASTHash mode (Yang et al. [12]) — the paper's predecessor: p queries/cycle
+   guaranteed, but **search+insert only**.  We model it as our table with
+   update/delete rejected at the router; its per-op latency model is in
+   :mod:`repro.core.perfmodel` (Fig 10 comparison).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import HashTableConfig
+from repro.core.hashing import h3_hash, make_h3_params
+from repro.core.hash_table import OP_DELETE, OP_INSERT, OP_SEARCH
+
+__all__ = ["PartitionedHashTable", "init_partitioned", "partitioned_run"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PartitionedHashTable:
+    """Plain (non-XOR) closed-addressing table with p atomic partitions."""
+    q_masks: jnp.ndarray   # [index_bits, Wk]
+    keys: jnp.ndarray      # [B, S, Wk] uint32 (plaintext)
+    vals: jnp.ndarray      # [B, S, Wv]
+    valid: jnp.ndarray     # [B, S] uint32
+    cfg: HashTableConfig
+
+    def tree_flatten(self):
+        return (self.q_masks, self.keys, self.vals, self.valid), self.cfg
+
+    @classmethod
+    def tree_unflatten(cls, cfg, children):
+        return cls(*children, cfg=cfg)
+
+
+def init_partitioned(cfg: HashTableConfig, rng: jax.Array) -> PartitionedHashTable:
+    B, S = cfg.buckets, cfg.slots
+    return PartitionedHashTable(
+        q_masks=make_h3_params(rng, cfg.key_words, cfg.index_bits),
+        keys=jnp.zeros((B, S, cfg.key_words), jnp.uint32),
+        vals=jnp.zeros((B, S, cfg.val_words), jnp.uint32),
+        valid=jnp.zeros((B, S), jnp.uint32),
+        cfg=cfg,
+    )
+
+
+def _process_one_per_partition(table: PartitionedHashTable, op, key, val, bucket,
+                               active):
+    """Process <=1 query per partition, all in parallel (they hit distinct
+    buckets by construction, so the scatter is conflict-free)."""
+    cfg = table.cfg
+    rows_k = table.keys[bucket]                    # [P, S, Wk]
+    rows_v = table.vals[bucket]                    # [P, S, Wv]
+    rows_b = table.valid[bucket].astype(bool)      # [P, S]
+    key_eq = jnp.all(rows_k == key[:, None, :], axis=-1)
+    match = key_eq & rows_b
+    found = jnp.any(match, axis=-1)
+    mslot = jnp.argmax(match, axis=-1).astype(jnp.int32)
+    has_open = jnp.any(~rows_b, axis=-1)
+    oslot = jnp.argmax(~rows_b, axis=-1).astype(jnp.int32)
+    value = jnp.take_along_axis(rows_v, mslot[:, None, None], axis=1)[:, 0]
+    value = jnp.where(found[:, None], value, jnp.uint32(0))
+
+    is_ins = (op == OP_INSERT) & active
+    is_del = (op == OP_DELETE) & active
+    ins_ok = is_ins & (found | has_open)
+    del_ok = is_del & found
+    do_write = ins_ok | del_ok
+    slot = jnp.where(is_del | found, mslot, oslot)
+    wb = jnp.where(do_write, bucket.astype(jnp.int32), jnp.int32(cfg.buckets))
+    nk = jnp.where(is_del[:, None], jnp.uint32(0), key)
+    nv = jnp.where(is_del[:, None], jnp.uint32(0), val)
+    nb = jnp.where(is_del, jnp.uint32(0), jnp.uint32(1))
+    new = PartitionedHashTable(
+        table.q_masks,
+        table.keys.at[wb, slot, :].set(nk, mode="drop"),
+        table.vals.at[wb, slot, :].set(nv, mode="drop"),
+        table.valid.at[wb, slot].set(nb, mode="drop"),
+        cfg,
+    )
+    ok = jnp.where(is_ins, ins_ok, jnp.where(is_del, del_ok, op == OP_SEARCH))
+    return new, found, value, ok & active
+
+
+@jax.jit
+def partitioned_run(table: PartitionedHashTable, op: jnp.ndarray,
+                    key: jnp.ndarray, val: jnp.ndarray):
+    """Run a batch of N queries; cost = max partition load rounds.
+
+    Returns (table, found[N], value[N,Wv], ok[N], rounds:int32).  ``rounds``
+    is the serialization cost in cycles — the quantity Table 3 is about.
+    """
+    cfg = table.cfg
+    N = op.shape[0]
+    P = cfg.p
+    part_bits = max((P - 1).bit_length(), 0)
+    bucket = h3_hash(key, table.q_masks)
+    partition = (bucket >> (cfg.index_bits - part_bits)).astype(jnp.int32) \
+        if part_bits else jnp.zeros_like(bucket, jnp.int32)
+
+    def cond(state):
+        _, pending, *_ = state
+        return jnp.any(pending)
+
+    def body(state):
+        table, pending, found, value, ok, rounds = state
+        # For each partition, pick the first pending query (program order).
+        onehot = (partition[None, :] == jnp.arange(P)[:, None]) & pending[None, :]
+        any_q = jnp.any(onehot, axis=1)                     # [P]
+        pick = jnp.argmax(onehot, axis=1)                   # [P] first pending
+        sop = jnp.where(any_q, op[pick], 0)
+        skey = key[pick]
+        sval = val[pick]
+        sbucket = bucket[pick]
+        table, f, v, o = _process_one_per_partition(
+            table, sop, skey, sval, sbucket, any_q)
+        # write back per-query results
+        found = found.at[pick].set(jnp.where(any_q, f, found[pick]))
+        value = value.at[pick].set(jnp.where(any_q[:, None], v, value[pick]))
+        ok = ok.at[pick].set(jnp.where(any_q, o, ok[pick]))
+        # NB: inactive partitions all pick index 0 — a plain scatter-set here
+        # has colliding indices with undefined order (exactly the multi-writer
+        # hazard the paper's XOR memory removes); OR-combine instead.
+        served = jnp.zeros_like(pending).at[pick].max(any_q)
+        pending = pending & ~served
+        return table, pending, found, value, ok, rounds + 1
+
+    state = (table, op != 0,
+             jnp.zeros((N,), bool), jnp.zeros((N, cfg.val_words), jnp.uint32),
+             jnp.zeros((N,), bool), jnp.int32(0))
+    table, _, found, value, ok, rounds = jax.lax.while_loop(cond, body, state)
+    return table, found, value, ok, rounds

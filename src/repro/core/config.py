@@ -1,0 +1,97 @@
+"""Configuration for the XOR-based parallel hash table (paper §IV).
+
+Terminology maps 1:1 onto the paper:
+  p      — number of processing engines = parallel queries per cycle/step.
+  k      — max non-search queries (insert/update/delete) per cycle; the number
+           of Partial XOR Stores per replica and of NSQ-capable PEs.  NSQ
+           ratio = k/p (paper Definition 1).
+  buckets— hash table entries (closed addressing).
+  slots  — slots per bucket for collision resolution (paper: 2-4 typical).
+  key_words / val_words — key/value width in uint32 words (32/64/128-bit ==
+           1/2/4 words, the paper's evaluated sizes).
+  replicate_reads — True  = paper-faithful: one replica per PE (p replicas).
+                    False = TPU-native ('compact') variant: a single replica
+                    per device; vector gathers are natively multi-ported on
+                    TPU so read replication is dropped *within* a chip while
+                    the k-way XOR write-port decomposition is kept.  This is
+                    the beyond-paper memory optimisation measured in §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+__all__ = ["HashTableConfig", "sram_blocks_ours", "sram_blocks_laforest", "memory_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HashTableConfig:
+    p: int = 4                      # PEs == parallel queries per step-slice
+    k: int = 4                      # NSQ-capable PEs == partial XOR stores
+    buckets: int = 1024             # power of two
+    slots: int = 2
+    key_words: int = 1              # uint32 words: 1/2/4 == 32/64/128-bit
+    val_words: int = 1
+    replicate_reads: bool = True    # paper-faithful replicas
+    queries_per_pe: int = 1         # vector width per PE per step (1 == cycle-accurate)
+    stagger_slots: bool = False     # beyond-paper: port j inserts into the
+                                    # (j mod n_open)-th open slot, so same-step
+                                    # same-bucket inserts from distinct ports
+                                    # never collide while slots remain (§Perf)
+
+    def __post_init__(self):
+        if self.k < 1 or self.k > self.p:
+            raise ValueError(f"need 1 <= k <= p, got k={self.k} p={self.p}")
+        if self.buckets & (self.buckets - 1):
+            raise ValueError(f"buckets must be a power of two, got {self.buckets}")
+        if self.slots < 1:
+            raise ValueError("slots >= 1")
+
+    @property
+    def index_bits(self) -> int:
+        return (self.buckets - 1).bit_length()
+
+    @property
+    def replicas(self) -> int:
+        return self.p if self.replicate_reads else 1
+
+    @property
+    def nsq_ratio(self) -> float:
+        return self.k / self.p
+
+    @property
+    def queries_per_step(self) -> int:
+        return self.p * self.queries_per_pe
+
+    @property
+    def entry_words(self) -> int:
+        # key + value + 1 packed valid word per slot (valid is XOR-encoded too)
+        return self.key_words + self.val_words + 1
+
+    def tree_flatten(self):  # static-only dataclass; handy for jit static args
+        return (), self
+
+    @classmethod
+    def tree_unflatten(cls, aux, _):
+        return aux
+
+
+# ---------------------------------------------------------------------------
+# Memory-requirement models (paper §IV-B, §IV-D; Fig 4)
+# ---------------------------------------------------------------------------
+
+def sram_blocks_laforest(m_read: int, n_write: int) -> int:
+    """LaForest et al. [25]: an mR nW XOR memory costs n*(n-1+m) 1R1W blocks."""
+    return n_write * (n_write - 1 + m_read)
+
+
+def sram_blocks_ours(m_read: int, n_write: int) -> int:
+    """Paper Fig 1(b): shared read ports reduce the cost to m*n blocks."""
+    return m_read * n_write
+
+
+def memory_bytes(cfg: HashTableConfig) -> int:
+    """Total table storage (paper §IV-D): replicas x partial stores x table."""
+    bytes_per_slot = 4 * cfg.entry_words
+    table = cfg.buckets * cfg.slots * bytes_per_slot
+    return cfg.replicas * cfg.k * table

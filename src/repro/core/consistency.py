@@ -1,0 +1,105 @@
+"""Cycle-accurate relaxed-consistency simulator (paper §IV-E, Theorem 1).
+
+The paper's consistency model: a mutation initiated by PE ``j`` at cycle ``t``
+becomes visible at PE ``r`` only after the constant pipeline latency ``t0``
+(hashing + partial-XOR read + result resolution) plus the inter-PE pipeline
+distance.  A query is *erroneous* if its answer differs from the sequential
+(program-order) oracle.  Theorem 1:  P(n_err >= theta) <= (p^2 + p*t0) / theta.
+
+This module is a small numpy/python simulator used by tests and benchmarks to
+(1) demonstrate the inconsistency window exists, and (2) check the measured
+error count against the bound.  The JAX fast path (``apply_step``) has a
+visibility lag of exactly one step, which is within the same bound with
+``theta`` scaled by queries_per_pe (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+__all__ = ["CycleSimConfig", "simulate_trace", "theorem1_bound", "sequential_oracle"]
+
+OP_SEARCH, OP_INSERT, OP_DELETE = 1, 2, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class CycleSimConfig:
+    p: int = 8          # PEs (one query per PE per cycle)
+    t0: int = 5         # constant pipeline latency in cycles
+    k: int | None = None  # NSQ-capable PEs (default p)
+
+    @property
+    def nsq_pes(self) -> int:
+        return self.k if self.k is not None else self.p
+
+
+def sequential_oracle(trace: np.ndarray) -> List:
+    """Program-order results for a trace [(op, key, val)] -> list of answers."""
+    d: Dict[int, int] = {}
+    out = []
+    for op, key, val in trace:
+        if op == OP_SEARCH:
+            out.append(d.get(int(key)))
+        elif op == OP_INSERT:
+            d[int(key)] = int(val)
+            out.append(True)
+        elif op == OP_DELETE:
+            out.append(d.pop(int(key), None) is not None)
+        else:
+            out.append(None)
+    return out
+
+
+def simulate_trace(trace: np.ndarray, cfg: CycleSimConfig) -> Tuple[int, int]:
+    """Replay a trace through the pipelined replica model.
+
+    trace: int array [T, 3] of (op, key, val); query ``t`` issues at cycle
+    ``t // p`` on PE ``t % p`` (program order = issue order).  NSQs are assumed
+    pre-routed to PEs < k (callers use traces satisfying the contract).
+
+    Replica state visible to PE r at cycle c excludes any mutation initiated at
+    cycle c' by PE j unless  c >= c' + t0 + dist(j -> r)  where dist is the
+    ring distance (1..p) of the inter-PE pipeline; the initiating PE itself
+    sees its own mutation after t0.
+
+    Returns (n_err, n_queries): answers differing from the sequential oracle.
+    """
+    p, t0 = cfg.p, cfg.t0
+    oracle = sequential_oracle(trace)
+    # mutation log: (visible_cycle_at_r for each r, key, op, val)
+    muts: List[Tuple[np.ndarray, int, int, int]] = []
+    n_err = 0
+    for t, (op, key, val) in enumerate(trace):
+        c, pe = divmod(t, p)
+        # Build PE-local view: apply mutations visible at (c, pe).
+        d: Dict[int, int] = {}
+        for vis, mkey, mop, mval in muts:
+            if vis[pe] <= c:
+                if mop == OP_INSERT:
+                    d[mkey] = mval
+                else:
+                    d.pop(mkey, None)
+        if op == OP_SEARCH:
+            ans = d.get(int(key))
+        elif op == OP_INSERT:
+            ans = True
+        elif op == OP_DELETE:
+            ans = int(key) in d
+        else:
+            ans = None
+        if op != 0 and ans != oracle[t]:
+            n_err += 1
+        if op in (OP_INSERT, OP_DELETE):
+            dist = (np.arange(p) - pe) % p          # ring distance j -> r
+            vis = c + t0 + dist + 1                  # own PE sees after t0+1
+            # Apply in initiation order; later mutations to same key override
+            # once visible (the FPGA write is idempotent per (key, port)).
+            muts.append((vis, int(key), int(op), int(val)))
+    return n_err, len(trace)
+
+
+def theorem1_bound(p: int, t0: int, theta: float) -> float:
+    """P(n_err >= theta) <= (p^2 + p*t0)/theta  (paper Theorem 1)."""
+    return min(1.0, (p * p + p * t0) / max(theta, 1e-9))

@@ -1,0 +1,350 @@
+"""The paper's parallel hash table: p PEs, XOR partial stores, S/I/U/D queries.
+
+Architecture recap (paper §IV-C):
+
+  * The table is *replicated* once per PE (conflict-free reads).
+  * Each replica is split into ``k`` **Partial XOR Stores**; the plaintext entry
+    at (bucket, slot) is the XOR over the k stores.  NSQ-capable PE ``j`` owns
+    partial store ``j`` — a mutation initiated by PE j writes *only* store j
+    (in every replica), so same-step mutations from different PEs are
+    conflict-free **by construction**, independent of the access pattern.
+  * Search: hash -> parallel read of k stores -> XOR reduction tree -> slot
+    compare -> value.   Insert/Update/Delete: search dataflow first, then the
+    new entry is XOR-encoded against the *other* k-1 stores and written to the
+    initiating PE's store in all replicas (inter-PE propagation).
+
+Vectorization model (see DESIGN.md §2): one ``apply_step`` call processes
+``p * queries_per_pe`` queries with **no data-dependent control flow** — the
+step latency is shape-only, which is the TPU expression of the paper's
+"p queries per cycle in the worst case".  Query position ``n`` maps to PE
+``n % p``; the host-side router (:func:`schedule_queries`) enforces the
+workload contract that at most ``k`` of every ``p`` consecutive queries are
+non-search queries (paper Definition 1: NSQ ratio).
+
+Consistency: all encodings are computed against the pre-step snapshot and all
+writes commit at the end of the step — the relaxed-consistency window of the
+paper (Theorem 1), with the FPGA's ``p + t0`` cycles becoming one step.
+``repro.core.consistency`` contains the cycle-accurate simulator that measures
+``n_err`` against the bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import HashTableConfig
+from repro.core.hashing import h3_hash, make_h3_params
+from repro.core.xor_memory import xor_reduce
+
+__all__ = [
+    "OP_NOP", "OP_SEARCH", "OP_INSERT", "OP_DELETE",
+    "XorHashTable", "QueryBatch", "StepResults",
+    "init_table", "apply_step", "run_stream", "schedule_queries",
+]
+
+# Operation codes (OP_INSERT covers the paper's fused Insert/Update).
+OP_NOP = 0
+OP_SEARCH = 1
+OP_INSERT = 2
+OP_DELETE = 3
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class XorHashTable:
+    """Functional state: XOR-encoded partial stores across replicas.
+
+    store_* shapes: ``[R, k, buckets, slots, words]`` (valid: ``[R,k,B,S]``).
+    R == p for the paper-faithful layout, 1 for the compact TPU layout.
+    """
+    q_masks: jnp.ndarray      # [index_bits, key_words] uint32 — H3 matrix
+    store_keys: jnp.ndarray   # [R, k, B, S, Wk] uint32 (XOR-encoded)
+    store_vals: jnp.ndarray   # [R, k, B, S, Wv] uint32 (XOR-encoded)
+    store_valid: jnp.ndarray  # [R, k, B, S]     uint32 (XOR-encoded, bit 0)
+    cfg: HashTableConfig      # static
+
+    def tree_flatten(self):
+        return (self.q_masks, self.store_keys, self.store_vals,
+                self.store_valid), self.cfg
+
+    @classmethod
+    def tree_unflatten(cls, cfg, children):
+        return cls(*children, cfg=cfg)
+
+    # Convenience plaintext views (debug/test only; not used in the hot path).
+    def plaintext(self, replica: int = 0):
+        keys = xor_reduce(self.store_keys[replica], axis=0)
+        vals = xor_reduce(self.store_vals[replica], axis=0)
+        valid = xor_reduce(self.store_valid[replica], axis=0) & 1
+        return keys, vals, valid
+
+    @property
+    def memory_bytes(self) -> int:
+        return (self.store_keys.size + self.store_vals.size
+                + self.store_valid.size) * 4
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QueryBatch:
+    """One step's worth of queries: ``N = p * queries_per_pe`` lanes."""
+    op: jnp.ndarray    # [N] int32 in {NOP, SEARCH, INSERT, DELETE}
+    key: jnp.ndarray   # [N, Wk] uint32
+    val: jnp.ndarray   # [N, Wv] uint32
+
+    def tree_flatten(self):
+        return (self.op, self.key, self.val), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StepResults:
+    """Per-lane outcome of a step."""
+    found: jnp.ndarray     # [N] bool — key present at snapshot time
+    value: jnp.ndarray     # [N, Wv] uint32 — search/delete: old value
+    ok: jnp.ndarray        # [N] bool — op accepted (insert: had slot; del: found)
+    bucket: jnp.ndarray    # [N] uint32 — debug/routing info
+
+    def tree_flatten(self):
+        return (self.found, self.value, self.ok, self.bucket), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# ---------------------------------------------------------------------------
+# Construction
+# ---------------------------------------------------------------------------
+
+def init_table(cfg: HashTableConfig, rng: jax.Array) -> XorHashTable:
+    R, k, B, S = cfg.replicas, cfg.k, cfg.buckets, cfg.slots
+    return XorHashTable(
+        q_masks=make_h3_params(rng, cfg.key_words, cfg.index_bits),
+        store_keys=jnp.zeros((R, k, B, S, cfg.key_words), jnp.uint32),
+        store_vals=jnp.zeros((R, k, B, S, cfg.val_words), jnp.uint32),
+        store_valid=jnp.zeros((R, k, B, S), jnp.uint32),
+        cfg=cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The step: p parallel queries, data-agnostic latency
+# ---------------------------------------------------------------------------
+
+def _decode_rows(table: XorHashTable, replica_idx: jnp.ndarray,
+                 bucket_idx: jnp.ndarray):
+    """Gather + XOR-reduce the k partial stores for each query.
+
+    replica_idx/bucket_idx: [N].  Returns decoded (keys [N,S,Wk],
+    vals [N,S,Wv], valid [N,S]) plus the raw encoded rows for the
+    non-search XOR tree (enc_keys [N,k,S,Wk], ...).
+    """
+    enc_keys = table.store_keys[replica_idx, :, bucket_idx]    # [N,k,S,Wk]
+    enc_vals = table.store_vals[replica_idx, :, bucket_idx]    # [N,k,S,Wv]
+    enc_valid = table.store_valid[replica_idx, :, bucket_idx]  # [N,k,S]
+    dec_keys = xor_reduce(enc_keys, axis=1)
+    dec_vals = xor_reduce(enc_vals, axis=1)
+    dec_valid = xor_reduce(enc_valid, axis=1) & 1
+    return (dec_keys, dec_vals, dec_valid), (enc_keys, enc_vals, enc_valid)
+
+
+@jax.jit
+def apply_step(table: XorHashTable,
+               batch: QueryBatch) -> Tuple[XorHashTable, StepResults]:
+    """Process one step of ``N = p * queries_per_pe`` queries.
+
+    Entirely branch-free: every lane executes the full search dataflow and the
+    mutation dataflow is masked per-lane (masked lanes scatter with
+    ``mode='drop'`` via an out-of-bounds bucket index).
+    """
+    cfg = table.cfg
+    N = batch.op.shape[0]
+    if N != cfg.queries_per_step:
+        raise ValueError(f"batch width {N} != p*qpp {cfg.queries_per_step}")
+    lane = jnp.arange(N, dtype=jnp.int32)
+    pe = lane % cfg.p                                   # query -> PE (positional)
+    replica = pe if cfg.replicate_reads else jnp.zeros_like(pe)
+    port = jnp.minimum(pe, cfg.k - 1)                   # NSQ port (router ensures pe<k)
+
+    # -- 1. hashing unit -----------------------------------------------------
+    bucket = h3_hash(batch.key, table.q_masks)          # [N] uint32
+
+    # -- 2. partial XOR store reads + XOR reduction trees ---------------------
+    (dec_keys, dec_vals, dec_valid), (enc_keys, enc_vals, enc_valid) = \
+        _decode_rows(table, replica, bucket)
+
+    # -- 3. result resolution: slot compare + first-open-slot -----------------
+    key_eq = jnp.all(dec_keys == batch.key[:, None, :], axis=-1)   # [N,S]
+    occupied = dec_valid.astype(bool)                              # [N,S]
+    match = key_eq & occupied                                      # [N,S]
+    found = jnp.any(match, axis=-1)                                # [N]
+    match_slot = jnp.argmax(match, axis=-1).astype(jnp.int32)      # [N]
+    open_mask = ~occupied
+    has_open = jnp.any(open_mask, axis=-1)
+    if cfg.stagger_slots:
+        # Beyond-paper: the j-th write port claims the (j mod n_open)-th open
+        # slot, so same-step inserts to one bucket from distinct ports land in
+        # distinct slots (conflict-free while the bucket has room).
+        n_open = jnp.sum(open_mask, axis=-1).astype(jnp.int32)        # [N]
+        rank = jnp.where(n_open > 0, port.astype(jnp.int32) % jnp.maximum(n_open, 1), 0)
+        csum = jnp.cumsum(open_mask, axis=-1)                          # [N,S]
+        sel = open_mask & (csum == (rank[:, None] + 1))
+        open_slot = jnp.argmax(sel, axis=-1).astype(jnp.int32)
+    else:
+        open_slot = jnp.argmax(open_mask, axis=-1).astype(jnp.int32)
+
+    value = jnp.take_along_axis(
+        dec_vals, match_slot[:, None, None], axis=1)[:, 0]         # [N,Wv]
+    value = jnp.where(found[:, None], value, jnp.uint32(0))
+
+    # -- 4. mutation dataflow (masked) ----------------------------------------
+    is_ins = batch.op == OP_INSERT
+    is_del = batch.op == OP_DELETE
+    legal_port = pe < cfg.k                        # search-only PEs reject NSQs
+    ins_ok = is_ins & (found | has_open) & legal_port
+    del_ok = is_del & found & legal_port
+    do_write = ins_ok | del_ok
+    slot = jnp.where(is_del | found, match_slot, open_slot)        # [N]
+
+    # New plaintext entry per lane.
+    new_key = jnp.where(is_del[:, None], jnp.uint32(0), batch.key)
+    new_val = jnp.where(is_del[:, None], jnp.uint32(0), batch.val)
+    new_valid = jnp.where(is_del, jnp.uint32(0), jnp.uint32(1))
+
+    # Non-search XOR tree: encode against all stores EXCEPT the own port
+    #   enc = plain ^ (XOR over all k stores) ^ own-store row
+    # (paper: "this excludes the encoded-data in Partial XOR Store (M)").
+    def pick(dec, slot):
+        # dec: [N,S,...] -> [N,...] at slot
+        idx = slot[:, None, None] if dec.ndim == 3 else slot[:, None]
+        r = jnp.take_along_axis(dec, idx, axis=1)
+        return r[:, 0] if dec.ndim == 3 else r[:, 0]
+
+    port_i32 = port.astype(jnp.int32)
+    ek = jnp.take_along_axis(enc_keys, port_i32[:, None, None, None], axis=1)[:, 0]
+    ev = jnp.take_along_axis(enc_vals, port_i32[:, None, None, None], axis=1)[:, 0]
+    eb = jnp.take_along_axis(enc_valid, port_i32[:, None, None], axis=1)[:, 0]
+    own_k = pick(ek, slot)                                         # [N,Wk]
+    own_v = pick(ev, slot)                                         # [N,Wv]
+    own_b = pick(eb, slot)                                         # [N]
+
+    all_k = pick(dec_keys, slot)
+    all_v = pick(dec_vals, slot)
+    all_b = pick(xor_reduce(enc_valid, axis=1), slot)
+
+    enc_new_key = new_key ^ all_k ^ own_k                          # [N,Wk]
+    enc_new_val = new_val ^ all_v ^ own_v
+    enc_new_valid = new_valid ^ all_b ^ own_b
+
+    # -- 5. commit: scatter into the own-port store of EVERY replica ----------
+    # (inter-PE propagation).  Masked lanes get an out-of-range bucket and are
+    # dropped by the scatter.
+    B = cfg.buckets
+    w_bucket = jnp.where(do_write, bucket.astype(jnp.int32), jnp.int32(B))
+    new_store_keys = table.store_keys.at[:, port_i32, w_bucket, slot, :].set(
+        jnp.broadcast_to(enc_new_key, (table.store_keys.shape[0],) + enc_new_key.shape),
+        mode="drop")
+    new_store_vals = table.store_vals.at[:, port_i32, w_bucket, slot, :].set(
+        jnp.broadcast_to(enc_new_val, (table.store_vals.shape[0],) + enc_new_val.shape),
+        mode="drop")
+    new_store_valid = table.store_valid.at[:, port_i32, w_bucket, slot].set(
+        jnp.broadcast_to(enc_new_valid, (table.store_valid.shape[0],) + enc_new_valid.shape),
+        mode="drop")
+
+    ok = jnp.where(is_ins, ins_ok,
+                   jnp.where(is_del, del_ok, batch.op == OP_SEARCH))
+    results = StepResults(found=found, value=value, ok=ok, bucket=bucket)
+    new_table = XorHashTable(table.q_masks, new_store_keys, new_store_vals,
+                             new_store_valid, cfg)
+    return new_table, results
+
+
+def run_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,
+               vals: jnp.ndarray) -> Tuple[XorHashTable, StepResults]:
+    """Scan ``apply_step`` over a [T, N]-shaped query stream."""
+    def body(tab, xs):
+        op, key, val = xs
+        tab, res = apply_step(tab, QueryBatch(op, key, val))
+        return tab, res
+    return jax.lax.scan(body, table, (ops, keys, vals))
+
+
+# ---------------------------------------------------------------------------
+# Host-side router: enforce the NSQ-ratio workload contract (Definition 1)
+# ---------------------------------------------------------------------------
+
+def schedule_queries(op: np.ndarray, key: np.ndarray, val: np.ndarray,
+                     cfg: HashTableConfig, return_placement: bool = False):
+    """Pack an arbitrary query trace into [T, N] step tensors.
+
+    Preserves program order (required by the consistency model) while placing
+    every NSQ on a lane whose PE id is < k.  Lane n of a step belongs to PE
+    ``n % p``; a step therefore accepts at most ``k * queries_per_pe`` NSQs.
+    Greedy packing: walk the trace, open a new step when either the NSQ
+    capacity or the step width is exhausted.  Unused lanes become NOPs.
+    """
+    p, k, qpp = cfg.p, cfg.k, cfg.queries_per_pe
+    N = cfg.queries_per_step
+    key = np.asarray(key, dtype=np.uint32).reshape(len(op), cfg.key_words)
+    val = np.asarray(val, dtype=np.uint32).reshape(len(op), cfg.val_words)
+
+    steps_op, steps_key, steps_val = [], [], []
+    cur_op = np.zeros(N, np.int32)
+    cur_key = np.zeros((N, cfg.key_words), np.uint32)
+    cur_val = np.zeros((N, cfg.val_words), np.uint32)
+    # lanes for NSQs: pe < k; lanes for searches: prefer pe >= k
+    nsq_lanes = [n for n in range(N) if (n % p) < k]
+    srch_lanes = [n for n in range(N) if (n % p) >= k] + nsq_lanes
+    ni = si = 0
+
+    def flush():
+        nonlocal cur_op, cur_key, cur_val, ni, si
+        steps_op.append(cur_op); steps_key.append(cur_key); steps_val.append(cur_val)
+        cur_op = np.zeros(N, np.int32)
+        cur_key = np.zeros((N, cfg.key_words), np.uint32)
+        cur_val = np.zeros((N, cfg.val_words), np.uint32)
+        ni = si = 0
+
+    used = set()
+    placement = []                      # (step, lane) per input query
+    for t in range(len(op)):
+        o = int(op[t])
+        if o in (OP_INSERT, OP_DELETE):
+            while True:
+                if ni < len(nsq_lanes) and nsq_lanes[ni] not in used:
+                    lane = nsq_lanes[ni]; ni += 1; break
+                if ni >= len(nsq_lanes):
+                    used.clear(); flush(); continue
+                ni += 1
+        else:
+            while True:
+                if si < len(srch_lanes) and srch_lanes[si] not in used:
+                    lane = srch_lanes[si]; si += 1; break
+                if si >= len(srch_lanes):
+                    used.clear(); flush(); continue
+                si += 1
+        used.add(lane)
+        placement.append((len(steps_op), lane))
+        cur_op[lane] = o
+        cur_key[lane] = key[t]
+        cur_val[lane] = val[t]
+        if len(used) == N:
+            used.clear(); flush()
+    if cur_op.any():
+        flush()
+    out = (np.stack(steps_op) if steps_op else np.zeros((0, N), np.int32),
+           np.stack(steps_key) if steps_key else np.zeros((0, N, cfg.key_words), np.uint32),
+           np.stack(steps_val) if steps_val else np.zeros((0, N, cfg.val_words), np.uint32))
+    if return_placement:
+        return out + (np.array(placement, np.int32).reshape(-1, 2),)
+    return out

@@ -1,0 +1,98 @@
+"""Class-H3 universal hashing (Carter & Wegman [27], Ramakrishna et al. [28]).
+
+The paper's hashing unit computes, for a key of ``i`` bits and a bucket index of
+``j`` bits, ``h(x) = XOR_m ( x(m) . q(m) )`` where ``q(m)`` is the m-th row of a
+random ``i x j`` Boolean matrix Q.  On the FPGA this is an AND + XOR-parity tree;
+on TPU it is a GF(2) matrix-vector product realised with integer AND + popcount
+parity — pure VPU ops, no MXU involvement.
+
+Keys are represented as little-endian vectors of uint32 *words* so that 32-, 64-
+and 128-bit keys are supported without enabling jax x64: a key of ``W`` words has
+shape ``[..., W]``.  Q is stored column-wise: ``q_masks[j, w]`` is the uint32 mask
+of key word ``w`` contributing to output index bit ``j``.
+
+This module is the pure-jnp reference implementation; ``repro.kernels.h3_hash``
+provides the Pallas TPU kernel with identical semantics.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "make_h3_params",
+    "h3_hash",
+    "parity32",
+    "key_to_words",
+    "words_to_key",
+]
+
+
+def parity32(v: jnp.ndarray) -> jnp.ndarray:
+    """Bitwise XOR-fold parity of each uint32 lane -> {0,1} (uint32)."""
+    v = v ^ (v >> 16)
+    v = v ^ (v >> 8)
+    v = v ^ (v >> 4)
+    v = v ^ (v >> 2)
+    v = v ^ (v >> 1)
+    return v & jnp.uint32(1)
+
+
+def make_h3_params(key: jax.Array, key_words: int, index_bits: int) -> jnp.ndarray:
+    """Draw a random H3 matrix Q.
+
+    Returns ``q_masks`` of shape ``[index_bits, key_words]`` (uint32).  Row ``j``
+    is the mask of key bits whose parity forms bit ``j`` of the bucket index.
+    """
+    bits = jax.random.bits(key, (index_bits, key_words), dtype=jnp.uint32)
+    return bits
+
+
+def h3_hash(keys: jnp.ndarray, q_masks: jnp.ndarray) -> jnp.ndarray:
+    """Hash keys ``[..., W]`` (uint32 words) -> bucket indices ``[...]`` (uint32).
+
+    index bit j = parity( popcount( key & q_masks[j] ) )  over all W words.
+    """
+    if keys.dtype != jnp.uint32:
+        raise TypeError(f"keys must be uint32 words, got {keys.dtype}")
+    index_bits, key_words = q_masks.shape
+    if keys.shape[-1] != key_words:
+        raise ValueError(f"key width {keys.shape[-1]} != q_masks width {key_words}")
+    # [..., 1, W] & [J, W] -> [..., J, W]
+    anded = keys[..., None, :] & q_masks
+    # parity per word, then XOR across words -> [..., J]
+    per_word = parity32(anded)
+    folded = per_word[..., 0]
+    for w in range(1, key_words):
+        folded = folded ^ per_word[..., w]
+    # assemble index: sum_j bit_j << j
+    weights = (jnp.uint32(1) << jnp.arange(index_bits, dtype=jnp.uint32))
+    return jnp.sum(folded * weights, axis=-1, dtype=jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# numpy-side helpers for tests / data generation
+# ---------------------------------------------------------------------------
+
+def key_to_words(keys: np.ndarray, key_words: int) -> np.ndarray:
+    """Split python-int/uint64 keys into little-endian uint32 word vectors."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    out = np.empty(keys.shape + (key_words,), dtype=np.uint32)
+    for w in range(key_words):
+        if w < 2:
+            out[..., w] = ((keys >> np.uint64(32 * w)) & np.uint64(0xFFFFFFFF)).astype(
+                np.uint32
+            )
+        else:  # >64-bit keys must be built by the caller word-wise
+            out[..., w] = 0
+    return out
+
+
+def words_to_key(words: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`key_to_words` for <=64-bit keys."""
+    words = np.asarray(words, dtype=np.uint64)
+    acc = np.zeros(words.shape[:-1], dtype=np.uint64)
+    for w in range(min(words.shape[-1], 2)):
+        acc |= words[..., w] << np.uint64(32 * w)
+    return acc

@@ -1,0 +1,86 @@
+"""Analytic performance models: FPGA cycle model (paper Figs 5-10) and the
+TPU roofline for the hash-table step (DESIGN.md §2).
+
+FPGA model (calibrated to the paper's U250 numbers):
+  * search latency  = t0 cycles (hash + partial-XOR read + resolution);
+    paper: 14 ns at 370 MHz with 16 PEs  ->  t0 ≈ 5 cycles.
+  * insert latency  = t0_w + p cycles (search dataflow + p-cycle inter-PE
+    propagation); paper: 54 ns at 370 MHz -> t0_w ≈ 4, p = 16.
+  * throughput      = p * fclk  (data-agnostic: never stalls).
+  * partitioned baseline throughput = p * fclk / E[max partition load / mean]
+    (serializes within partitions; worst case p-x slower).
+
+TPU model (v5e constants, used by benchmarks/roofline):
+  The hash-table step is integer/VPU + gather dominated -> memory-bound.
+  bytes/step = N * (k*S*entry_bytes [gather reads] + entry_bytes [scatter])
+  steady-state MOPS ≈ N / (bytes_per_step / BW_effective).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.config import HashTableConfig, memory_bytes
+
+__all__ = [
+    "TPUSpec", "V5E", "FPGA_U250", "FpgaSpec",
+    "fpga_latency_ns", "fpga_throughput_mops", "table_step_bytes",
+    "tpu_modeled_mops",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    name: str = "tpu-v5e"
+    peak_bf16_tflops: float = 197.0
+    hbm_gbps: float = 819.0
+    ici_link_gbps: float = 50.0       # per link per direction
+    vmem_bytes: int = 128 * 1024 * 1024  # per-chip VMEM pool
+    vmem_gbps: float = 8000.0          # order-of-magnitude VMEM bandwidth
+    hbm_bytes: int = 16 * 1024**3
+
+
+V5E = TPUSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class FpgaSpec:
+    name: str = "xilinx-u250"
+    fmax_mhz: float = 370.0
+    sram_bytes: int = 45 * 1024 * 1024   # 360 Mb URAM
+    t0_search: int = 5                   # cycles, calibrated to 14ns@370MHz
+    t0_write: int = 4                    # insert = t0_write + p cycles
+
+
+FPGA_U250 = FpgaSpec()
+
+
+def fpga_latency_ns(op: str, p: int, spec: FpgaSpec = FPGA_U250) -> float:
+    cycles = spec.t0_search if op == "search" else spec.t0_write + p
+    return cycles * 1e3 / spec.fmax_mhz
+
+
+def fpga_throughput_mops(p: int, fclk_mhz: float) -> float:
+    """Data-agnostic guarantee: p queries/cycle."""
+    return p * fclk_mhz
+
+
+def table_step_bytes(cfg: HashTableConfig, nsq_fraction: float = 0.5) -> float:
+    """HBM/VMEM bytes moved by one apply_step (per query averages)."""
+    entry_bytes = 4 * cfg.entry_words
+    n = cfg.queries_per_step
+    gather = cfg.k * cfg.slots * entry_bytes          # read k stores x S slots
+    scatter = nsq_fraction * cfg.replicas * entry_bytes
+    return n * (gather + scatter)
+
+
+def tpu_modeled_mops(cfg: HashTableConfig, spec: TPUSpec = V5E,
+                     nsq_fraction: float = 0.5) -> float:
+    """Bandwidth-roofline MOPS for one chip.
+
+    If the table fits in VMEM (the paper's on-chip regime) the gather stream
+    runs at VMEM bandwidth, else HBM bandwidth.
+    """
+    fits_vmem = memory_bytes(cfg) <= spec.vmem_bytes
+    bw = spec.vmem_gbps if fits_vmem else spec.hbm_gbps
+    bytes_per_query = table_step_bytes(cfg, nsq_fraction) / cfg.queries_per_step
+    return bw * 1e9 / bytes_per_query / 1e6

@@ -1,0 +1,122 @@
+"""XOR-based multi-ported memory (paper §IV-B, after LaForest et al. [25]).
+
+An ``n``-write-port memory is built from ``n`` bank rows of plain 1R1W storage.
+Bank row ``j`` is owned by write port ``j``.  The *plaintext* word at address
+``a`` is the XOR of all bank rows at ``a``:
+
+    plain[a] = banks[0][a] ^ banks[1][a] ^ ... ^ banks[n-1][a]
+
+A write of ``D`` at ``a`` through port ``j`` stores the *encoding*
+
+    banks[j][a] = D ^ (XOR of all banks[i][a], i != j)
+
+so that the post-write XOR over all rows recovers ``D``.  Because port ``j``
+only ever writes bank row ``j``, *same-step writes through distinct ports are
+conflict-free by construction* — on TPU this means the vectorized scatters of
+different ports target disjoint arrays and no scatter-collision semantics are
+ever invoked.  That is the property the paper exploits to guarantee p queries
+per cycle in the worst case.
+
+Hazard semantics (documented, matches the paper's relaxed consistency): two
+same-step writes to the *same address* through *different* ports each compute
+their encoding against the pre-step snapshot; after both land, the decoded word
+is ``D1 ^ D2 ^ old`` — garbage.  The paper bounds the number of such erroneous
+queries (Theorem 1); ``repro.core.consistency`` measures it empirically.
+
+Shapes: ``banks[n_ports, depth, width]`` uint32.  All ops are vectorized over a
+batch of addresses; reads are naturally multi-ported (gather).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["XorMemory", "xor_reduce"]
+
+
+def xor_reduce(x: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """XOR-fold along ``axis`` — the paper's XOR reduction tree."""
+    n = x.shape[axis]
+    # An explicit balanced tree keeps lowering identical to the FPGA tree and
+    # avoids a sequential loop in HLO.
+    while n > 1:
+        half = n // 2
+        lo = jax.lax.slice_in_dim(x, 0, half, axis=axis)
+        hi = jax.lax.slice_in_dim(x, half, 2 * half, axis=axis)
+        rest = jax.lax.slice_in_dim(x, 2 * half, n, axis=axis)
+        x = jnp.concatenate([lo ^ hi, rest], axis=axis)
+        n = half + (n - 2 * half)
+    return jax.lax.squeeze(x, (axis,))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class XorMemory:
+    """Functional n-write-port XOR memory over uint32 words."""
+
+    banks: jnp.ndarray  # [n_ports, depth, width] uint32
+
+    # -- pytree plumbing -----------------------------------------------------
+    def tree_flatten(self):
+        return (self.banks,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # -- construction ---------------------------------------------------------
+    @classmethod
+    def create(cls, n_ports: int, depth: int, width: int) -> "XorMemory":
+        return cls(banks=jnp.zeros((n_ports, depth, width), dtype=jnp.uint32))
+
+    @property
+    def n_ports(self) -> int:
+        return self.banks.shape[0]
+
+    # -- operations ------------------------------------------------------------
+    def read(self, addr: jnp.ndarray) -> jnp.ndarray:
+        """Read a batch of addresses ``[B]`` -> plaintext ``[B, width]``."""
+        rows = self.banks[:, addr, :]          # [n, B, width] gather
+        return xor_reduce(rows, axis=0)
+
+    def read_raw(self, addr: jnp.ndarray) -> jnp.ndarray:
+        """Per-bank encoded reads ``[n, B, width]`` (for encode paths)."""
+        return self.banks[:, addr, :]
+
+    def encode(self, port: int | jnp.ndarray, addr: jnp.ndarray,
+               data: jnp.ndarray) -> jnp.ndarray:
+        """Encoding of ``data`` for ``port`` at ``addr`` against current state.
+
+        enc = data ^ XOR_{i != port} banks[i][addr]
+            = data ^ (XOR_all banks[i][addr]) ^ banks[port][addr]
+        """
+        all_x = self.read(addr)                              # [B, width]
+        own = self.banks[port, addr, :]                      # [B, width]
+        return data ^ all_x ^ own
+
+    def write(self, port: int, addr: jnp.ndarray, data: jnp.ndarray) -> "XorMemory":
+        """Write a batch through one port (functional update)."""
+        enc = self.encode(port, addr, data)
+        return XorMemory(self.banks.at[port, addr, :].set(enc))
+
+    def write_encoded(self, port: int, addr: jnp.ndarray,
+                      enc: jnp.ndarray) -> "XorMemory":
+        """Write pre-computed encodings (the inter-PE propagation path)."""
+        return XorMemory(self.banks.at[port, addr, :].set(enc))
+
+    def multi_write(self, addrs: jnp.ndarray, datas: jnp.ndarray) -> "XorMemory":
+        """One write per port in a single step: ``addrs[n]``, ``datas[n, width]``.
+
+        All encodings are computed against the pre-step snapshot (exactly the
+        FPGA timing), then all ports commit.  Distinct addresses are always
+        correct; same-address collisions follow the relaxed-consistency model.
+        """
+        n = self.n_ports
+        all_x = self.read(addrs)                             # [n, width]
+        own = self.banks[jnp.arange(n), addrs, :]            # [n, width]
+        enc = datas ^ all_x ^ own
+        banks = self.banks.at[jnp.arange(n), addrs, :].set(enc)
+        return XorMemory(banks)

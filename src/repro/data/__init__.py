@@ -1,0 +1,7 @@
+"""Data pipeline: deterministic synthetic LM batches (checkpointable iterator
+state) + hash-table-backed streaming dedup."""
+from repro.data.pipeline import DataConfig, SyntheticLM, make_batch
+from repro.data.dedup import StreamDeduper, content_key
+
+__all__ = ["DataConfig", "SyntheticLM", "make_batch", "StreamDeduper",
+           "content_key"]

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's hot paths (validated interpret=True):
+h3_hash (GF(2) hashing) and xor_probe (fused decode+probe).  Use
+repro.kernels.ops for the jit'd, fallback-guarded entry points."""
+from repro.kernels.ops import h3_hash, xor_probe
+
+__all__ = ["h3_hash", "xor_probe"]

@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels, with shape guards and a
+pure-jnp fallback (used when the table exceeds the VMEM-resident regime or on
+backends without Mosaic gather support).
+
+On this container the kernels execute under ``interpret=True`` (CPU); on TPU
+set ``interpret=False`` (the default flips on TPU backends).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.h3_hash import h3_hash_pallas
+from repro.kernels.xor_probe import xor_probe_pallas
+
+# VMEM-resident table budget (one replica must fit alongside query blocks).
+VMEM_TABLE_BUDGET_BYTES = 96 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_n"))
+def h3_hash(keys: jnp.ndarray, q_masks: jnp.ndarray, use_pallas: bool = True,
+            block_n: int = 1024) -> jnp.ndarray:
+    """Hash ``[N, W]`` uint32 keys -> ``[N]`` uint32 bucket indices."""
+    n = keys.shape[0]
+    if not use_pallas or n % min(block_n, n):
+        return _ref.h3_hash_ref(keys.T, q_masks)
+    return h3_hash_pallas(keys.T, q_masks, block_n=min(block_n, n),
+                          interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_q"))
+def xor_probe(bucket: jnp.ndarray, port: jnp.ndarray, qkeys: jnp.ndarray,
+              store_keys: jnp.ndarray, store_vals: jnp.ndarray,
+              store_valid: jnp.ndarray, use_pallas: bool = True,
+              block_q: int = 256):
+    """Fused decode+probe of one replica.  See xor_probe_pallas docstring."""
+    n = bucket.shape[0]
+    table_bytes = 4 * (store_keys.size + store_vals.size + store_valid.size)
+    if (not use_pallas or n % min(block_q, n)
+            or table_bytes > VMEM_TABLE_BUDGET_BYTES):
+        return _ref.xor_probe_ref(bucket, port, qkeys, store_keys, store_vals,
+                                  store_valid)
+    return xor_probe_pallas(bucket, port, qkeys, store_keys, store_vals,
+                            store_valid, block_q=min(block_q, n),
+                            interpret=not _on_tpu())

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``<name>_ref`` mirrors the kernel's semantics exactly; tests sweep shapes
+and dtypes asserting bit-exact equality (all tensors are integer)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hashing import h3_hash as _h3_core
+from repro.core.xor_memory import xor_reduce
+
+
+def h3_hash_ref(keys_t: jnp.ndarray, q_masks: jnp.ndarray) -> jnp.ndarray:
+    """keys_t: [W, N] word-transposed -> [N] uint32 indices."""
+    return _h3_core(keys_t.T, q_masks)
+
+
+def xor_probe_ref(bucket, port, qkeys, store_keys, store_vals, store_valid):
+    """Oracle for xor_probe_pallas — same outputs, same order."""
+    idx = bucket.astype(jnp.int32)
+    rows_k = jnp.take(store_keys, idx, axis=1)   # [k, N, S, Wk]
+    rows_v = jnp.take(store_vals, idx, axis=1)
+    rows_b = jnp.take(store_valid, idx, axis=1)
+    dec_k = xor_reduce(rows_k, axis=0)
+    dec_v = xor_reduce(rows_v, axis=0)
+    dec_b = xor_reduce(rows_b, axis=0)
+
+    key_eq = jnp.all(dec_k == qkeys[:, None, :], axis=-1)
+    occ = (dec_b & 1).astype(bool)
+    match = key_eq & occ
+    found = jnp.any(match, axis=-1)
+    mslot = jnp.argmax(match, axis=-1).astype(jnp.int32)
+    hopen = jnp.any(~occ, axis=-1)
+    oslot = jnp.argmax(~occ, axis=-1).astype(jnp.int32)
+    value = jnp.take_along_axis(dec_v, mslot[:, None, None], axis=1)[:, 0]
+    value = jnp.where(found[:, None], value, jnp.uint32(0))
+
+    p32 = port.astype(jnp.int32)
+    own_k = jnp.take_along_axis(rows_k, p32[None, :, None, None], axis=0)[0]
+    own_v = jnp.take_along_axis(rows_v, p32[None, :, None, None], axis=0)[0]
+    own_b = jnp.take_along_axis(rows_b, p32[None, :, None], axis=0)[0]
+    return (found, mslot, oslot, hopen, value,
+            dec_k ^ own_k, dec_v ^ own_v, dec_b ^ own_b)

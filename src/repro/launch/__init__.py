@@ -1,0 +1,7 @@
+"""Launchers: production meshes, the multi-pod dry-run, train/serve CLIs.
+
+NOTE: importing repro.launch.dryrun sets XLA_FLAGS (512 host devices) — do
+not import it from test or benchmark code; use the CLI."""
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

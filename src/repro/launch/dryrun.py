@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent at production
+scale without hardware: pjit partitioning succeeds, the compiled program's
+memory/cost analysis is captured, and collective bytes are parsed from the
+compiled HLO for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+Each cell writes <out>/<arch>__<shape>__<mesh>.json (incremental; reruns skip
+existing files unless --force).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, canon, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import LONG_OK, SHAPES, cache_specs, cells, input_specs
+from repro.models.lm import init_lm, lm_decode_step, lm_prefill
+from repro.models.model_config import ModelConfig
+from repro.models.partitioning import RULES, partition_ctx, tree_named_shardings
+from repro.optim.adamw import AdamWConfig, adamw_state_specs, init_adamw
+from repro.training.step import make_train_step
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-operand bytes of every collective op (per device)."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        dt, dims, op = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[op] += n * _DTYPE_BYTES[dt]
+        counts[op] += 1
+    return out, counts
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Lower one cell; returns (lowered, meta)."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    rules = RULES[sh["rules"]]
+    # eval_shape the params only (specs are static python, captured by side
+    # effect: the tracer runs the init body abstractly, no allocation).
+    box = {}
+
+    def _init():
+        p, s = init_lm(cfg, jax.random.key(0))
+        box["specs"] = s
+        return p
+
+    params_sds = jax.eval_shape(_init)
+    specs = box["specs"]
+    if sh["kind"] != "train":
+        # serving checkpoints are bf16 (inference never needs fp32 masters)
+        params_sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if jnp.issubdtype(s.dtype, jnp.floating) else s, params_sds)
+    param_sh = tree_named_shardings(params_sds, specs, mesh, rules)
+
+    if sh["kind"] == "train":
+        ocfg = AdamWConfig()
+        opt_sds = jax.eval_shape(lambda: init_adamw(params_sds, ocfg))
+        opt_specs = adamw_state_specs(specs)
+        opt_sh = tree_named_shardings(opt_sds, opt_specs, mesh, rules)
+        batch_sds, batch_logical = input_specs(cfg, shape_name)
+        batch_sh = tree_named_shardings(batch_sds, batch_logical, mesh, rules)
+        step = make_train_step(cfg, ocfg)
+        with partition_ctx(mesh, rules):
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+            ).lower(params_sds, opt_sds, batch_sds)
+        n_inputs = (params_sds, opt_sds, batch_sds)
+    elif sh["kind"] == "prefill":
+        batch_sds, batch_logical = input_specs(cfg, shape_name)
+        batch_sh = tree_named_shardings(batch_sds, batch_logical, mesh, rules)
+        cache_sds, cache_logical = cache_specs(cfg, shape_name)
+        cache_sh = tree_named_shardings(cache_sds, cache_logical, mesh, rules)
+        fn = lambda p, b, c: lm_prefill(p, cfg, b, c)
+        with partition_ctx(mesh, rules):
+            lowered = jax.jit(
+                fn, in_shardings=(param_sh, batch_sh, cache_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(2,),          # cache updated in place
+            ).lower(params_sds, batch_sds, cache_sds)
+        n_inputs = (params_sds, batch_sds, cache_sds)
+    else:  # decode
+        (tok_sds, pos_sds), (tok_log, pos_log) = input_specs(cfg, shape_name)
+        tok_sh = tree_named_shardings(tok_sds, tok_log, mesh, rules)
+        cache_sds, cache_logical = cache_specs(cfg, shape_name)
+        cache_sh = tree_named_shardings(cache_sds, cache_logical, mesh, rules)
+        fn = lambda p, c, t, pos: lm_decode_step(p, cfg, c, t, pos)
+        with partition_ctx(mesh, rules):
+            lowered = jax.jit(
+                fn, in_shardings=(param_sh, cache_sh, tok_sh, None),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),          # cache updated in place
+            ).lower(params_sds, cache_sds, tok_sds, pos_sds)
+        n_inputs = (params_sds, cache_sds, tok_sds)
+    return lowered, cfg
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             force: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_kind}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        print(f"[dryrun] {tag}: exists, skipping")
+        return json.load(open(path))
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": dict(mesh.shape), "status": "error"}
+    try:
+        lowered, cfg = build_cell(arch, shape_name, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        txt = compiled.as_text()
+        cbytes, ccounts = collective_bytes(txt)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_device=ca.get("flops", 0.0),
+            bytes_accessed_per_device=ca.get("bytes accessed", 0.0),
+            memory=dict(
+                argument_bytes=getattr(ma, "argument_size_in_bytes", 0),
+                output_bytes=getattr(ma, "output_size_in_bytes", 0),
+                temp_bytes=getattr(ma, "temp_size_in_bytes", 0),
+                alias_bytes=getattr(ma, "alias_size_in_bytes", 0),
+            ),
+            collective_bytes_per_device=cbytes,
+            collective_counts=ccounts,
+            n_devices=mesh.size,
+            params_b=cfg.param_count(),
+        )
+        print(f"[dryrun] {tag}: OK lower={t_lower:.1f}s compile={t_compile:.1f}s "
+              f"flops/dev={rec['flops_per_device']:.3e} "
+              f"coll={sum(cbytes.values())/1e6:.1f}MB/dev")
+        print(f"  memory_analysis: {ma}")
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {tag}: FAIL {rec['error']}")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", type=str, default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    todo = []
+    if args.all:
+        for arch, shape, skipped in cells():
+            if skipped:
+                continue
+            for mk in meshes:
+                todo.append((arch, shape, mk))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        if args.shape == "long_500k" and canon(args.arch) not in LONG_OK:
+            print(f"[dryrun] {args.arch} x long_500k is SKIPPED by design "
+                  f"(pure full-attention arch; see DESIGN.md)")
+            return
+        for mk in meshes:
+            todo.append((canon(args.arch), args.shape, mk))
+
+    failures = 0
+    for arch, shape, mk in todo:
+        rec = run_cell(arch, shape, mk, args.out, args.force)
+        failures += rec.get("status") != "ok"
+    print(f"[dryrun] done: {len(todo) - failures}/{len(todo)} cells OK")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

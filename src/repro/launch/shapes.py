@@ -1,0 +1,98 @@
+"""Assigned input shapes x architectures: the 40-cell dry-run matrix.
+
+  train_4k     seq=4096    global_batch=256   train_step
+  prefill_32k  seq=32768   global_batch=32    serve prefill
+  decode_32k   seq=32768   global_batch=128   serve_step (1 token, KV=32k)
+  long_500k    seq=524288  global_batch=1     serve_step; SSM/hybrid/local only
+
+``long_500k`` runs for the sub-quadratic-capable archs (gemma3-1b: 5/6 layers
+sliding-window; jamba: SSM-dominant; xlstm: pure SSM) and is SKIPPED for pure
+full-attention archs per the assignment (recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.models.model_config import ModelConfig
+
+__all__ = ["SHAPES", "LONG_OK", "cells", "input_specs", "batch_logical_specs"]
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256, rules="train"),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32, rules="decode"),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128, rules="decode"),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, rules="long"),
+}
+
+# archs with sub-quadratic long-context paths (see DESIGN.md §5)
+LONG_OK = {"gemma3_1b", "jamba_v01_52b", "xlstm_1_3b"}
+
+
+def cells() -> Iterator[Tuple[str, str, bool]]:
+    """Yield every (arch, shape, skipped) cell of the 40-cell matrix."""
+    for arch in ARCHS:
+        for shape in SHAPES:
+            skipped = shape == "long_500k" and arch not in LONG_OK
+            yield arch, shape, skipped
+
+
+def _token_len(cfg: ModelConfig, seq: int) -> int:
+    """VLM prepends patch embeddings; token length keeps total seq fixed."""
+    if cfg.frontend == "vision_patches":
+        return max(seq - cfg.num_patches, 1)
+    return seq
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins + logical spec trees for one cell.
+
+    Returns (sds_tree, logical_tree) where the trees depend on the shape kind:
+      train   -> batch dict
+      prefill -> batch dict (cache comes from init_cache eval_shape)
+      decode  -> (token, pos)
+    """
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    i32 = jnp.int32
+    if kind in ("train", "prefill"):
+        St = _token_len(cfg, S)
+        sds: Dict[str, Any] = {
+            "tokens": jax.ShapeDtypeStruct((B, St), i32),
+        }
+        logical: Dict[str, Any] = {"tokens": ("batch", "seq")}
+        if kind == "train":
+            sds["labels"] = jax.ShapeDtypeStruct((B, St), i32)
+            logical["labels"] = ("batch", "seq")
+        if cfg.frontend == "audio_frames":
+            sds["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            logical["frames"] = ("batch", "seq", "act_embed")
+        elif cfg.frontend == "vision_patches":
+            sds["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+            logical["patches"] = ("batch", None, "act_embed")
+        return sds, logical
+    # decode: one new token against a cache of length S
+    sds = (jax.ShapeDtypeStruct((B, 1), i32),
+           jax.ShapeDtypeStruct((), i32))
+    logical = (("batch", None), ())
+    return sds, logical
+
+
+def cache_specs(cfg: ModelConfig, shape_name: str):
+    """eval_shape'd decode cache + logical tree for decode/prefill cells."""
+    from repro.models.lm import init_cache
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    s_max = S if sh["kind"] != "train" else 0
+    cache_sds = jax.eval_shape(
+        lambda: init_cache(cfg, B, s_max, jnp.bfloat16)[0])
+    # the logical tree carries no shapes — a tiny real call provides it
+    _, cache_logical = init_cache(cfg, 1, 1, jnp.bfloat16)
+    return cache_sds, cache_logical

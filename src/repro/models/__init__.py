@@ -1,0 +1,11 @@
+"""LM substrate: composable pure-JAX modules with logical sharding specs.
+
+Public surface: ModelConfig + the lm.py API (init_lm / lm_loss / lm_prefill /
+lm_decode_step / init_cache); layers are importable individually for tests
+and custom assemblies."""
+from repro.models.model_config import ModelConfig
+from repro.models.lm import (init_cache, init_lm, lm_decode_step, lm_logits,
+                             lm_loss, lm_prefill)
+
+__all__ = ["ModelConfig", "init_lm", "lm_logits", "lm_loss", "lm_prefill",
+           "lm_decode_step", "init_cache"]

@@ -1,0 +1,301 @@
+"""Attention: GQA (sliding-window / global / bidirectional / cross) and MLA.
+
+Two execution paths per variant:
+  * ``*_train``  — full-sequence (training and prefill; prefill also returns
+    the KV cache to seed decode).
+  * ``*_decode`` — single new token against a KV cache of length ``S_max``
+    (MLA decodes in latent space with absorbed projections — the cache stores
+    the compressed c_kv + shared RoPE key only).
+
+The sliding window is a *traced* scalar so local and global layers share one
+scan body (window >= seq ⇒ global).  Masks are additive fp32.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flash import chunked_attention, repeat_kv
+from repro.models.layers import _normal, apply_rope, cdtype, pdtype, rms_head
+from repro.models.model_config import ModelConfig
+from repro.models.partitioning import constrain
+
+FLASH_MIN_SEQ = 2048   # full-seq paths longer than this use chunked attention
+
+Params = Dict[str, Any]
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(cfg: ModelConfig, key: jax.Array, cross: bool = False):
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    sc = 1.0 / (cfg.d_model ** 0.5)
+    p = {
+        "wq": _normal(k1, (cfg.d_model, cfg.n_heads, hd), sc, pdtype(cfg)),
+        "wk": _normal(k2, (cfg.d_model, cfg.n_kv_heads, hd), sc, pdtype(cfg)),
+        "wv": _normal(k3, (cfg.d_model, cfg.n_kv_heads, hd), sc, pdtype(cfg)),
+        "wo": _normal(k4, (cfg.n_heads, hd, cfg.d_model),
+                      1.0 / ((cfg.n_heads * hd) ** 0.5), pdtype(cfg)),
+    }
+    s = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), pdtype(cfg))
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), pdtype(cfg))
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), pdtype(cfg))
+        p["bo"] = jnp.zeros((cfg.d_model,), pdtype(cfg))
+        s.update({"bq": ("heads", "head_dim"), "bk": ("kv_heads", "head_dim"),
+                  "bv": ("kv_heads", "head_dim"), "bo": ("norm",)})
+    return p, s
+
+
+def _qkv(p: Params, x: jnp.ndarray, cfg: ModelConfig, kv_x: jnp.ndarray):
+    dt = cdtype(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(dt))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def _mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         mask: Optional[jnp.ndarray], cfg: ModelConfig) -> jnp.ndarray:
+    """q [B,Sq,Hq,D], k/v [B,Sk,Hkv,D] -> [B,Sq,Hq,D]; GQA via head groups."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    q = q.reshape(B, Sq, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    if mask is not None:
+        scores = scores + mask[:, None, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def _causal_window_mask(Sq: int, Sk: int, window, offset) -> jnp.ndarray:
+    """Additive [1,Sq,Sk] mask: causal with (traced) sliding window.
+
+    ``offset`` = absolute position of query 0 minus key 0 (0 for train)."""
+    qpos = jnp.arange(Sq)[:, None] + offset
+    kpos = jnp.arange(Sk)[None, :]
+    d = qpos - kpos
+    ok = (d >= 0) & (d < window)
+    return jnp.where(ok, 0.0, NEG_INF)[None].astype(jnp.float32)
+
+
+def gqa_train(p: Params, x: jnp.ndarray, positions: jnp.ndarray, window,
+              cfg: ModelConfig, causal: bool = True,
+              kv_x: Optional[jnp.ndarray] = None,
+              return_kv: bool = False):
+    """Full-sequence attention.  kv_x != None ⇒ cross-attention (no mask)."""
+    cross = kv_x is not None
+    q, k, v = _qkv(p, x, cfg, kv_x if cross else x)
+    if cfg.qk_norm:
+        q, k = rms_head(q, cfg.norm_eps), rms_head(k, cfg.norm_eps)
+    if not cross:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "act_heads", "head_dim"))
+    if k.shape[1] >= FLASH_MIN_SEQ:
+        kf = repeat_kv(k, cfg.n_heads)
+        vf = repeat_kv(v, cfg.n_heads)
+        kf = constrain(kf, ("batch", "kv_seq", "act_heads", "head_dim"))
+        out = chunked_attention(q, kf, vf,
+                                window if (causal and not cross) else k.shape[1] + 1,
+                                causal=causal and not cross, remat=cfg.remat)
+    else:
+        if cross or not causal:
+            mask = None
+        else:
+            mask = _causal_window_mask(x.shape[1], k.shape[1], window, 0)
+        out = _mha(q, k, v, mask, cfg)
+    out = constrain(out, ("batch", "seq", "act_heads", "head_dim"))
+    dt = cdtype(cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    if "bo" in p:
+        y = y + p["bo"].astype(dt)
+    return (y, (k, v)) if return_kv else y
+
+
+def gqa_decode(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               pos: jnp.ndarray, window, cfg: ModelConfig,
+               cross: bool = False):
+    """One-token decode: x [B,1,d], cache {"k","v": [B,Smax,Hkv,D]}."""
+    dt = cdtype(cfg)
+    if cross:  # cross-attn: static encoder KV, no cache update
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+        if "bq" in p:
+            q = q + p["bq"].astype(dt)
+        out = _mha(q, cache["xk"], cache["xv"], None, cfg)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+        return (y + p["bo"].astype(dt)) if "bo" in p else y, cache
+
+    q, k_new, v_new = _qkv(p, x, cfg, x)
+    if cfg.qk_norm:
+        q, k_new = rms_head(q, cfg.norm_eps), rms_head(k_new, cfg.norm_eps)
+    posv = jnp.full((x.shape[0], 1), pos)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k_new = apply_rope(k_new, posv, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    Smax = k.shape[1]
+    kpos = jnp.arange(Smax)[None, :]
+    ok = (kpos <= pos) & (kpos > pos - window)
+    mask = jnp.where(ok, 0.0, NEG_INF)[:, None, :].astype(jnp.float32)  # [1,1,Smax]
+    out = _mha(q, k, v, mask, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    if "bo" in p:
+        y = y + p["bo"].astype(dt)
+    return y, {"k": k, "v": v}
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, s_max: int, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (batch, s_max, cfg.n_kv_heads, hd)
+    spec = ("batch", "kv_seq", "kv_heads", "head_dim")
+    return ({"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)},
+            {"k": spec, "v": spec})
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3): low-rank q/kv with decoupled RoPE; latent-space decode
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg: ModelConfig, key: jax.Array):
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    H, d, r_kv, r_q = cfg.n_heads, cfg.d_model, cfg.kv_lora_rank, cfg.q_lora_rank
+    ks = jax.random.split(key, 8)
+    sc = 1.0 / (d ** 0.5)
+    p: Params = {}
+    s: Params = {}
+    if r_q:
+        p["wq_a"] = _normal(ks[0], (d, r_q), sc, pdtype(cfg))
+        p["q_norm"] = jnp.ones((r_q,), pdtype(cfg))
+        p["wq_b"] = _normal(ks[1], (r_q, H, dn + dr), 1.0 / (r_q ** 0.5), pdtype(cfg))
+        s.update({"wq_a": ("embed", "q_lora"), "q_norm": ("norm",),
+                  "wq_b": ("q_lora", "heads", "qk_dim")})
+    else:
+        p["wq"] = _normal(ks[0], (d, H, dn + dr), sc, pdtype(cfg))
+        s["wq"] = ("embed", "heads", "qk_dim")
+    p["wkv_a"] = _normal(ks[2], (d, r_kv + dr), sc, pdtype(cfg))
+    p["kv_norm"] = jnp.ones((r_kv,), pdtype(cfg))
+    p["wk_b"] = _normal(ks[3], (r_kv, H, dn), 1.0 / (r_kv ** 0.5), pdtype(cfg))
+    p["wv_b"] = _normal(ks[4], (r_kv, H, dv), 1.0 / (r_kv ** 0.5), pdtype(cfg))
+    p["wo"] = _normal(ks[5], (H, dv, d), 1.0 / ((H * dv) ** 0.5), pdtype(cfg))
+    s.update({"wkv_a": ("embed", "kv_lora"), "kv_norm": ("norm",),
+              "wk_b": ("kv_lora", "heads", "qk_dim"),
+              "wv_b": ("kv_lora", "heads", "head_dim"),
+              "wo": ("heads", "head_dim", "embed")})
+    return p, s
+
+
+def _rms(x, eps):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)).astype(x.dtype)
+
+
+def _mla_q(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if "wq_a" in p:
+        ql = jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt))
+        ql = _rms(ql, cfg.norm_eps) * p["q_norm"].astype(dt)
+        q = jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    return q[..., :dn], q[..., dn:]           # nope, rope parts
+
+
+def mla_train(p: Params, x: jnp.ndarray, positions: jnp.ndarray, window,
+              cfg: ModelConfig, return_kv: bool = False):
+    dt = cdtype(cfg)
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    B, S, _ = x.shape
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    c_kv, k_rope = kv[..., :r_kv], kv[..., r_kv:]
+    c_kv = _rms(c_kv, cfg.norm_eps) * p["kv_norm"].astype(dt)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,dr]
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["wk_b"].astype(dt))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["wv_b"].astype(dt))
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (B, S, cfg.n_heads, dr))], axis=-1)
+    q = constrain(q, ("batch", "seq", "act_heads", None))
+    k = constrain(k, ("batch", "kv_seq", "act_heads", None))
+    if S >= FLASH_MIN_SEQ:
+        out = chunked_attention(q, k, v, window, remat=cfg.remat)
+    else:
+        mask = _causal_window_mask(S, S, window, 0)
+        scores = jnp.einsum("bqhk,bshk->bhqs", q, k).astype(jnp.float32)
+        scores = scores / jnp.sqrt(jnp.asarray(dn + dr, jnp.float32))
+        scores = scores + mask[:, None, :, :]
+        w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqs,bshk->bqhk", w, v)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+    if return_kv:
+        return y, (c_kv, k_rope[:, :, 0, :])
+    return y
+
+
+def mla_decode(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+               pos: jnp.ndarray, window, cfg: ModelConfig):
+    """Latent decode: cache {"ckv": [B,Smax,r], "kr": [B,Smax,dr]}.
+
+    Absorbed attention:  score = q_nope·W_uk·c  +  q_rope·k_rope;
+    out = (attn · c) · W_uv — per-token FLOPs scale with r_kv, not H*D*S.
+    """
+    dt = cdtype(cfg)
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    B = x.shape[0]
+    q_nope, q_rope = _mla_q(p, x, cfg)                 # [B,1,H,dn],[B,1,H,dr]
+    posv = jnp.full((B, 1), pos)
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt))
+    c_new, kr_new = kv[..., :r_kv], kv[..., r_kv:]
+    c_new = _rms(c_new, cfg.norm_eps) * p["kv_norm"].astype(dt)
+    kr_new = apply_rope(kr_new[:, :, None, :], posv, cfg.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], c_new.astype(cache["ckv"].dtype), pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new.astype(cache["kr"].dtype), pos, axis=1)
+
+    # absorb W_uk into q_nope:  [B,1,H,dn] x [r,H,dn] -> [B,1,H,r]
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, p["wk_b"].astype(dt))
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv)
+    s_rope = jnp.einsum("bqhk,bsk->bhqs", q_rope, kr)
+    scores = (s_lat + s_rope).astype(jnp.float32) / jnp.sqrt(
+        jnp.asarray(dn + dr, jnp.float32))
+    Smax = ckv.shape[1]
+    kposm = jnp.arange(Smax)[None, :]
+    ok = (kposm <= pos) & (kposm > pos - window)
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    w = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", w, ckv)     # [B,1,H,r]
+    out = jnp.einsum("bqhr,rhk->bqhk", out_lat, p["wv_b"].astype(dt))
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+    return y, {"ckv": ckv, "kr": kr}
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, s_max: int, dtype):
+    return ({"ckv": jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+             "kr": jnp.zeros((batch, s_max, cfg.qk_rope_head_dim), dtype)},
+            {"ckv": ("batch", "kv_seq", "kv_lora"),
+             "kr": ("batch", "kv_seq", "qk_dim")})

@@ -1,0 +1,210 @@
+"""Transformer/SSM block variants and their decode-cache plumbing.
+
+A block *structure* is ``(kind, is_moe)`` with kind in {attn, mamba, mlstm,
+slstm}.  attn/mamba blocks carry an FF (dense or MoE); mlstm/slstm blocks are
+self-contained (their FF lives inside the block per the xLSTM design).
+Sliding-window locality is NOT part of the structure — the window arrives as a
+(possibly traced) scan input so local/global layers share one scan body.
+
+Whisper's decoder blocks add cross-attention (``cross=True``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models.layers import apply_mlp, apply_norm, init_mlp, init_norm
+from repro.models.model_config import ModelConfig
+from repro.models.moe import apply_moe, init_moe
+
+Params = Dict[str, Any]
+Struct = Tuple[str, bool]   # (kind, is_moe)
+
+
+def init_block(cfg: ModelConfig, key: jax.Array, struct: Struct,
+               cross: bool = False):
+    kind, is_moe = struct
+    ks = jax.random.split(key, 6)
+    p: Params = {}
+    s: Params = {}
+    p["norm1"], s["norm1"] = init_norm(cfg, cfg.d_model)
+    if kind == "attn":
+        if cfg.use_mla:
+            p["attn"], s["attn"] = attn.init_mla(cfg, ks[0])
+        else:
+            p["attn"], s["attn"] = attn.init_gqa(cfg, ks[0])
+        if cross:
+            p["xnorm"], s["xnorm"] = init_norm(cfg, cfg.d_model)
+            p["xattn"], s["xattn"] = attn.init_gqa(cfg, ks[1], cross=True)
+    elif kind == "mamba":
+        p["mixer"], s["mixer"] = ssm.init_mamba(cfg, ks[0])
+    elif kind == "mlstm":
+        p["mixer"], s["mixer"] = ssm.init_mlstm(cfg, ks[0])
+    elif kind == "slstm":
+        p["mixer"], s["mixer"] = ssm.init_slstm(cfg, ks[0])
+    else:
+        raise ValueError(kind)
+    if kind in ("attn", "mamba") and (is_moe or cfg.d_ff):
+        p["norm2"], s["norm2"] = init_norm(cfg, cfg.d_model)
+        if is_moe:
+            p["moe"], s["moe"] = init_moe(cfg, ks[2])
+        else:
+            p["ff"], s["ff"] = init_mlp(cfg, ks[2])
+    return p, s
+
+
+def block_train(p: Params, x: jnp.ndarray, positions: jnp.ndarray, window,
+                cfg: ModelConfig, struct: Struct, causal: bool = True,
+                enc_out: Optional[jnp.ndarray] = None):
+    """Full-sequence block.  Returns (x, aux_losses_dict)."""
+    kind, is_moe = struct
+    aux: Dict[str, jnp.ndarray] = {}
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        if cfg.use_mla:
+            y = attn.mla_train(p["attn"], h, positions, window, cfg)
+        else:
+            y = attn.gqa_train(p["attn"], h, positions, window, cfg,
+                               causal=causal)
+    elif kind == "mamba":
+        y = ssm.mamba_train(p["mixer"], h, cfg)
+    elif kind == "mlstm":
+        y = ssm.mlstm_train(p["mixer"], h, cfg,
+                            chunkwise=cfg.mlstm_chunkwise)
+    else:
+        y = ssm.slstm_train(p["mixer"], h, cfg)
+    x = x + y
+    if "xattn" in p:
+        h = apply_norm(p["xnorm"], x, cfg)
+        x = x + attn.gqa_train(p["xattn"], h, positions, window, cfg,
+                               kv_x=enc_out)
+    if "norm2" in p:
+        h = apply_norm(p["norm2"], x, cfg)
+        if is_moe:
+            y, aux = apply_moe(p["moe"], h, cfg)
+        else:
+            y = apply_mlp(p["ff"], h, cfg)
+        x = x + y
+    return x, aux
+
+
+def block_decode(p: Params, x: jnp.ndarray, cache: Dict[str, jnp.ndarray],
+                 pos, window, cfg: ModelConfig, struct: Struct):
+    """One-token decode.  cache is this block's state entry (updated)."""
+    kind, is_moe = struct
+    new_cache = dict(cache)
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        if cfg.use_mla:
+            y, upd = attn.mla_decode(p["attn"], h, cache, pos, window, cfg)
+        else:
+            y, upd = attn.gqa_decode(p["attn"], h,
+                                     {"k": cache["k"], "v": cache["v"]},
+                                     pos, window, cfg)
+        new_cache.update(upd)
+    elif kind == "mamba":
+        y, upd = ssm.mamba_decode(p["mixer"], h, cache, cfg)
+        new_cache.update(upd)
+    elif kind == "mlstm":
+        y, upd = ssm.mlstm_decode(p["mixer"], h, cache, cfg)
+        new_cache.update(upd)
+    else:
+        y, upd = ssm.slstm_decode(p["mixer"], h, cache, cfg)
+        new_cache.update(upd)
+    x = x + y
+    if "xattn" in p:
+        h = apply_norm(p["xnorm"], x, cfg)
+        y, _ = attn.gqa_decode(p["xattn"], h, cache, pos, window, cfg,
+                               cross=True)
+        x = x + y
+    if "norm2" in p:
+        h = apply_norm(p["norm2"], x, cfg)
+        if is_moe:
+            y, _ = apply_moe(p["moe"], h, cfg)
+        else:
+            y = apply_mlp(p["ff"], h, cfg)
+        x = x + y
+    return x, new_cache
+
+
+def block_prefill(p: Params, x: jnp.ndarray, positions: jnp.ndarray, window,
+                  cfg: ModelConfig, struct: Struct, cache: Dict[str, jnp.ndarray],
+                  enc_out: Optional[jnp.ndarray] = None):
+    """Full-sequence forward that also fills this block's decode cache."""
+    kind, is_moe = struct
+    new_cache = dict(cache)
+    h = apply_norm(p["norm1"], x, cfg)
+    if kind == "attn":
+        if cfg.use_mla:
+            y, (ckv, kr) = attn.mla_train(p["attn"], h, positions, window, cfg,
+                                          return_kv=True)
+            new_cache["ckv"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1)
+            new_cache["kr"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], kr.astype(cache["kr"].dtype), 0, axis=1)
+        else:
+            y, (k, v) = attn.gqa_train(p["attn"], h, positions, window, cfg,
+                                       return_kv=True)
+            new_cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            new_cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+    elif kind == "mamba":
+        y, st = ssm.mamba_train(p["mixer"], h, cfg, return_state=True)
+        new_cache.update({k2: v.astype(cache[k2].dtype) for k2, v in st.items()})
+    elif kind == "mlstm":
+        y, st = ssm.mlstm_train(p["mixer"], h, cfg, return_state=True)
+        new_cache.update(st)
+    else:
+        y, st = ssm.slstm_train(p["mixer"], h, cfg, return_state=True)
+        new_cache.update(st)
+    x = x + y
+    if "xattn" in p:
+        hx = apply_norm(p["xnorm"], x, cfg)
+        x = x + attn.gqa_train(p["xattn"], hx, positions, window, cfg,
+                               kv_x=enc_out)
+        xp = p["xattn"]
+        dt = x.dtype
+        new_cache["xk"] = jnp.einsum(
+            "bsd,dhk->bshk", enc_out, xp["wk"].astype(dt)).astype(cache["xk"].dtype)
+        new_cache["xv"] = jnp.einsum(
+            "bsd,dhk->bshk", enc_out, xp["wv"].astype(dt)).astype(cache["xv"].dtype)
+        if "bk" in xp:
+            new_cache["xk"] = new_cache["xk"] + xp["bk"].astype(new_cache["xk"].dtype)
+            new_cache["xv"] = new_cache["xv"] + xp["bv"].astype(new_cache["xv"].dtype)
+    if "norm2" in p:
+        h = apply_norm(p["norm2"], x, cfg)
+        if is_moe:
+            y, _ = apply_moe(p["moe"], h, cfg)
+        else:
+            y = apply_mlp(p["ff"], h, cfg)
+        x = x + y
+    return x, new_cache
+
+
+def init_block_cache(cfg: ModelConfig, struct: Struct, batch: int, s_max: int,
+                     dtype, cross: bool = False, enc_seq: int = 0):
+    """Decode-state entry for one block (+ static cross KV when cross)."""
+    kind, _ = struct
+    if kind == "attn":
+        if cfg.use_mla:
+            c, s = attn.init_mla_cache(cfg, batch, s_max, dtype)
+        else:
+            c, s = attn.init_gqa_cache(cfg, batch, s_max, dtype)
+        if cross:
+            hd = cfg.resolved_head_dim
+            shape = (batch, enc_seq, cfg.n_kv_heads, hd)
+            c["xk"] = jnp.zeros(shape, dtype)
+            c["xv"] = jnp.zeros(shape, dtype)
+            s["xk"] = ("batch", "kv_seq", "kv_heads", "head_dim")
+            s["xv"] = ("batch", "kv_seq", "kv_heads", "head_dim")
+        return c, s
+    if kind == "mamba":
+        return ssm.init_mamba_state(cfg, batch, dtype)
+    if kind == "mlstm":
+        return ssm.init_mlstm_state(cfg, batch, dtype)
+    return ssm.init_slstm_state(cfg, batch, dtype)

@@ -1,0 +1,75 @@
+"""Chunked-softmax (flash-style) attention in pure JAX.
+
+Scans over KV chunks with running (max, denominator, accumulator) so the
+[Sq, Sk] score matrix is never materialized — per-step footprint is
+[B, H, Sq, chunk].  The chunk body is rematted; backward recomputes chunk
+scores (the classic flash trade).  KV heads are pre-repeated to full H so the
+head axis shards over 'model' even when n_kv_heads is tiny (GQA kv=1..8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def repeat_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """[B,S,Hkv,D] -> [B,S,H,D] by group broadcast."""
+    B, S, Hkv, D = k.shape
+    G = n_heads // Hkv
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, Hkv, G, D)) \
+        .reshape(B, S, n_heads, D)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      window, q_offset: int = 0, chunk: int = 512,
+                      causal: bool = True, remat: bool = True) -> jnp.ndarray:
+    """q [B,Sq,H,D], k/v [B,Sk,H,D] (full heads) -> [B,Sq,H,D].
+
+    ``window`` may be traced (sliding window; >= Sk ⇒ global).  ``q_offset``
+    is the absolute position of q[0] relative to k[0] (0 for self-attn train).
+    """
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    if Sk % chunk:                    # ragged tail: pad KV, mask via kpos >= Sk
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    NC = k.shape[1] // chunk
+    scale = 1.0 / (D ** 0.5)
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)  # [B,H,Sq,D]
+    kc = k.reshape(B, NC, chunk, H, D).transpose(1, 0, 3, 2, 4)  # [NC,B,H,c,D]
+    vc = v.reshape(B, NC, chunk, H, Dv).transpose(1, 0, 3, 2, 4)
+    qpos = jnp.arange(Sq) + q_offset
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kci, vci, ci = inp
+        s = jnp.einsum("bhqd,bhcd->bhqc", qf, kci.astype(jnp.float32))
+        kpos = ci * chunk + jnp.arange(chunk)
+        d = qpos[:, None] - kpos[None, :]
+        ok = (d < window) & (kpos < Sk)[None, :]
+        if causal:
+            ok = ok & (d >= 0)
+        s = jnp.where(ok[None, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.where(ok[None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqc,bhcd->bhqd", p, vci.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    carry = (jnp.full((B, H, Sq), NEG, jnp.float32),
+             jnp.zeros((B, H, Sq), jnp.float32),
+             jnp.zeros((B, H, Sq, Dv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body_fn, carry, (kc, vc, jnp.arange(NC)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)

@@ -1,0 +1,168 @@
+"""Basic layers: norms, embeddings, gated MLP, RoPE.
+
+Convention: every ``init_*`` returns ``(params, specs)`` — two pytrees of
+identical structure; ``specs`` leaves are tuples of logical axis names used by
+``repro.models.partitioning`` to derive shardings.  ``apply_*`` functions are
+pure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: int):
+    if cfg.norm_type == "layernorm":
+        p = {"scale": jnp.ones((dim,), pdtype(cfg)),
+             "bias": jnp.zeros((dim,), pdtype(cfg))}
+        s = {"scale": ("norm",), "bias": ("norm",)}
+    else:
+        p = {"scale": jnp.ones((dim,), pdtype(cfg))}
+        s = {"scale": ("norm",)}
+    return p, s
+
+
+def apply_norm(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head(x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    """Scale-free per-head RMS (gemma3 qk-norm)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, key: jax.Array):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": _normal(k1, (cfg.vocab_size, cfg.d_model),
+                              1.0 / (cfg.d_model ** 0.5), pdtype(cfg))}
+    s = {"embedding": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _normal(k2, (cfg.d_model, cfg.vocab_size),
+                               1.0 / (cfg.d_model ** 0.5), pdtype(cfg))
+        s["unembed"] = ("embed", "vocab")
+    return p, s
+
+
+def apply_embed(p: Params, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = jnp.take(p["embedding"].astype(cdtype(cfg)), tokens, axis=0)
+    return x * jnp.asarray(cfg.d_model ** 0.5, cdtype(cfg)) \
+        if cfg.name.startswith("gemma") else x
+
+
+def apply_unembed(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    w = (p["embedding"].T if cfg.tie_embeddings else p["unembed"]).astype(cdtype(cfg))
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    if cfg.logit_softcap:
+        c = jnp.asarray(cfg.logit_softcap, logits.dtype)
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU) and plain MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key: jax.Array, d_ff: Optional[int] = None,
+             gated: bool = True, ff_axis: str = "ff"):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    sc_in = 1.0 / (cfg.d_model ** 0.5)
+    sc_out = 1.0 / (d_ff ** 0.5)
+    if gated:
+        p = {"wi": _normal(k1, (cfg.d_model, d_ff), sc_in, pdtype(cfg)),
+             "wg": _normal(k2, (cfg.d_model, d_ff), sc_in, pdtype(cfg)),
+             "wo": _normal(k3, (d_ff, cfg.d_model), sc_out, pdtype(cfg))}
+        s = {"wi": ("embed", ff_axis), "wg": ("embed", ff_axis),
+             "wo": (ff_axis, "embed")}
+    else:
+        p = {"wi": _normal(k1, (cfg.d_model, d_ff), sc_in, pdtype(cfg)),
+             "wo": _normal(k3, (d_ff, cfg.d_model), sc_out, pdtype(cfg))}
+        s = {"wi": ("embed", ff_axis), "wo": (ff_axis, "embed")}
+    if cfg.use_bias:
+        p["bi"] = jnp.zeros((d_ff,), pdtype(cfg)); s["bi"] = (ff_axis,)
+        p["bo"] = jnp.zeros((cfg.d_model,), pdtype(cfg)); s["bo"] = ("norm",)
+    return p, s
+
+
+def _act(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "gelu_tanh":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = cdtype(cfg)
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    if "bi" in p:
+        h = h + p["bi"].astype(dt)
+    if "wg" in p:
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+        h = _act(g, cfg.act) * h
+    else:
+        h = _act(h, cfg.act)
+    y = jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+    if "bo" in p:
+        y = y + p["bo"].astype(dt)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs   # [..., S, D/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

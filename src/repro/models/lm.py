@@ -1,0 +1,201 @@
+"""Top-level language-model API used by the launcher, dry-run, and tests.
+
+  init_lm(cfg, rng)                          -> (params, specs)
+  lm_loss(params, cfg, batch)                -> (loss, metrics)  [train]
+  lm_prefill(params, cfg, batch, s_max)      -> (logits_last, cache)
+  lm_decode_step(params, cfg, cache, token, pos) -> (logits, cache)
+  init_cache(cfg, batch, s_max, dtype)       -> (cache, specs)
+
+Batch dict keys: "tokens" [B,S] int32, "labels" [B,S] int32 (-1 = masked);
+modality stubs: "frames" [B,T,d] (audio enc-dec), "patches" [B,P,d] (vlm —
+prepended to the token embeddings; label layout must account for the prefix).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (apply_embed, apply_norm, apply_unembed,
+                                 cdtype, init_embed, init_norm)
+from repro.models.model_config import ModelConfig
+from repro.models.partitioning import constrain
+from repro.models.stack import (StackPlan, init_stack, init_stack_cache,
+                                make_plan, stack_decode, stack_prefill,
+                                stack_train)
+from repro.models import blocks
+
+Params = Dict[str, Any]
+
+
+def encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, n_layers=cfg.n_encoder_layers, block_pattern=("attn",),
+        attn_pattern=("global",), moe_period=0, first_dense_layers=0,
+        is_encoder_decoder=False, use_mla=False, mtp_depth=0)
+
+
+def init_lm(cfg: ModelConfig, rng: jax.Array):
+    ks = jax.random.split(rng, 6)
+    plan = make_plan(cfg)
+    params: Params = {}
+    specs: Params = {}
+    params["embed"], specs["embed"] = init_embed(cfg, ks[0])
+    params["stack"], specs["stack"] = init_stack(
+        cfg, ks[1], plan, cross=cfg.is_encoder_decoder)
+    params["final_norm"], specs["final_norm"] = init_norm(cfg, cfg.d_model)
+    if cfg.is_encoder_decoder:
+        ecfg = encoder_cfg(cfg)
+        eplan = make_plan(ecfg)
+        params["encoder"], specs["encoder"] = init_stack(ecfg, ks[2], eplan)
+        params["enc_norm"], specs["enc_norm"] = init_norm(ecfg, ecfg.d_model)
+    if cfg.mtp_depth:
+        params["mtp_norm_h"], specs["mtp_norm_h"] = init_norm(cfg, cfg.d_model)
+        params["mtp_norm_e"], specs["mtp_norm_e"] = init_norm(cfg, cfg.d_model)
+        w = jax.random.normal(ks[3], (2 * cfg.d_model, cfg.d_model)) \
+            / (2 * cfg.d_model) ** 0.5
+        params["mtp_proj"] = w.astype(jnp.dtype(cfg.param_dtype))
+        specs["mtp_proj"] = ("embed", "embed_out")
+        struct = (("attn", False))
+        params["mtp_block"], specs["mtp_block"] = blocks.init_block(
+            cfg, ks[4], ("attn", False))
+        params["mtp_final_norm"], specs["mtp_final_norm"] = init_norm(
+            cfg, cfg.d_model)
+    return params, specs
+
+
+def _encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray):
+    ecfg = encoder_cfg(cfg)
+    eplan = make_plan(ecfg)
+    pos = jnp.arange(frames.shape[1])[None, :]
+    x, _ = stack_train(params["encoder"], frames.astype(cdtype(cfg)), pos,
+                       ecfg, eplan, causal=False)
+    return apply_norm(params["enc_norm"], x, ecfg)
+
+
+def _embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    """Token embeddings (+ VLM patch prefix).  Returns (x, positions)."""
+    x = apply_embed(params["embed"], batch["tokens"], cfg)
+    if cfg.frontend == "vision_patches" and "patches" in batch:
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+    positions = jnp.arange(x.shape[1])[None, :]
+    return x, positions
+
+
+def lm_logits(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    """Training/eval forward -> (logits [B,S',V], aux, hidden)."""
+    plan = make_plan(cfg)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"])
+    x, positions = _embed_inputs(params, cfg, batch)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    h, aux = stack_train(params["stack"], x, positions, cfg, plan,
+                         causal=True, enc_out=enc_out)
+    hn = apply_norm(params["final_norm"], h, cfg)
+    logits = apply_unembed(params["embed"], hn, cfg)
+    logits = constrain(logits, ("batch", "seq", "act_vocab"))
+    return logits, aux, h
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray):
+    """Masked CE in fp32; labels -1 are ignored.  Returns (loss, n_tokens).
+
+    The label log-prob is a one-hot contraction, NOT take_along_axis: a gather
+    over the vocab axis would force GSPMD to all-gather the (vocab-sharded)
+    logits — the one-hot product reduces locally and psums a scalar instead.
+    """
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.squeeze(m, -1) + jnp.log(
+        jnp.sum(jnp.exp(lf - m), axis=-1))
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), logits.shape[-1],
+                            dtype=lf.dtype)
+    ll = jnp.sum(lf * onehot, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = ((lse - ll) * mask).sum()
+    return loss, mask.sum()
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, Any]):
+    logits, aux, h = lm_logits(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_patches" and "patches" in batch:
+        pad = -jnp.ones((labels.shape[0], batch["patches"].shape[1]),
+                        labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    loss_sum, n_tok = softmax_xent(logits, labels)
+    loss = loss_sum / jnp.maximum(n_tok, 1.0)
+    metrics = {"ce_loss": loss, "tokens": n_tok}
+    if cfg.moe_period:
+        loss = loss + cfg.router_aux_coef * aux["load_balance"] \
+            + cfg.router_z_coef * aux["router_z"]
+        metrics.update({k: v for k, v in aux.items()})
+    if cfg.mtp_depth:
+        mtp_loss = _mtp_loss(params, cfg, batch, h, labels)
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(params: Params, cfg: ModelConfig, batch, h, labels):
+    """deepseek-v3 multi-token prediction: one extra block predicting t+2."""
+    tokens = batch["tokens"]
+    h_in = apply_norm(params["mtp_norm_h"], h[:, :-1], cfg)
+    e_in = apply_norm(params["mtp_norm_e"],
+                      apply_embed(params["embed"], tokens[:, 1:], cfg), cfg)
+    x = jnp.einsum("bsd,dk->bsk",
+                   jnp.concatenate([h_in, e_in], axis=-1),
+                   params["mtp_proj"].astype(h.dtype))
+    pos = jnp.arange(x.shape[1])[None, :]
+    x, _ = blocks.block_train(params["mtp_block"], x, pos, 1 << 30, cfg,
+                              ("attn", False))
+    x = apply_norm(params["mtp_final_norm"], x, cfg)
+    logits = apply_unembed(params["embed"], x, cfg)
+    lbl = labels[:, 1:]                       # labels already = next token
+    loss_sum, n = softmax_xent(logits, lbl)
+    return loss_sum / jnp.maximum(n, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving paths
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=None):
+    plan = make_plan(cfg)
+    dtype = dtype or cdtype(cfg)
+    enc_seq = cfg.encoder_seq if cfg.is_encoder_decoder else 0
+    return init_stack_cache(cfg, plan, batch, s_max, dtype,
+                            cross=cfg.is_encoder_decoder, enc_seq=enc_seq)
+
+
+def lm_prefill(params: Params, cfg: ModelConfig, batch: Dict[str, Any],
+               cache: Params):
+    """Process the prompt, fill the cache, return last-position logits."""
+    plan = make_plan(cfg)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"])
+    x, positions = _embed_inputs(params, cfg, batch)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+    h, cache = stack_prefill(params["stack"], x, positions, cfg, plan, cache,
+                             enc_out=enc_out)
+    hn = apply_norm(params["final_norm"], h[:, -1:], cfg)
+    logits = apply_unembed(params["embed"], hn, cfg)
+    return logits, cache
+
+
+def lm_decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                   token: jnp.ndarray, pos):
+    """One decode step: token [B,1] at absolute position ``pos``."""
+    plan = make_plan(cfg)
+    x = apply_embed(params["embed"], token, cfg)
+    h, cache = stack_decode(params["stack"], x, pos, cfg, plan, cache)
+    hn = apply_norm(params["final_norm"], h, cfg)
+    logits = apply_unembed(params["embed"], hn, cfg)
+    logits = constrain(logits, ("batch", None, "act_vocab"))
+    return logits, cache

@@ -1,0 +1,201 @@
+"""Model architecture configuration covering all 10 assigned families.
+
+One frozen dataclass describes dense / MoE / SSM / hybrid / enc-dec / VLM /
+audio backbones; per-layer heterogeneity (gemma local:global, jamba attn:mamba,
+xlstm sLSTM:mLSTM, MoE interleave) is expressed with cyclic *layer patterns*
+resolved by :func:`layer_kinds` / :func:`moe_mask`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["ModelConfig", "layer_kinds", "moe_mask", "segment_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    family: str = "dense"           # dense|moe|ssm|hybrid|vlm|audio
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 256
+    vocab_size: int = 1024
+    head_dim: Optional[int] = None
+
+    # --- attention ---------------------------------------------------------
+    attn_pattern: Tuple[str, ...] = ("global",)  # cycled over layers
+    sliding_window: int = 1024
+    rope_theta: float = 10_000.0
+    use_bias: bool = False
+    qk_norm: bool = False           # gemma3-style per-head RMS on q,k
+    tie_embeddings: bool = True
+    logit_softcap: float = 0.0      # 0 = off
+
+    # --- MLA (deepseek-v3) ---------------------------------------------------
+    use_mla: bool = False
+    q_lora_rank: int = 0            # 0 = full-rank q projection
+    kv_lora_rank: int = 512
+    qk_rope_head_dim: int = 64
+    qk_nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+    # --- MoE -----------------------------------------------------------------
+    moe_period: int = 0             # 0 = no MoE; 1 = all layers; 2 = every other
+    moe_offset: int = 0             # first MoE layer index
+    first_dense_layers: int = 0     # deepseek: leading dense layers
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    router_z_coef: float = 1e-3
+
+    # --- SSM / hybrid block pattern -----------------------------------------
+    block_pattern: Tuple[str, ...] = ("attn",)   # cycled: attn|mamba|mlstm|slstm
+    ssm_state_dim: int = 16
+    ssm_conv_dim: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0            # 0 = ceil(d_model/16)
+    ssm_chunk: int = 128            # nested-scan checkpoint chunk
+    mlstm_chunkwise: bool = True    # chunkwise-parallel mLSTM for train
+                                    # (§Perf: trip count S -> S/chunk, MXU-
+                                    # sized matmuls; sequential = reference)
+    slstm_proj_factor: float = 4 / 3
+
+    # --- encoder-decoder (whisper) -------------------------------------------
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500
+
+    # --- modality frontend stubs ---------------------------------------------
+    frontend: Optional[str] = None  # "audio_frames" | "vision_patches"
+    num_patches: int = 256          # patch/frame embeddings prepended (vlm)
+
+    # --- MTP (deepseek) -------------------------------------------------------
+    mtp_depth: int = 0
+
+    # --- misc -----------------------------------------------------------------
+    norm_eps: float = 1e-6
+    act: str = "silu"
+    norm_type: str = "rmsnorm"      # rmsnorm|layernorm
+    scan_layers: bool = True
+    remat: bool = True
+    dtype: str = "bfloat16"         # activation/compute dtype
+    param_dtype: str = "float32"
+
+    # -------------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Approximate parameter count (embeddings + blocks), for 6ND.
+
+        active_only: count only the experts a token actually visits
+        (experts_per_token + shared) — the N in MoE MODEL_FLOPS."""
+        d, L = self.d_model, self.n_layers
+        hd = self.resolved_head_dim
+        n = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        kinds = layer_kinds(self)
+        moe = moe_mask(self)
+        for i, kind in enumerate(kinds):
+            if kind == "attn":
+                if self.use_mla:
+                    r_q = self.q_lora_rank or d
+                    qd = self.n_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim)
+                    n += d * self.q_lora_rank + r_q * qd if self.q_lora_rank else d * qd
+                    n += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+                    n += self.kv_lora_rank * self.n_heads * (
+                        self.qk_nope_head_dim + self.v_head_dim)
+                    n += self.n_heads * self.v_head_dim * d
+                else:
+                    n += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                    n += self.n_heads * hd * d
+            elif kind == "mamba":
+                di = self.d_inner
+                n += 2 * d * di + di * self.ssm_conv_dim
+                n += di * (self.dt_rank + 2 * self.ssm_state_dim)
+                n += self.dt_rank * di + di * self.ssm_state_dim + di  # dt_proj, A, D
+                n += di * d
+            elif kind == "mlstm":
+                di = self.d_inner
+                dh_m = di // max(self.n_heads, 1)
+                # up + down + 4 block-diagonal per-head mats + i/f gates
+                n += 2 * d * di + di * d + 4 * self.n_heads * dh_m * dh_m \
+                    + 2 * di * self.n_heads
+            elif kind == "slstm":
+                n += 4 * d * d + int(2 * d * d * self.slstm_proj_factor)
+            if moe[i]:
+                n += d * self.n_experts  # router
+                n_e = (self.experts_per_token if active_only
+                       else self.n_experts) + self.n_shared_experts
+                n += n_e * 3 * d * self.moe_d_ff
+            elif kind == "attn" or kind == "mamba":
+                if self.d_ff:
+                    n += 3 * d * self.d_ff
+        if self.is_encoder_decoder:
+            # encoder layers: self-attn + ff; decoder already counted above
+            enc = self.n_encoder_layers * (4 * d * self.n_heads * hd // self.n_heads
+                                           * self.n_heads + 2 * d * self.d_ff)
+            n += enc
+        return n
+
+
+def layer_kinds(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Per-layer block kind, cycling ``block_pattern``: attn|mamba|mlstm|slstm."""
+    pat = cfg.block_pattern
+    return tuple(pat[i % len(pat)] for i in range(cfg.n_layers))
+
+
+def attn_kinds(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Per-layer attention locality, cycling ``attn_pattern``: global|local."""
+    pat = cfg.attn_pattern
+    return tuple(pat[i % len(pat)] for i in range(cfg.n_layers))
+
+
+def moe_mask(cfg: ModelConfig) -> Tuple[bool, ...]:
+    """Which layers carry a MoE FF instead of the dense FF."""
+    out = []
+    for i in range(cfg.n_layers):
+        if not cfg.moe_period or i < cfg.first_dense_layers:
+            out.append(False)
+        else:
+            out.append((i - cfg.moe_offset) % cfg.moe_period == 0)
+    return tuple(out)
+
+
+def segment_plan(cfg: ModelConfig) -> Tuple[Tuple[Tuple[str, bool, str], int], ...]:
+    """Group layers into scan segments of identical structure.
+
+    A layer's structure id is (block kind, is_moe, attn locality).  Consecutive
+    runs of one structure become ``(structure, repeat)``; periodic patterns are
+    folded so jamba's 32 layers become few segments each scanned.  The plan is
+    the maximal *periodic* grouping: we detect the pattern period and scan over
+    repeats of the period, unrolling the (short) period body.
+    """
+    kinds = layer_kinds(cfg)
+    amask = attn_kinds(cfg)
+    mmask = moe_mask(cfg)
+    structs = tuple((kinds[i], mmask[i], amask[i]) for i in range(cfg.n_layers))
+    # simple run-length encoding over identical structures
+    plan = []
+    i = 0
+    while i < cfg.n_layers:
+        j = i
+        while j < cfg.n_layers and structs[j] == structs[i]:
+            j += 1
+        plan.append((structs[i], j - i))
+        i = j
+    return tuple(plan)

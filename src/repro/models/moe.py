@@ -1,0 +1,133 @@
+"""Mixture-of-Experts with gather-based dispatch (memory-sane EP on TPU).
+
+Instead of the one-hot dispatch einsum (O(tokens x E x C) materialization) we
+build integer index tables and use take_along_axis/scatter:
+
+  router  -> top-k experts + gates per token
+  pos     = position of (token, k) within its expert's capacity (cumsum)
+  idx     [G, E, C]  token index per (expert, slot)   (scatter, drop overflow)
+  x_e     [G, E, C, d] = gather(x, idx)               (the dispatched tokens)
+  h       = expert FF over x_e  (E sharded over 'model' -> GSPMD all-to-alls)
+  y       = sum_k gate_k * gather(h at (e_k, pos_k))  (the combine)
+
+Groups G = batch rows (sequences); capacity C = ceil(T*k*cf/E).  Tokens beyond
+capacity are dropped (standard Switch semantics; capacity_factor controls it).
+Aux losses: switch load-balance + router z-loss.
+
+deepseek-v3 extras supported: shared experts (dense FF added unconditionally),
+sigmoid scoring.  Group-limited (node-limited) routing is NOT implemented —
+noted in DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _act, _normal, cdtype, pdtype
+from repro.models.model_config import ModelConfig
+from repro.models.partitioning import constrain
+
+Params = Dict[str, Any]
+
+
+def init_moe(cfg: ModelConfig, key: jax.Array):
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    sc_in, sc_out = 1.0 / (d ** 0.5), 1.0 / (f ** 0.5)
+    p: Params = {
+        "router": _normal(ks[0], (d, E), sc_in, jnp.float32),   # fp32 router
+        "w_in": _normal(ks[1], (E, d, f), sc_in, pdtype(cfg)),
+        "w_gate": _normal(ks[2], (E, d, f), sc_in, pdtype(cfg)),
+        "w_out": _normal(ks[3], (E, f, d), sc_out, pdtype(cfg)),
+    }
+    s: Params = {
+        "router": ("embed", "experts"),
+        "w_in": ("experts", "embed", "moe_ff"),
+        "w_gate": ("experts", "embed", "moe_ff"),
+        "w_out": ("experts", "moe_ff", "embed"),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        p["shared"] = {
+            "wi": _normal(ks[4], (d, fs), sc_in, pdtype(cfg)),
+            "wg": _normal(jax.random.fold_in(ks[4], 1), (d, fs), sc_in, pdtype(cfg)),
+            "wo": _normal(jax.random.fold_in(ks[4], 2), (fs, d), sc_out, pdtype(cfg)),
+        }
+        s["shared"] = {"wi": ("embed", "ff"), "wg": ("embed", "ff"),
+                       "wo": ("ff", "embed")}
+    return p, s
+
+
+def apply_moe(p: Params, x: jnp.ndarray, cfg: ModelConfig
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: [G, T, d] -> (y [G, T, d], aux losses)."""
+    dt = cdtype(cfg)
+    G, T, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    C = max(int(T * K * cfg.capacity_factor / E), 1)
+
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32), p["router"])
+    if cfg.name.startswith("deepseek"):
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(scores, K)                  # [G,T,K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # position within expert: flatten (T,K) in program order, cumsum of onehot
+    flat_e = eidx.reshape(G, T * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)     # [G,TK,E]
+    pos = (jnp.cumsum(onehot, axis=1) - 1)                  # [G,TK,E]
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=-1)[..., 0]  # [G,TK]
+    pos = pos.reshape(G, T, K)
+    keep = pos < C
+
+    # dispatch index table [G, E, C] <- token ids (overflow dropped)
+    tok_ids = jnp.broadcast_to(jnp.arange(T)[None, :, None], (G, T, K))
+    e_safe = jnp.where(keep, eidx, E)                       # OOB expert -> drop
+    idx = jnp.zeros((G, E, C), jnp.int32)
+    valid = jnp.zeros((G, E, C), jnp.bool_)
+    g_ids = jnp.broadcast_to(jnp.arange(G)[:, None, None], (G, T, K))
+    idx = idx.at[g_ids, e_safe, jnp.where(keep, pos, 0)].set(tok_ids, mode="drop")
+    valid = valid.at[g_ids, e_safe, jnp.where(keep, pos, 0)].set(True, mode="drop")
+
+    x_e = jnp.take_along_axis(x[:, :, None, :],            # [G,T,1,d]
+                              idx.reshape(G, E * C)[:, :, None, None]
+                              .astype(jnp.int32), axis=1)
+    x_e = x_e.reshape(G, E, C, d) * valid[..., None].astype(dt)
+    x_e = constrain(x_e, ("batch", "experts", None, "act_embed"))
+
+    h_in = jnp.einsum("gecd,edf->gecf", x_e, p["w_in"].astype(dt))
+    h_g = jnp.einsum("gecd,edf->gecf", x_e, p["w_gate"].astype(dt))
+    h = _act(h_g, cfg.act) * h_in
+    h = constrain(h, ("batch", "experts", None, "moe_ff"))
+    y_e = jnp.einsum("gecf,efd->gecd", h, p["w_out"].astype(dt))
+    y_e = constrain(y_e, ("batch", "experts", None, "act_embed"))
+
+    # combine: gather each (token, k)'s expert output, weight by gate
+    flat_ec = (eidx * C + jnp.where(keep, pos, 0)).reshape(G, T * K)
+    y_flat = y_e.reshape(G, E * C, d)
+    y_k = jnp.take_along_axis(y_flat, flat_ec[:, :, None], axis=1)
+    y_k = y_k.reshape(G, T, K, d) * (keep[..., None] * gates[..., None]).astype(dt)
+    y = y_k.sum(axis=2)
+
+    if "shared" in p:
+        sp = p["shared"]
+        hi = jnp.einsum("gtd,df->gtf", x, sp["wi"].astype(dt))
+        hg = jnp.einsum("gtd,df->gtf", x, sp["wg"].astype(dt))
+        y = y + jnp.einsum("gtf,fd->gtd", _act(hg, cfg.act) * hi,
+                           sp["wo"].astype(dt))
+
+    # aux losses (fp32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(eidx, E, dtype=jnp.float32).sum(2), axis=(0, 1)) / K
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = {
+        "load_balance": E * jnp.sum(frac_tokens * frac_probs),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y.astype(x.dtype), aux

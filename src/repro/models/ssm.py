@@ -1,0 +1,472 @@
+"""Recurrent blocks: Mamba (S6), mLSTM and sLSTM (xLSTM), built on a
+checkpointed chunked scan.
+
+Memory strategy: reverse-mode through a length-S recurrence needs O(S) saved
+state; we scan over *chunks* (outer scan, boundaries saved) with a rematted
+inner scan (recomputed in backward), so saved state is O(S/chunk) — the
+standard sqrt-checkpoint trade for TPU training of SSMs.  The chunkwise
+*parallel* (matmul) form for mLSTM is `mlstm_train_chunkwise`, the §Perf
+optimization for the xlstm cell; the sequential form is the correctness
+reference.
+
+Decode paths carry explicit recurrent state (the SSM analogue of a KV cache):
+  mamba: (conv_buf [B, kw-1, di], h [B, di, ns])
+  mlstm: (C [B,H,Dk,Dv], n [B,H,Dk], m [B,H])
+  slstm: (c, n, h, m) each [B,H,Dh] (m: [B,H,Dh] broadcast-stabilizer)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _act, _normal, cdtype, pdtype
+from repro.models.model_config import ModelConfig
+from repro.models.partitioning import constrain
+
+Params = Dict[str, Any]
+
+
+def chunked_scan(body, carry, xs, chunk: int, remat: bool = True):
+    """lax.scan over S in chunks: outer scan saves only chunk boundaries.
+
+    body(carry, x_t) -> (carry, y_t);  xs leaves are [S, ...].
+    """
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    chunk = min(chunk, S)
+    n_chunks, rem = divmod(S, chunk)
+
+    def inner(carry, xc):
+        return jax.lax.scan(body, carry, xc)
+
+    inner_c = jax.checkpoint(inner) if remat else inner
+
+    def outer(carry, xc):
+        return inner_c(carry, xc)
+
+    head = jax.tree.map(lambda x: x[:n_chunks * chunk]
+                        .reshape((n_chunks, chunk) + x.shape[1:]), xs)
+    carry, ys = jax.lax.scan(outer, carry, head)
+    ys = jax.tree.map(lambda y: y.reshape((n_chunks * chunk,) + y.shape[2:]), ys)
+    if rem:
+        carry, ys_t = jax.lax.scan(body, carry, jax.tree.map(
+            lambda x: x[n_chunks * chunk:], xs))
+        ys = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0), ys, ys_t)
+    return carry, ys
+
+
+# ===========================================================================
+# Mamba (S6) — jamba's SSM block
+# ===========================================================================
+
+def init_mamba(cfg: ModelConfig, key: jax.Array):
+    d, di, ns, kw, dtr = (cfg.d_model, cfg.d_inner, cfg.ssm_state_dim,
+                          cfg.ssm_conv_dim, cfg.dt_rank)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": _normal(ks[0], (d, 2 * di), 1 / d ** 0.5, pdtype(cfg)),
+        "conv_w": _normal(ks[1], (kw, di), 1 / kw ** 0.5, pdtype(cfg)),
+        "conv_b": jnp.zeros((di,), pdtype(cfg)),
+        "x_proj": _normal(ks[2], (di, dtr + 2 * ns), 1 / di ** 0.5, pdtype(cfg)),
+        "dt_proj": _normal(ks[3], (dtr, di), 1 / dtr ** 0.5, pdtype(cfg)),
+        "dt_bias": jnp.full((di,), -4.6, pdtype(cfg)),   # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ns + 1, dtype=jnp.float32), (di, ns))).astype(pdtype(cfg)),
+        "D": jnp.ones((di,), pdtype(cfg)),
+        "out_proj": _normal(ks[4], (di, d), 1 / di ** 0.5, pdtype(cfg)),
+    }
+    s = {
+        "in_proj": ("embed", "d_inner"), "conv_w": ("conv", "d_inner"),
+        "conv_b": ("d_inner",), "x_proj": ("d_inner", "dt"),
+        "dt_proj": ("dt", "d_inner"), "dt_bias": ("d_inner",),
+        "A_log": ("d_inner", "state"), "D": ("d_inner",),
+        "out_proj": ("d_inner", "embed"),
+    }
+    return p, s
+
+
+def _mamba_conv_train(p, x, cfg):
+    """Causal depthwise conv over time. x: [B,S,di]."""
+    kw = p["conv_w"].shape[0]
+    dt = x.dtype
+    lhs = x.transpose(0, 2, 1)                       # [B,di,S]
+    rhs = p["conv_w"].astype(dt).T[:, None, :]       # [di,1,kw]
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1,), padding=[(kw - 1, 0)],
+        feature_group_count=lhs.shape[1])
+    return out.transpose(0, 2, 1) + p["conv_b"].astype(dt)
+
+
+def _mamba_ssm_inputs(p, xc, cfg):
+    """xc: [B,S,di] (post conv+silu) -> dt [B,S,di], Bp/Cp [B,S,ns]."""
+    dt_ = cdtype(cfg)
+    dtr, ns = cfg.dt_rank, cfg.ssm_state_dim
+    proj = jnp.einsum("bsi,ir->bsr", xc, p["x_proj"].astype(dt_))
+    dt_in, Bp, Cp = jnp.split(proj, [dtr, dtr + ns], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, p["dt_proj"].astype(dt_))
+        + p["dt_bias"].astype(dt_))
+    return dt, Bp, Cp
+
+
+def mamba_train(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                return_state: bool = False):
+    dt_ = cdtype(cfg)
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_mamba_conv_train(p, x_in, cfg))
+    dt, Bp, Cp = _mamba_ssm_inputs(p, xc, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))     # [di,ns]
+
+    def body(h, inp):
+        dt_t, xt, Bt, Ct = inp                        # [B,di],[B,di],[B,ns],[B,ns]
+        dtf = dt_t.astype(jnp.float32)
+        dA = jnp.exp(dtf[:, :, None] * A[None])       # [B,di,ns]
+        h = h * dA + (dtf * xt.astype(jnp.float32))[:, :, None] * \
+            Bt.astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bin,bn->bi", h, Ct.astype(jnp.float32))
+        return h, y.astype(dt_)
+
+    h0 = jnp.zeros((B, cfg.d_inner, cfg.ssm_state_dim), jnp.float32)
+    xs = (dt.transpose(1, 0, 2), xc.transpose(1, 0, 2),
+          Bp.transpose(1, 0, 2), Cp.transpose(1, 0, 2))
+    h_fin, ys = chunked_scan(body, h0, xs, cfg.ssm_chunk, remat=cfg.remat)
+    y = ys.transpose(1, 0, 2) + xc * p["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt_))
+    if return_state:
+        kw = cfg.ssm_conv_dim
+        conv_buf = x_in[:, S - (kw - 1):, :] if S >= kw - 1 else jnp.pad(
+            x_in, ((0, 0), (kw - 1 - S, 0), (0, 0)))
+        return out, {"conv": conv_buf, "h": h_fin}
+    return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype):
+    kw = cfg.ssm_conv_dim
+    st = {"conv": jnp.zeros((batch, kw - 1, cfg.d_inner), dtype),
+          "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state_dim), jnp.float32)}
+    sp = {"conv": ("batch", None, "d_inner"),
+          "h": ("batch", "d_inner", "state")}
+    return st, sp
+
+
+def mamba_decode(p: Params, x: jnp.ndarray, state: Dict[str, jnp.ndarray],
+                 cfg: ModelConfig):
+    """x: [B,1,d]."""
+    dt_ = cdtype(cfg)
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    x_in, z = jnp.split(xz, 2, axis=-1)              # [B,1,di]
+    buf = jnp.concatenate([state["conv"], x_in.astype(state["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(dt_)                      # [kw, di]
+    xc = jax.nn.silu(jnp.einsum("bki,ki->bi", buf.astype(dt_), w)
+                     + p["conv_b"].astype(dt_))[:, None, :]
+    dt, Bp, Cp = _mamba_ssm_inputs(p, xc, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtf = dt[:, 0].astype(jnp.float32)
+    dA = jnp.exp(dtf[:, :, None] * A[None])
+    h = state["h"] * dA + (dtf * xc[:, 0].astype(jnp.float32))[:, :, None] * \
+        Bp[:, 0].astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bin,bn->bi", h, Cp[:, 0].astype(jnp.float32)).astype(dt_)
+    y = (y + xc[:, 0] * p["D"].astype(dt_)) * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"].astype(dt_))[:, None, :]
+    return out, {"conv": buf[:, 1:], "h": h}
+
+
+# ===========================================================================
+# mLSTM (xLSTM) — matrix-memory LSTM
+# ===========================================================================
+
+def init_mlstm(cfg: ModelConfig, key: jax.Array):
+    """mLSTM block.  q/k/v and the o-gate are per-head BLOCK-DIAGONAL
+    projections ([H, dh, dh]), as in the xLSTM reference implementation —
+    full di x di projections would inflate params ~2x."""
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    dh = di // H
+    ks = jax.random.split(key, 8)
+    bd = lambda kk: _normal(kk, (H, dh, dh), 1 / dh ** 0.5, pdtype(cfg))
+    p = {
+        "up_proj": _normal(ks[0], (d, 2 * di), 1 / d ** 0.5, pdtype(cfg)),
+        "wq": bd(ks[1]), "wk": bd(ks[2]), "wv": bd(ks[3]),
+        "wi": _normal(ks[4], (di, H), 1 / di ** 0.5, pdtype(cfg)),
+        "bi": jnp.zeros((H,), pdtype(cfg)),
+        "wf": _normal(ks[5], (di, H), 1 / di ** 0.5, pdtype(cfg)),
+        "bf": jnp.full((H,), 3.0, pdtype(cfg)),      # open forget gates at init
+        "wo": bd(ks[6]),
+        "down_proj": _normal(ks[7], (di, d), 1 / di ** 0.5, pdtype(cfg)),
+    }
+    blk = ("heads", "head_dim", None)
+    s = {
+        "up_proj": ("embed", "d_inner"),
+        "wq": blk, "wk": blk, "wv": blk,
+        "wi": ("d_inner", "heads"), "bi": ("heads",),
+        "wf": ("d_inner", "heads"), "bf": ("heads",),
+        "wo": blk,
+        "down_proj": ("d_inner", "embed"),
+    }
+    return p, s
+
+
+def _mlstm_gates_qkv(p, xu, cfg):
+    dt_ = cdtype(cfg)
+    H = cfg.n_heads
+    B, S, di = xu.shape
+    xh = xu.reshape(B, S, H, di // H)
+    q = jnp.einsum("bshk,hkj->bshj", xh, p["wq"].astype(dt_))
+    k = jnp.einsum("bshk,hkj->bshj", xh, p["wk"].astype(dt_))
+    v = jnp.einsum("bshk,hkj->bshj", xh, p["wv"].astype(dt_))
+    ig = (jnp.einsum("bsi,ih->bsh", xu, p["wi"].astype(dt_))
+          + p["bi"].astype(dt_)).astype(jnp.float32)     # log-space input gate
+    fg = (jnp.einsum("bsi,ih->bsh", xu, p["wf"].astype(dt_))
+          + p["bf"].astype(dt_)).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg)
+    return q, k, v, ig, logf
+
+
+def _mlstm_step(carry, inp, dh):
+    """Stabilized recurrent mLSTM step."""
+    C, n, m = carry                                   # [B,H,Dk,Dv],[B,H,Dk],[B,H]
+    q, k, v, ig, logf = inp                           # [B,H,Dk],...,[B,H],[B,H]
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    m_new = jnp.maximum(logf + m, ig)
+    fp = jnp.exp(logf + m - m_new)                    # [B,H]
+    ip = jnp.exp(ig - m_new)
+    C = C * fp[..., None, None] + ip[..., None, None] * \
+        (kf[..., :, None] * vf[..., None, :])
+    n = n * fp[..., None] + ip[..., None] * kf
+    num = jnp.einsum("bhk,bhkv->bhv", qf / (dh ** 0.5), C)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", qf / (dh ** 0.5), n))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_train(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                chunkwise: bool = False, return_state: bool = False):
+    dt_ = cdtype(cfg)
+    B, S, _ = x.shape
+    H, di = cfg.n_heads, cfg.d_inner
+    dh = di // H
+    xu, z = jnp.split(jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(dt_)),
+                      2, axis=-1)
+    q, k, v, ig, logf = _mlstm_gates_qkv(p, xu, cfg)
+    if chunkwise and not return_state:
+        h = _mlstm_chunkwise(q, k, v, ig, logf, cfg)
+        carry = None
+    else:
+        def body(carry, inp):
+            return _mlstm_step(carry, inp, dh)
+        carry = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+        xs = tuple(a.transpose(1, 0, 2, 3) if a.ndim == 4 else a.transpose(1, 0, 2)
+                   for a in (q, k, v, ig, logf))
+        carry, hs = chunked_scan(body, carry, xs, cfg.ssm_chunk, remat=cfg.remat)
+        h = hs.transpose(1, 0, 2, 3)                  # [B,S,H,Dv]
+    h = h.astype(dt_).reshape(B, S, di)
+    o = jax.nn.sigmoid(jnp.einsum(
+        "bshk,hkj->bshj", xu.reshape(B, S, H, dh),
+        p["wo"].astype(dt_)).reshape(B, S, di))
+    y = h * o * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["down_proj"].astype(dt_))
+    if return_state:
+        return out, {"C": carry[0], "n": carry[1], "m": carry[2]}
+    return out
+
+
+def _mlstm_chunkwise(q, k, v, ig, logf, cfg: ModelConfig):
+    """Chunkwise-parallel mLSTM (linear-attention style, MXU-friendly).
+
+    Intra-chunk: masked quadratic attention with decay weights.
+    Inter-chunk: matrix state C carried across chunks (outer lax.scan).
+    The §Perf optimization for the xlstm cells — trip count S/chunk instead
+    of S, with chunk-sized matmuls feeding the MXU.
+    """
+    B, S, H, dh = q.shape
+    Ck = min(cfg.ssm_chunk, S)
+    assert S % Ck == 0, "chunkwise mLSTM needs S % chunk == 0"
+    NC = S // Ck
+    resh = lambda a: a.reshape(B, NC, Ck, *a.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc = resh(q.astype(jnp.float32)), resh(k.astype(jnp.float32)), \
+        resh(v.astype(jnp.float32))                    # [NC,B,Ck,H,dh]
+    igc, logfc = resh(ig), resh(logf)                  # [NC,B,Ck,H]
+
+    def chunk_body(carry, inp):
+        C, n, m = carry                                # [B,H,dh,dh],[B,H,dh],[B,H]
+        qt, kt, vt, it, lft = inp
+        # cumulative decay within chunk: b[t] = sum_{tau<=t} logf[tau]
+        b = jnp.cumsum(lft, axis=1)                    # [B,Ck,H]
+        btot = b[:, -1]                                # [B,H]
+        # stabilizers
+        m_intra = jnp.max(it - lft + b, axis=1)        # per xlstm: log a at t
+        m_new = jnp.maximum(btot + m, m_intra)         # [B,H]
+        # inter-chunk contribution: q decayed to chunk start
+        qdec = qt * jnp.exp(b + m[:, None, :] - m_new[:, None, :])[..., None]
+        h_inter = jnp.einsum("bthk,bhkv->bthv", qdec / (dh ** 0.5), C)
+        n_inter = jnp.einsum("bthk,bhk->bth", qdec / (dh ** 0.5), n)
+        # intra-chunk: D[t,s] = exp(b_t - b_s + i_s - m_new) for s <= t
+        logD = (b[:, :, None, :] - b[:, None, :, :] + it[:, None, :, :]
+                - m_new[:, None, None, :])             # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((Ck, Ck), bool))
+        D = jnp.where(tri[None, :, :, None], jnp.exp(logD), 0.0)
+        scores = jnp.einsum("bthk,bshk->btsh", qt / (dh ** 0.5), kt) * D
+        h_intra = jnp.einsum("btsh,bshv->bthv", scores, vt)
+        n_intra = jnp.einsum("btsh->bth", scores)
+        # combine + normalize
+        den = jnp.maximum(jnp.abs(n_inter + n_intra),
+                          jnp.exp(-m_new)[:, None, :])
+        h = (h_inter + h_intra) / den[..., None]
+        # state update: C' = C * exp(btot + m - m_new) + sum_s k_s v_s^T decay
+        kdec = kt * jnp.exp(btot[:, None, :] - b + it - m_new[:, None, :])[..., None]
+        C = C * jnp.exp(btot + m - m_new)[..., None, None] + \
+            jnp.einsum("bshk,bshv->bhkv", kdec, vt)
+        n = n * jnp.exp(btot + m - m_new)[..., None] + kdec.sum(axis=1)
+        return (C, n, m_new), h
+
+    carry = (jnp.zeros((B, H, dh, dh), jnp.float32),
+             jnp.zeros((B, H, dh), jnp.float32),
+             jnp.full((B, H), 0.0, jnp.float32))
+    body = jax.checkpoint(chunk_body) if cfg.remat else chunk_body
+    _, hs = jax.lax.scan(body, carry, (qc, kc, vc, igc, logfc))
+    return hs.swapaxes(0, 1).reshape(B, S, H, dh)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype):
+    H, dh = cfg.n_heads, cfg.d_inner // cfg.n_heads
+    st = {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+          "n": jnp.zeros((batch, H, dh), jnp.float32),
+          "m": jnp.full((batch, H), -1e30, jnp.float32)}
+    sp = {"C": ("batch", "heads", "sdim", None),
+          "n": ("batch", "heads", "sdim"), "m": ("batch", "heads")}
+    return st, sp
+
+
+def mlstm_decode(p: Params, x: jnp.ndarray, state, cfg: ModelConfig):
+    dt_ = cdtype(cfg)
+    B = x.shape[0]
+    H, di = cfg.n_heads, cfg.d_inner
+    dh = di // H
+    xu, z = jnp.split(jnp.einsum("bsd,de->bse", x, p["up_proj"].astype(dt_)),
+                      2, axis=-1)
+    q, k, v, ig, logf = _mlstm_gates_qkv(p, xu, cfg)
+    carry = (state["C"], state["n"], state["m"])
+    carry, h = _mlstm_step(carry, (q[:, 0], k[:, 0], v[:, 0], ig[:, 0],
+                                   logf[:, 0]), dh)
+    h = h.astype(dt_).reshape(B, 1, di)
+    o = jax.nn.sigmoid(jnp.einsum(
+        "bshk,hkj->bshj", xu.reshape(B, 1, H, dh),
+        p["wo"].astype(dt_)).reshape(B, 1, di))
+    y = h * o * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["down_proj"].astype(dt_))
+    return out, {"C": carry[0], "n": carry[1], "m": carry[2]}
+
+
+# ===========================================================================
+# sLSTM (xLSTM) — scalar-memory LSTM with recurrent gate connections
+# ===========================================================================
+
+def init_slstm(cfg: ModelConfig, key: jax.Array):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ks = jax.random.split(key, 10)
+    def gate(kk):
+        return _normal(kk, (d, H, dh), 1 / d ** 0.5, pdtype(cfg))
+    def rec(kk):
+        return _normal(kk, (H, dh, dh), 1 / dh ** 0.5, pdtype(cfg))
+    ff = int(cfg.slstm_proj_factor * d)
+    p = {
+        "wi": gate(ks[0]), "wf": gate(ks[1]), "wz": gate(ks[2]), "wo": gate(ks[3]),
+        "ri": rec(ks[4]), "rf": rec(ks[5]), "rz": rec(ks[6]), "ro": rec(ks[7]),
+        "bi": jnp.zeros((H, dh), pdtype(cfg)),
+        "bf": jnp.full((H, dh), 3.0, pdtype(cfg)),
+        "bz": jnp.zeros((H, dh), pdtype(cfg)),
+        "bo": jnp.zeros((H, dh), pdtype(cfg)),
+        "up": _normal(ks[8], (d, 2 * ff), 1 / d ** 0.5, pdtype(cfg)),
+        "down": _normal(ks[9], (ff, d), 1 / ff ** 0.5, pdtype(cfg)),
+    }
+    g3 = ("embed", "heads", "head_dim")
+    r3 = ("heads", "head_dim", None)
+    b2 = ("heads", "head_dim")
+    s = {"wi": g3, "wf": g3, "wz": g3, "wo": g3,
+         "ri": r3, "rf": r3, "rz": r3, "ro": r3,
+         "bi": b2, "bf": b2, "bz": b2, "bo": b2,
+         "up": ("embed", "ff"), "down": ("ff", "embed")}
+    return p, s
+
+
+def _slstm_step(p, carry, xt, cfg):
+    """xt: dict of gate pre-activations from input [B,H,dh] each (any float
+    dtype; promoted to fp32 here so scan xs can stream in bf16)."""
+    c, n, h, m = carry
+    hf = h
+    def g(name):
+        return xt[name].astype(jnp.float32) + jnp.einsum(
+            "bhk,hkj->bhj", hf, p["r" + name].astype(jnp.float32))
+    it, ft = g("i"), g("f")
+    zt = jnp.tanh(g("z"))
+    ot = jax.nn.sigmoid(g("o"))
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(logf + m - m_new)
+    c = fp * c + ip * zt
+    n = fp * n + ip
+    h = ot * c / jnp.maximum(n, 1.0)
+    return (c, n, h, m_new), h
+
+
+def slstm_train(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                return_state: bool = False):
+    dt_ = cdtype(cfg)
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    pre = {}
+    for name in ("i", "f", "z", "o"):
+        # pre-activations stream through the scan in bf16 (halves the scanned
+        # xs bytes); the step promotes to fp32 for gate stability
+        pre[name] = (jnp.einsum("bsd,dhk->bshk", x, p["w" + name].astype(dt_))
+                     + p["b" + name].astype(dt_))
+    carry = tuple(jnp.zeros((B, H, dh), jnp.float32) for _ in range(3)) + \
+        (jnp.full((B, H, dh), -1e30, jnp.float32),)
+
+    def body(c, inp):
+        return _slstm_step(p, c, inp, cfg)
+
+    xs = {k2: v.transpose(1, 0, 2, 3) for k2, v in pre.items()}
+    carry, hs = chunked_scan(body, carry, xs, cfg.ssm_chunk, remat=cfg.remat)
+    h = hs.transpose(1, 0, 2, 3).astype(dt_).reshape(B, S, d)
+    # post-up-projection FF (GeGLU, proj_factor)
+    hi, hg = jnp.split(jnp.einsum("bsd,de->bse", h, p["up"].astype(dt_)), 2, -1)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(hg) * hi, p["down"].astype(dt_))
+    if return_state:
+        return y, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+    return y
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype):
+    H, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = lambda: jnp.zeros((batch, H, dh), jnp.float32)
+    st = {"c": z(), "n": z(), "h": z(),
+          "m": jnp.full((batch, H, dh), -1e30, jnp.float32)}
+    sp = {k2: ("batch", "heads", "sdim") for k2 in st}
+    return st, sp
+
+
+def slstm_decode(p: Params, x: jnp.ndarray, state, cfg: ModelConfig):
+    dt_ = cdtype(cfg)
+    B, _, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    xt = {}
+    for name in ("i", "f", "z", "o"):
+        xt[name] = (jnp.einsum("bsd,dhk->bshk", x, p["w" + name].astype(dt_))
+                    + p["b" + name].astype(dt_)).astype(jnp.float32)[:, 0]
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    carry, h = _slstm_step(p, carry, xt, cfg)
+    h = h.astype(dt_).reshape(B, 1, d)
+    hi, hg = jnp.split(jnp.einsum("bsd,de->bse", h, p["up"].astype(dt_)), 2, -1)
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(hg) * hi, p["down"].astype(dt_))
+    return y, {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}

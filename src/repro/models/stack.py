@@ -1,0 +1,268 @@
+"""Layer-stack assembly with period-folded scan.
+
+Heterogeneous layer patterns (gemma local:global 5:1, jamba attn:mamba 1:7 with
+MoE every other layer, xlstm sLSTM:mLSTM, deepseek 3-dense-then-MoE) are folded
+as:   [head (unrolled)] + [period P scanned over R repeats] + [tail (unrolled)]
+
+where the period is the smallest P with struct[i] == struct[i % P] over the
+body.  Params for the scanned body are stacked per period position with a
+leading repeats axis ("layers" logical axis), so HLO contains ONE period body
+regardless of depth — compile time and program size stay flat from smollm-135m
+to deepseek-671b.  Sliding-window sizes ride along as scanned inputs so local
+and global attention share one body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import (Struct, block_decode, block_prefill,
+                                 block_train, init_block, init_block_cache)
+from repro.models.model_config import ModelConfig, attn_kinds, layer_kinds, moe_mask
+
+Params = Dict[str, Any]
+GLOBAL_WINDOW = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class StackPlan:
+    structs: Tuple[Struct, ...]     # per layer
+    windows: Tuple[int, ...]        # per layer
+    head: int                       # unrolled leading layers
+    period: int
+    repeats: int
+    tail: int                       # unrolled trailing layers
+
+    def body_struct(self, j: int) -> Struct:
+        return self.structs[self.head + j]
+
+
+def make_plan(cfg: ModelConfig) -> StackPlan:
+    kinds = layer_kinds(cfg)
+    mmask = moe_mask(cfg)
+    akinds = attn_kinds(cfg)
+    structs = tuple((kinds[i], mmask[i]) for i in range(cfg.n_layers))
+    windows = tuple(cfg.sliding_window if (kinds[i] == "attn" and
+                                           akinds[i] == "local")
+                    else GLOBAL_WINDOW for i in range(cfg.n_layers))
+    head = min(cfg.first_dense_layers, cfg.n_layers)
+    body = structs[head:]
+    P = max(len(body), 1)
+    for pc in range(1, len(body) + 1):
+        if all(body[i] == body[i % pc] for i in range(len(body))):
+            P = pc
+            break
+    R = len(body) // P if body else 0
+    tail = len(body) - R * P
+    if not cfg.scan_layers:          # fully unrolled: everything in head
+        return StackPlan(structs, windows, cfg.n_layers, 1, 0, 0)
+    return StackPlan(structs, windows, head, P, R, tail)
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def init_stack(cfg: ModelConfig, key: jax.Array, plan: StackPlan,
+               cross: bool = False):
+    """Returns (params, specs) in {head: [...], body: {j: stacked}, tail: [...]}."""
+    keys = jax.random.split(key, cfg.n_layers)
+    P, R = plan.period, plan.repeats
+    params: Params = {"head": [], "body": {}, "tail": []}
+    specs: Params = {"head": [], "body": {}, "tail": []}
+    for i in range(plan.head):
+        p, s = init_block(cfg, keys[i], plan.structs[i], cross=cross)
+        params["head"].append(p)
+        specs["head"].append(s)
+    for j in range(P if R else 0):
+        per_rep = []
+        s_j = None
+        for r in range(R):
+            li = plan.head + r * P + j
+            p, s_j = init_block(cfg, keys[li], plan.structs[li], cross=cross)
+            per_rep.append(p)
+        params["body"][str(j)] = _stack_trees(per_rep)
+        specs["body"][str(j)] = jax.tree.map(
+            lambda names: ("layers",) + tuple(names), s_j,
+            is_leaf=lambda x: isinstance(x, tuple))
+    for t in range(plan.tail):
+        li = plan.head + R * P + t
+        p, s = init_block(cfg, keys[li], plan.structs[li], cross=cross)
+        params["tail"].append(p)
+        specs["tail"].append(s)
+    return params, specs
+
+
+def _body_windows(plan: StackPlan) -> Dict[str, jnp.ndarray]:
+    """Per-position window arrays of shape [repeats]."""
+    P, R = plan.period, plan.repeats
+    return {str(j): jnp.array([plan.windows[plan.head + r * P + j]
+                               for r in range(R)], jnp.int32)
+            for j in range(P if R else 0)}
+
+
+def _aux_zero():
+    return {"load_balance": jnp.float32(0), "router_z": jnp.float32(0),
+            "dropped_frac": jnp.float32(0)}
+
+
+def _aux_add(a, b):
+    out = dict(a)
+    for k2, v in b.items():
+        out[k2] = out.get(k2, jnp.float32(0)) + v
+    return out
+
+
+def stack_train(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                cfg: ModelConfig, plan: StackPlan, causal: bool = True,
+                enc_out: Optional[jnp.ndarray] = None):
+    aux = _aux_zero()
+    for i, lp in enumerate(params["head"]):
+        x, a = block_train(lp, x, positions, plan.windows[i], cfg,
+                           plan.structs[i], causal, enc_out)
+        aux = _aux_add(aux, a)
+    P, R = plan.period, plan.repeats
+    if R:
+        bw = _body_windows(plan)
+
+        def step(xc, xs):
+            ps, ws = xs
+            a = _aux_zero()
+            for j in range(P):
+                xc, aj = block_train(ps[str(j)], xc, positions, ws[str(j)],
+                                     cfg, plan.body_struct(j), causal, enc_out)
+                a = _aux_add(a, aj)
+            return xc, a
+
+        step_fn = jax.checkpoint(step) if cfg.remat else step
+        x, auxs = jax.lax.scan(step_fn, x, (params["body"], bw))
+        aux = _aux_add(aux, jax.tree.map(jnp.sum, auxs))
+    for t, lp in enumerate(params["tail"]):
+        li = plan.head + R * P + t
+        x, a = block_train(lp, x, positions, plan.windows[li], cfg,
+                           plan.structs[li], causal, enc_out)
+        aux = _aux_add(aux, a)
+    return x, aux
+
+
+def init_stack_cache(cfg: ModelConfig, plan: StackPlan, batch: int, s_max: int,
+                     dtype, cross: bool = False, enc_seq: int = 0):
+    """Cache pytree matching the stack plan; body entries stacked [R, ...]."""
+    P, R = plan.period, plan.repeats
+    cache: Params = {"head": [], "body": {}, "tail": []}
+    specs: Params = {"head": [], "body": {}, "tail": []}
+    for i in range(plan.head):
+        c, s = init_block_cache(cfg, plan.structs[i], batch, s_max, dtype,
+                                cross, enc_seq)
+        cache["head"].append(c)
+        specs["head"].append(s)
+    for j in range(P if R else 0):
+        c, s = init_block_cache(cfg, plan.body_struct(j), batch, s_max, dtype,
+                                cross, enc_seq)
+        cache["body"][str(j)] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (R,) + a.shape), c)
+        specs["body"][str(j)] = jax.tree.map(
+            lambda names: ("layers",) + tuple(names), s,
+            is_leaf=lambda x: isinstance(x, tuple))
+    for t in range(plan.tail):
+        li = plan.head + R * P + t
+        c, s = init_block_cache(cfg, plan.structs[li], batch, s_max, dtype,
+                                cross, enc_seq)
+        cache["tail"].append(c)
+        specs["tail"].append(s)
+    return cache, specs
+
+
+def stack_prefill(params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+                  cfg: ModelConfig, plan: StackPlan, cache: Params,
+                  enc_out: Optional[jnp.ndarray] = None):
+    new_cache: Params = {"head": [], "body": {}, "tail": []}
+    for i, lp in enumerate(params["head"]):
+        x, c = block_prefill(lp, x, positions, plan.windows[i], cfg,
+                             plan.structs[i], cache["head"][i], enc_out)
+        new_cache["head"].append(c)
+    P, R = plan.period, plan.repeats
+    if R:
+        bw = _body_windows(plan)
+
+        def step(xc, xs):
+            ps, ws, cs = xs
+            out_cs = {}
+            for j in range(P):
+                xc, cj = block_prefill(ps[str(j)], xc, positions, ws[str(j)],
+                                       cfg, plan.body_struct(j), cs[str(j)],
+                                       enc_out)
+                out_cs[str(j)] = cj
+            return xc, out_cs
+
+        step_fn = jax.checkpoint(step) if cfg.remat else step
+        x, body_cache = jax.lax.scan(step_fn, x,
+                                     (params["body"], bw, cache["body"]))
+        new_cache["body"] = body_cache
+    for t, lp in enumerate(params["tail"]):
+        li = plan.head + R * P + t
+        x, c = block_prefill(lp, x, positions, plan.windows[li], cfg,
+                             plan.structs[li], cache["tail"][t], enc_out)
+        new_cache["tail"].append(c)
+    return x, new_cache
+
+
+def cache_batch_slice(cache: Params, start: int, size: int) -> Params:
+    """Slice the batch axis of a stack cache (axis 0 for head/tail entries,
+    axis 1 for body entries, which carry a leading repeats axis)."""
+    out = {"head": [jax.tree.map(lambda a: a[start:start + size], c)
+                    for c in cache["head"]],
+           "body": {j: jax.tree.map(lambda a: a[:, start:start + size], c)
+                    for j, c in cache["body"].items()},
+           "tail": [jax.tree.map(lambda a: a[start:start + size], c)
+                    for c in cache["tail"]]}
+    return out
+
+
+def cache_batch_update(cache: Params, piece: Params, start: int) -> Params:
+    """Write a batch-slice back (inverse of cache_batch_slice)."""
+    upd0 = lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+        full, one.astype(full.dtype), start, axis=0)
+    upd1 = lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+        full, one.astype(full.dtype), start, axis=1)
+    out = {"head": [jax.tree.map(upd0, cache["head"][i], piece["head"][i])
+                    for i in range(len(cache["head"]))],
+           "body": {j: jax.tree.map(upd1, cache["body"][j], piece["body"][j])
+                    for j in cache["body"]},
+           "tail": [jax.tree.map(upd0, cache["tail"][t], piece["tail"][t])
+                    for t in range(len(cache["tail"]))]}
+    return out
+
+
+def stack_decode(params: Params, x: jnp.ndarray, pos, cfg: ModelConfig,
+                 plan: StackPlan, cache: Params):
+    new_cache: Params = {"head": [], "body": {}, "tail": []}
+    for i, lp in enumerate(params["head"]):
+        x, c = block_decode(lp, x, cache["head"][i], pos, plan.windows[i],
+                            cfg, plan.structs[i])
+        new_cache["head"].append(c)
+    P, R = plan.period, plan.repeats
+    if R:
+        bw = _body_windows(plan)
+
+        def step(xc, xs):
+            ps, ws, cs = xs
+            out_cs = {}
+            for j in range(P):
+                xc, cj = block_decode(ps[str(j)], xc, cs[str(j)], pos,
+                                      ws[str(j)], cfg, plan.body_struct(j))
+                out_cs[str(j)] = cj
+            return xc, out_cs
+
+        x, body_cache = jax.lax.scan(step, x, (params["body"], bw,
+                                               cache["body"]))
+        new_cache["body"] = body_cache
+    for t, lp in enumerate(params["tail"]):
+        li = plan.head + R * P + t
+        x, c = block_decode(lp, x, cache["tail"][t], pos, plan.windows[li],
+                            cfg, plan.structs[li])
+        new_cache["tail"].append(c)
+    return x, new_cache

@@ -1,0 +1,10 @@
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_state_specs,
+                               adamw_update, global_norm, init_adamw,
+                               lr_schedule)
+from repro.optim.compression import (EFState, compress, decompress, init_ef,
+                                     make_compressed_psum)
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_state_specs", "adamw_update",
+           "global_norm", "init_adamw", "lr_schedule",
+           "EFState", "compress", "decompress", "init_ef",
+           "make_compressed_psum"]

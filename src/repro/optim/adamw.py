@@ -1,0 +1,104 @@
+"""AdamW with logical-spec-aware state (ZeRO-1 falls out of the sharding
+rules: optimizer moments inherit the parameter specs, and parameters carry the
+'embed'->data FSDP rule, so m/v are sharded over data x model like the
+params).  Pure functional: (state, params, grads) -> (state, params)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"   # set bfloat16 to halve optimizer memory
+
+
+class AdamWState(NamedTuple):
+    m: Params
+    v: Params
+    count: jnp.ndarray
+
+
+def init_adamw(params: Params, cfg: AdamWConfig) -> AdamWState:
+    md = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, md)
+    return AdamWState(m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_state_specs(param_specs: Any) -> Any:
+    """Logical specs for the optimizer state (moments inherit param specs)."""
+    return AdamWState(m=param_specs, v=param_specs, count=())
+
+
+def lr_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))),
+                          tree)
+    return jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0)))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/scalars."""
+    name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    return not any(t in name for t in ("norm", "bias", "scale", "b_", "/b"))
+
+
+def adamw_update(params: Params, grads: Params, state: AdamWState,
+                 cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+    count = state.count + 1
+    lr = lr_schedule(cfg, count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    md = jnp.dtype(cfg.moment_dtype)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)
+    paths = [p for p, _ in flat_p[0]]
+
+    def upd(path, p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m = (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf)
+        v = (cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * gf * gf)
+        mh, vh = m / b1c, v / b2c
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+        return newp, m.astype(md), v.astype(md)
+
+    out = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(new_m, new_v, count), metrics

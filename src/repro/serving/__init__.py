@@ -1,0 +1,5 @@
+"""Serving: batched decode engine + hash-table prefix/KV-block cache."""
+from repro.serving.engine import Engine, Request, ServeConfig
+from repro.serving.prefix_cache import PrefixCache, chain_key
+
+__all__ = ["Engine", "Request", "ServeConfig", "PrefixCache", "chain_key"]

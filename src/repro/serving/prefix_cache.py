@@ -1,0 +1,143 @@
+"""KV prefix-block cache keyed by the paper's parallel hash table.
+
+vLLM-style prefix caching mapped onto the hash table's native workload: every
+decode step, ALL active request slots probe the table in one parallel batch
+(hot prefixes make many probes hit the same bucket — the partitioned
+baseline's worst case, and exactly where the XOR design's data-agnostic
+guarantee pays off).  Admission = INSERT, reuse accounting = UPDATE (the
+paper's insert/update fusion), eviction = DELETE.
+
+Key   = 64-bit rolling content hash of (parent_key, block_tokens).
+Value = (page_id, refcount) packed in two uint32 words.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
+                        QueryBatch, apply_step, init_table)
+
+__all__ = ["PrefixCache", "chain_key"]
+
+_MIX = np.uint64(0x9E3779B97F4A7C15)
+
+
+def chain_key(parent: int, block_tokens: np.ndarray) -> int:
+    """Rolling 64-bit hash chaining a block onto its prefix."""
+    h = np.uint64(parent)
+    for t in np.asarray(block_tokens, np.uint64):
+        h = np.uint64(((int(h) ^ int(t)) * int(_MIX)) & 0xFFFFFFFFFFFFFFFF)
+        h = np.uint64(int(h) ^ (int(h) >> 29))
+    return int(h)
+
+
+class PrefixCache:
+    """Hash-table-backed page table for KV blocks."""
+
+    def __init__(self, num_pages: int = 4096, block_tokens: int = 16,
+                 p: int = 8, seed: int = 0):
+        buckets = 1 << max(int(np.ceil(np.log2(max(num_pages, 2) * 2))), 4)
+        self.cfg = HashTableConfig(
+            p=p, k=p, buckets=buckets, slots=4, key_words=2, val_words=2,
+            replicate_reads=False, stagger_slots=True)
+        self.table = init_table(self.cfg, jax.random.key(seed))
+        self._step = jax.jit(apply_step)
+        self.block_tokens = block_tokens
+        self.free_pages: List[int] = list(range(num_pages - 1, -1, -1))
+        self.lru: Dict[int, int] = {}       # key64 -> last-touch counter
+        self.clock = 0
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------------ utils
+    def _run(self, ops: np.ndarray, keys64: np.ndarray,
+             vals: Optional[np.ndarray] = None):
+        n = len(ops)
+        N = self.cfg.queries_per_step
+        found = np.zeros(n, bool)
+        value = np.zeros((n, 2), np.uint32)
+        if vals is None:
+            vals = np.zeros((n, 2), np.uint32)
+        keys = np.zeros((n, 2), np.uint32)
+        keys[:, 0] = (keys64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        keys[:, 1] = (keys64 >> np.uint64(32)).astype(np.uint32)
+        for s in range(0, n, N):
+            sl = slice(s, min(s + N, n))
+            m = sl.stop - sl.start
+            op = np.zeros(N, np.int32); op[:m] = ops[sl]
+            kk = np.zeros((N, 2), np.uint32); kk[:m] = keys[sl]
+            vv = np.zeros((N, 2), np.uint32); vv[:m] = vals[sl]
+            self.table, res = self._step(
+                self.table, QueryBatch(jnp.array(op), jnp.array(kk),
+                                       jnp.array(vv)))
+            found[sl] = np.asarray(res.found)[:m]
+            value[sl] = np.asarray(res.value)[:m]
+        return found, value
+
+    # ---------------------------------------------------------------- lookup
+    def lookup_batch(self, keys64: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Parallel probe for a batch of block keys -> (hit_mask, page_ids)."""
+        keys64 = np.asarray(keys64, np.uint64)
+        found, value = self._run(np.full(len(keys64), OP_SEARCH, np.int32),
+                                 keys64)
+        self.hits += int(found.sum())
+        self.misses += int((~found).sum())
+        self.clock += 1
+        for k in keys64[found]:
+            self.lru[int(k)] = self.clock
+        return found, value[:, 0].astype(np.int64)
+
+    # ----------------------------------------------------------------- admit
+    def admit_batch(self, keys64: np.ndarray) -> np.ndarray:
+        """Insert blocks, allocating pages (evicting LRU if needed).
+        Returns page ids (-1 when allocation failed)."""
+        keys64 = np.asarray(keys64, np.uint64)
+        pages = np.full(len(keys64), -1, np.int64)
+        vals = np.zeros((len(keys64), 2), np.uint32)
+        todo = []
+
+        def flush():
+            # pending admits must hit the table before an eviction may need
+            # to delete one of them
+            if todo:
+                idx = np.array(todo)
+                self._run(np.full(len(idx), OP_INSERT, np.int32),
+                          keys64[idx], vals[idx])
+                todo.clear()
+
+        for i, k in enumerate(keys64):
+            if not self.free_pages:
+                flush()
+                self._evict_one()
+            if self.free_pages:
+                pg = self.free_pages.pop()
+                pages[i] = pg
+                vals[i, 0] = pg
+                vals[i, 1] = 1
+                todo.append(i)
+                self.clock += 1          # fresh admits must outrank old LRU
+                self.lru[int(k)] = self.clock
+        flush()
+        return pages
+
+    def _evict_one(self):
+        if not self.lru:
+            return
+        victim = min(self.lru, key=self.lru.get)
+        del self.lru[victim]
+        found, value = self._run(np.array([OP_SEARCH], np.int32),
+                                 np.array([victim], np.uint64))
+        if found[0]:
+            self.free_pages.append(int(value[0, 0]))
+            self._run(np.array([OP_DELETE], np.int32),
+                      np.array([victim], np.uint64))
+
+    # ------------------------------------------------------------------ stats
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0

@@ -1,0 +1,6 @@
+"""Training loop building blocks: jitted train step, straggler monitoring."""
+from repro.training.monitor import StepTimer, StragglerMonitor
+from repro.training.step import make_eval_step, make_train_step
+
+__all__ = ["make_train_step", "make_eval_step", "StepTimer",
+           "StragglerMonitor"]

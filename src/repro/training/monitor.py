@@ -1,0 +1,62 @@
+"""Step-time monitoring and straggler detection.
+
+At thousand-node scale the slowest participant sets the step time; the train
+loop uses this monitor to (a) keep an EMA of healthy step time, (b) flag
+outlier steps (straggler signature: step > threshold x EMA), and (c) expose
+counters the orchestrator can act on (preempt/replace the slow host,
+checkpoint early).  On one host this is necessarily observational — the
+*policy hooks* (on_straggler) are where a cluster deployment plugs in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+__all__ = ["StepTimer", "StragglerMonitor"]
+
+
+@dataclasses.dataclass
+class StepTimer:
+    ema: float = 0.0
+    decay: float = 0.9
+    count: int = 0
+    _t0: float = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.perf_counter() - self._t0
+        self.last = dt
+        self.ema = dt if self.count == 0 else \
+            self.decay * self.ema + (1 - self.decay) * dt
+        self.count += 1
+        return False
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.5, warmup_steps: int = 5,
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+        self.timer = StepTimer()
+        self.threshold = threshold
+        self.warmup = warmup_steps
+        self.events: List[dict] = []
+        self.on_straggler = on_straggler
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Feed a measured step time; returns True if flagged as straggler."""
+        t = self.timer
+        is_slow = (t.count >= self.warmup and t.ema > 0
+                   and dt > self.threshold * t.ema)
+        # update EMA with healthy samples only (stragglers would poison it)
+        if not is_slow:
+            t.ema = dt if t.count == 0 else t.decay * t.ema + (1 - t.decay) * dt
+        t.count += 1
+        if is_slow:
+            ev = {"step": step, "dt": dt, "ema": t.ema}
+            self.events.append(ev)
+            if self.on_straggler:
+                self.on_straggler(step, dt, t.ema)
+        return is_slow

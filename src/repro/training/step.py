@@ -1,0 +1,66 @@
+"""The jitted train step: loss -> grads -> clip -> AdamW, with optional
+gradient accumulation (scan over microbatches) and remat inherited from the
+model config.  Built to be pjit'd with NamedShardings derived from the logical
+spec trees (launch/train.py, launch/dryrun.py)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import lm_loss
+from repro.models.model_config import ModelConfig
+from repro.optim.adamw import (AdamWConfig, AdamWState, adamw_update,
+                               init_adamw)
+
+Params = Any
+
+
+def make_train_step(cfg: ModelConfig, ocfg: AdamWConfig,
+                    grad_accum: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch)
+
+    def train_step(params: Params, opt_state: AdamWState,
+                   batch: Dict[str, jnp.ndarray]):
+        if grad_accum > 1:
+            # split leading batch dim into microbatches and scan
+            def micro(carry, mb):
+                (g_acc, l_acc) = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss), metrics
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (grads, loss), metrics = jax.lax.scan(
+                micro, (zeros, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        params2, opt_state2, opt_metrics = adamw_update(
+            params, grads, opt_state, ocfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, metrics = lm_loss(params, cfg, batch)
+        return metrics
+    return eval_step

@@ -1,0 +1,17 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see the real single-CPU device; only launch/dryrun.py forces 512
+placeholder devices (and tests needing multiple devices spawn subprocesses)."""
+import numpy as np
+import pytest
+import jax
+
+
+@pytest.fixture()
+def rng():
+    # function-scoped: every test sees the same deterministic stream
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.key(0)

@@ -1,0 +1,57 @@
+"""Relaxed-consistency model: the window exists, is bounded (Theorem 1), and
+closes after p + t0 cycles."""
+import numpy as np
+import pytest
+
+from repro.core.consistency import (CycleSimConfig, sequential_oracle,
+                                    simulate_trace, theorem1_bound)
+
+OP_SEARCH, OP_INSERT, OP_DELETE = 1, 2, 3
+
+
+def test_window_exists_adversarial():
+    """insert immediately followed by search of the same key always lands in
+    the visibility window -> errors occur."""
+    trace = []
+    for i in range(100):
+        trace.append((OP_INSERT, i, i + 1))
+        trace.append((OP_SEARCH, i, 0))
+    n_err, n = simulate_trace(np.array(trace), CycleSimConfig(p=8, t0=5))
+    assert n_err > 0
+
+
+def test_window_closes_after_latency():
+    """a search issued >= p + t0 cycles after the insert must succeed."""
+    p, t0 = 4, 3
+    gap = (p + t0 + 1) * p            # queries, i.e. cycles * p
+    trace = [(OP_INSERT, 7, 99)] + [(0, 0, 0)] * gap + [(OP_SEARCH, 7, 0)]
+    n_err, _ = simulate_trace(np.array(trace), CycleSimConfig(p=p, t0=t0))
+    assert n_err == 0
+
+
+def test_uniform_traffic_satisfies_theorem1():
+    """P(n_err >= theta) <= (p^2 + p t0)/theta, measured over trials."""
+    p, t0 = 8, 5
+    rng = np.random.default_rng(0)
+    trials = 30
+    errs = []
+    for _ in range(trials):
+        trace = []
+        for _ in range(400):
+            op = rng.choice([OP_SEARCH, OP_INSERT, OP_DELETE],
+                            p=[0.6, 0.3, 0.1])
+            trace.append((op, int(rng.integers(1, 10 ** 6)), 1))
+        n_err, _ = simulate_trace(np.array(trace), CycleSimConfig(p=p, t0=t0))
+        errs.append(n_err)
+    errs = np.array(errs)
+    for theta in (8, 16, 32, 64):
+        emp = (errs >= theta).mean()
+        assert emp <= theorem1_bound(p, t0, theta) + 1e-9, (theta, emp)
+
+
+def test_oracle_semantics():
+    trace = np.array([(OP_INSERT, 1, 10), (OP_SEARCH, 1, 0),
+                      (OP_DELETE, 1, 0), (OP_SEARCH, 1, 0),
+                      (OP_DELETE, 1, 0)])
+    out = sequential_oracle(trace)
+    assert out == [True, 10, True, None, False]

@@ -1,0 +1,64 @@
+"""Multi-device hash table (shard_map) — runs in a subprocess with 8 fake CPU
+devices so the main test session keeps its single-device view."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import *
+    from repro.core.distributed import *
+
+    cfg = HashTableConfig(p=8, k=4, buckets=512, slots=4,
+                          replicate_reads=False, stagger_slots=True)
+    mesh = make_ht_mesh(8)
+    tab = init_distributed_table(cfg, jax.random.key(0))
+    step = make_distributed_step(mesh, cfg)
+    rng = np.random.default_rng(0)
+    n_local = 16; N = 8 * n_local
+    keys = rng.integers(1, 2**32, size=(N, 1), dtype=np.uint32)
+    vals = (keys + 7).astype(np.uint32)
+    ops = np.zeros(N, np.int32); ops[:4 * n_local] = OP_INSERT
+    tab, res = step(tab, jnp.array(ops), jnp.array(keys), jnp.array(vals))
+    assert np.asarray(res.ok)[:64].all()
+    # search everything from every device
+    tab, res2 = step(tab, jnp.full(N, OP_SEARCH, np.int32),
+                     jnp.array(keys), jnp.array(vals))
+    f = np.asarray(res2.found); v = np.asarray(res2.value)
+    assert f[:64].all(), 'all inserted keys visible on all devices'
+    assert (v[:64, 0] == vals[:64, 0]).all()
+    assert not f[64:].any()
+    # cross-PE update: device 3 updates a key device 0 inserted
+    ops4 = np.zeros(N, np.int32); ops4[3 * n_local] = OP_INSERT
+    k4 = keys.copy(); k4[3 * n_local] = keys[0]
+    v4 = vals.copy(); v4[3 * n_local] = 999999
+    tab, _ = step(tab, jnp.array(ops4), jnp.array(k4), jnp.array(v4))
+    tab, res5 = step(tab, jnp.full(N, OP_SEARCH, np.int32),
+                     jnp.array(keys), jnp.array(vals))
+    assert int(np.asarray(res5.value)[0, 0]) == 999999
+    # cross-PE delete from device 1
+    ops6 = np.zeros(N, np.int32); ops6[n_local] = OP_DELETE
+    k6 = keys.copy(); k6[n_local] = keys[0]
+    tab, _ = step(tab, jnp.array(ops6), jnp.array(k6), jnp.array(vals))
+    tab, res7 = step(tab, jnp.full(N, OP_SEARCH, np.int32),
+                     jnp.array(keys), jnp.array(vals))
+    assert not bool(np.asarray(res7.found)[0])
+    # NSQ on search-only device (port >= k) rejected
+    ops8 = np.zeros(N, np.int32); ops8[-1] = OP_INSERT
+    tab, res8 = step(tab, jnp.array(ops8), jnp.array(keys), jnp.array(vals))
+    assert not bool(np.asarray(res8.ok)[-1])
+    print('DISTRIBUTED_OK')
+""")
+
+
+def test_distributed_table_8dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert "DISTRIBUTED_OK" in r.stdout, r.stdout + r.stderr

@@ -1,0 +1,146 @@
+"""Core XOR hash table vs a python-dict oracle: S/I/U/D semantics, NSQ
+routing, table-full behaviour, both replica layouts."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
+                        QueryBatch, apply_step, init_table, memory_bytes,
+                        run_stream, schedule_queries)
+
+
+def run_trace(cfg, trace, seed=0):
+    """trace: list of (op, key:int, val:int).  Returns ordered results."""
+    tab = init_table(cfg, jax.random.key(seed))
+    op = np.array([t[0] for t in trace], np.int32)
+    kw = np.zeros((len(trace), cfg.key_words), np.uint32)
+    kw[:, 0] = [t[1] & 0xFFFFFFFF for t in trace]
+    if cfg.key_words > 1:
+        kw[:, 1] = [t[1] >> 32 for t in trace]
+    vw = np.zeros((len(trace), cfg.val_words), np.uint32)
+    vw[:, 0] = [t[2] & 0xFFFFFFFF for t in trace]
+    ops, keys, vals, placement = schedule_queries(op, kw, vw, cfg,
+                                                  return_placement=True)
+    tab, res = run_stream(tab, jnp.array(ops), jnp.array(keys),
+                          jnp.array(vals))
+    found = np.asarray(res.found)
+    value = np.asarray(res.value)
+    ok = np.asarray(res.ok)
+    out = []
+    for (t, lane) in placement:
+        out.append(dict(found=bool(found[t, lane]),
+                        value=int(value[t, lane, 0]),
+                        ok=bool(ok[t, lane])))
+    return tab, out
+
+
+@pytest.mark.parametrize("replicate", [True, False])
+@pytest.mark.parametrize("kw", [1, 2])
+def test_insert_search_update_delete(replicate, kw):
+    cfg = HashTableConfig(p=4, k=2, buckets=256, slots=4, key_words=kw,
+                          val_words=1, replicate_reads=replicate)
+    trace = []
+    keys = [(i * 2654435761) % (1 << 32) | 1 for i in range(24)]
+    for i, k in enumerate(keys):
+        trace.append((OP_INSERT, k, 1000 + i))
+    for i, k in enumerate(keys):
+        trace.append((OP_SEARCH, k, 0))
+    # update half through a different schedule position (different port)
+    for i, k in enumerate(keys[:12]):
+        trace.append((OP_INSERT, k, 2000 + i))
+    for i, k in enumerate(keys):
+        trace.append((OP_SEARCH, k, 0))
+    for k in keys[::3]:
+        trace.append((OP_DELETE, k, 0))
+    for i, k in enumerate(keys):
+        trace.append((OP_SEARCH, k, 0))
+
+    _, out = run_trace(cfg, trace)
+    n = len(keys)
+    i = 0
+    for j in range(n):                       # inserts ok
+        assert out[i]["ok"], j
+        i += 1
+    for j in range(n):                       # all found with v1
+        assert out[i]["found"] and out[i]["value"] == 1000 + j
+        i += 1
+    i += 12                                   # updates
+    for j in range(n):                       # first 12 updated
+        expect = 2000 + j if j < 12 else 1000 + j
+        assert out[i]["found"] and out[i]["value"] == expect, (j, out[i])
+        i += 1
+    i += len(keys[::3])                      # deletes
+    deleted = set(keys[::3])
+    for j in range(n):
+        if keys[j] in deleted:
+            assert not out[i]["found"], j
+        else:
+            assert out[i]["found"], j
+        i += 1
+
+
+def test_search_missing_returns_none():
+    cfg = HashTableConfig(p=2, k=2, buckets=64, slots=2)
+    _, out = run_trace(cfg, [(OP_SEARCH, 12345, 0), (OP_SEARCH, 999, 0)])
+    assert not out[0]["found"] and out[0]["value"] == 0
+    assert not out[1]["found"]
+
+
+def test_bucket_overflow_rejected():
+    # 1 bucket x 2 slots: the 3rd distinct key cannot be inserted.
+    # (stagger_slots so the two same-step inserts take distinct slots.)
+    cfg = HashTableConfig(p=2, k=2, buckets=1, slots=2, stagger_slots=True)
+    trace = [(OP_INSERT, 1, 10), (OP_INSERT, 2, 20), (OP_INSERT, 3, 30),
+             (OP_SEARCH, 3, 0)]
+    _, out = run_trace(cfg, trace)
+    assert out[0]["ok"] and out[1]["ok"]
+    assert not out[2]["ok"], "no open slot -> insert must be rejected"
+    assert not out[3]["found"]
+
+
+def test_nsq_on_search_only_pe_rejected():
+    cfg = HashTableConfig(p=4, k=2, buckets=64, slots=2)
+    tab = init_table(cfg, jax.random.key(0))
+    op = np.zeros(4, np.int32)
+    op[3] = OP_INSERT                        # lane 3 -> PE 3 >= k
+    batch = QueryBatch(jnp.array(op),
+                       jnp.array(np.full((4, 1), 7, np.uint32)),
+                       jnp.array(np.full((4, 1), 9, np.uint32)))
+    tab, res = apply_step(tab, batch)
+    assert not bool(res.ok[3])
+    # and nothing was written
+    op2 = np.array([OP_SEARCH, 0, 0, 0], np.int32)
+    _, res2 = apply_step(tab, QueryBatch(jnp.array(op2),
+                                         jnp.array(np.full((4, 1), 7, np.uint32)),
+                                         jnp.zeros((4, 1), jnp.uint32)))
+    assert not bool(res2.found[0])
+
+
+def test_plaintext_roundtrip_and_memory_model():
+    cfg = HashTableConfig(p=2, k=2, buckets=64, slots=2)
+    tab = init_table(cfg, jax.random.key(0))
+    assert tab.memory_bytes == memory_bytes(cfg)
+    trace = [(OP_INSERT, 11, 101), (OP_INSERT, 22, 202)]
+    tab, _ = run_trace(cfg, trace)
+
+
+def test_compact_vs_replicated_equivalence():
+    """The compact (TPU) layout must answer queries identically."""
+    trace = []
+    keys = [(i * 40503) % 100000 + 1 for i in range(40)]
+    for i, k in enumerate(keys):
+        trace.append((OP_INSERT, k, i + 1))
+    for k in keys:
+        trace.append((OP_SEARCH, k, 0))
+    for k in keys[::2]:
+        trace.append((OP_DELETE, k, 0))
+    for k in keys:
+        trace.append((OP_SEARCH, k, 0))
+    cfg_r = HashTableConfig(p=4, k=4, buckets=512, slots=4,
+                            replicate_reads=True)
+    cfg_c = HashTableConfig(p=4, k=4, buckets=512, slots=4,
+                            replicate_reads=False)
+    _, out_r = run_trace(cfg_r, trace)
+    _, out_c = run_trace(cfg_c, trace)
+    assert out_r == out_c

@@ -1,0 +1,97 @@
+"""Hypothesis property tests: the hash table tracks a dict oracle for ANY
+op sequence (scheduled within the NSQ contract), any config in range."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
+                        run_stream, schedule_queries, init_table)
+
+KEYS = st.integers(min_value=1, max_value=50)     # small space -> collisions
+
+
+@st.composite
+def traces(draw):
+    n = draw(st.integers(min_value=1, max_value=60))
+    out = []
+    for _ in range(n):
+        op = draw(st.sampled_from([OP_SEARCH, OP_INSERT, OP_DELETE]))
+        out.append((op, draw(KEYS), draw(st.integers(1, 2 ** 31))))
+    return out
+
+
+def oracle(trace):
+    d, res = {}, []
+    for op, k, v in trace:
+        if op == OP_SEARCH:
+            res.append(("s", d.get(k)))
+        elif op == OP_INSERT:
+            d[k] = v
+            res.append(("i", True))
+        else:
+            res.append(("d", d.pop(k, None) is not None))
+    return res
+
+
+@settings(max_examples=25, deadline=None)
+@given(traces(), st.sampled_from([(2, 1), (4, 2), (4, 4)]),
+       st.booleans())
+def test_matches_dict_oracle(trace, pk, replicate):
+    """One query per step-slice in program order == sequential semantics:
+    with queries_per_pe=1 and the router preserving order, every query sees
+    all earlier mutations (visibility lag only bites same-step queries, and
+    the oracle trace here is replayed one query per step)."""
+    p, k = pk
+    cfg = HashTableConfig(p=p, k=k, buckets=64, slots=8,
+                          replicate_reads=replicate)
+    tab = init_table(cfg, jax.random.key(1))
+    exp = oracle(trace)
+    # one query per step => strictly sequential (worst-case schedule)
+    N = cfg.queries_per_step
+    T = len(trace)
+    ops = np.zeros((T, N), np.int32)
+    keys = np.zeros((T, N, 1), np.uint32)
+    vals = np.zeros((T, N, 1), np.uint32)
+    for t, (op, kk, vv) in enumerate(trace):
+        lane = 0 if op != OP_SEARCH else min(k, N - 1)
+        ops[t, lane] = op
+        keys[t, lane, 0] = kk
+        vals[t, lane, 0] = vv
+    tab, res = run_stream(tab, jnp.array(ops), jnp.array(keys),
+                          jnp.array(vals))
+    found = np.asarray(res.found)
+    value = np.asarray(res.value)
+    ok = np.asarray(res.ok)
+    for t, (op, kk, vv) in enumerate(trace):
+        lane = 0 if op != OP_SEARCH else min(k, N - 1)
+        kind, expect = exp[t]
+        if kind == "s":
+            if expect is None:
+                assert not found[t, lane], (t, trace)
+            else:
+                assert found[t, lane] and value[t, lane, 0] == expect % (2**32), \
+                    (t, trace)
+        elif kind == "d":
+            assert bool(ok[t, lane]) == expect, (t, trace)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(1, 10 ** 9), min_size=1, max_size=50,
+                unique=True))
+def test_insert_then_find_all(keys):
+    cfg = HashTableConfig(p=4, k=4, buckets=256, slots=8,
+                          replicate_reads=False, stagger_slots=True)
+    tab = init_table(cfg, jax.random.key(0))
+    n = len(keys)
+    op = np.full(n, OP_INSERT, np.int32)
+    kw = np.array(keys, np.uint64)[:, None].astype(np.uint32)
+    vw = (np.array(keys, np.uint64)[:, None] % 65521).astype(np.uint32) + 1
+    ops, kk, vv = schedule_queries(op, kw, vw, cfg)
+    tab, _ = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv))
+    op2 = np.full(n, OP_SEARCH, np.int32)
+    ops, kk, vv0 = schedule_queries(op2, kw, np.zeros_like(vw), cfg)
+    tab, res = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv0))
+    found = np.asarray(res.found)[np.asarray(ops) != 0]
+    assert found.all()

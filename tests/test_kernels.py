@@ -1,0 +1,98 @@
+"""Per-kernel Pallas (interpret=True) vs pure-jnp oracle: bit-exact across
+shape/dtype sweeps (all integer tensors)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (HashTableConfig, OP_INSERT, init_table, run_stream,
+                        schedule_queries)
+from repro.kernels import ref
+from repro.kernels.h3_hash import h3_hash_pallas
+from repro.kernels.xor_probe import xor_probe_pallas
+from repro.kernels.ops import h3_hash as h3_op, xor_probe as probe_op
+
+
+@pytest.mark.parametrize("W", [1, 2, 4])
+@pytest.mark.parametrize("N,block", [(256, 64), (1024, 256), (512, 512)])
+@pytest.mark.parametrize("J", [6, 14, 17])
+def test_h3_kernel_sweep(W, N, block, J, rng):
+    q = jnp.array(rng.integers(0, 2 ** 32, size=(J, W), dtype=np.uint32))
+    keys = jnp.array(rng.integers(0, 2 ** 32, size=(W, N), dtype=np.uint32))
+    out_k = h3_hash_pallas(keys, q, block_n=block)
+    out_r = ref.h3_hash_ref(keys, q)
+    assert out_k.dtype == jnp.uint32
+    assert (np.asarray(out_k) == np.asarray(out_r)).all()
+    assert int(out_r.max()) < 2 ** J
+
+
+def _populated_table(rng, k, buckets, slots, kw, vw, n_items):
+    cfg = HashTableConfig(p=k, k=k, buckets=buckets, slots=slots,
+                          key_words=kw, val_words=vw, replicate_reads=False,
+                          stagger_slots=True)
+    tab = init_table(cfg, jax.random.key(0))
+    op = np.full(n_items, OP_INSERT, np.int32)
+    keys = rng.integers(1, 2 ** 32, size=(n_items, kw), dtype=np.uint32)
+    vals = rng.integers(1, 2 ** 32, size=(n_items, vw), dtype=np.uint32)
+    ops, kk, vv, plc = schedule_queries(op, keys, vals, cfg,
+                                        return_placement=True)
+    tab, res = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv))
+    ok = np.asarray(res.ok)[plc[:, 0], plc[:, 1]]   # which inserts landed
+    # same-step same-bucket inserts are inside the paper's relaxed-consistency
+    # window (bounded errors) — exclude them from exact-recall assertions
+    from repro.core.hashing import h3_hash as h3core
+    b = np.asarray(h3core(jnp.array(keys), tab.q_masks))
+    clean = np.ones(n_items, bool)
+    for step in np.unique(plc[:, 0]):
+        idx = np.where(plc[:, 0] == step)[0]
+        bu, cnt = np.unique(b[idx], return_counts=True)
+        dup = set(bu[cnt > 1])
+        for i in idx:
+            if b[i] in dup:
+                clean[i] = False
+    return cfg, tab, keys, ok & clean
+
+
+@pytest.mark.parametrize("k,slots", [(1, 2), (2, 2), (4, 4), (8, 2)])
+@pytest.mark.parametrize("kw,vw", [(1, 1), (2, 2), (4, 1)])
+def test_xor_probe_kernel_sweep(k, slots, kw, vw, rng):
+    cfg, tab, ins_keys, ins_ok = _populated_table(rng, k, 128, slots, kw, vw,
+                                                  64)
+    N = 256
+    qkeys = np.zeros((N, kw), np.uint32)
+    qkeys[:64] = ins_keys                         # hits
+    qkeys[64:] = rng.integers(1, 2 ** 32, size=(N - 64, kw), dtype=np.uint32)
+    from repro.core.hashing import h3_hash as h3core
+    bucket = h3core(jnp.array(qkeys), tab.q_masks)
+    port = jnp.array(rng.integers(0, k, N, dtype=np.int32))
+    args = (bucket, port, jnp.array(qkeys), tab.store_keys[0],
+            tab.store_vals[0], tab.store_valid[0])
+    outs_k = xor_probe_pallas(*args, block_q=64)
+    outs_r = ref.xor_probe_ref(*args)
+    names = ["found", "mslot", "oslot", "hopen", "value", "remk", "remv",
+             "remb"]
+    for nm, a, b in zip(names, outs_k, outs_r):
+        assert (np.asarray(a) == np.asarray(b)).all(), nm
+    # every insert that landed (bucket not overflowed) must be found
+    assert np.asarray(outs_k[0])[:64][ins_ok].all(), \
+        "inserted keys must be found"
+    assert ins_ok.sum() >= 48, "population sanity"
+
+
+def test_ops_wrappers_fallback(rng):
+    """ops.py falls back to ref for non-divisible batch sizes."""
+    q = jnp.array(rng.integers(0, 2 ** 32, size=(8, 1), dtype=np.uint32))
+    keys = jnp.array(rng.integers(0, 2 ** 32, size=(77, 1), dtype=np.uint32))
+    out = h3_op(keys, q)                         # 77 not divisible
+    assert (np.asarray(out) == np.asarray(
+        ref.h3_hash_ref(keys.T, q))).all()
+
+
+def test_h3_distribution_quality(rng):
+    """H3 must spread keys ~uniformly (chi-square sanity)."""
+    q = jnp.array(rng.integers(0, 2 ** 32, size=(8, 1), dtype=np.uint32))
+    keys = jnp.array(np.arange(1, 65537, dtype=np.uint32)[None, :])
+    idx = np.asarray(h3_hash_pallas(keys, q, block_n=1024))
+    counts = np.bincount(idx, minlength=256)
+    # 65536 keys over 256 buckets: mean 256; allow generous band
+    assert counts.min() > 150 and counts.max() < 400

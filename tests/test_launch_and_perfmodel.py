@@ -1,0 +1,62 @@
+"""Launch-layer units: the 40-cell matrix, input specs, perf models."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.core import HashTableConfig
+from repro.core.perfmodel import (FPGA_U250, fpga_latency_ns,
+                                  fpga_throughput_mops, table_step_bytes,
+                                  tpu_modeled_mops)
+from repro.launch.shapes import LONG_OK, SHAPES, cells, input_specs
+
+
+def test_cell_matrix_is_40_with_7_skips():
+    all_cells = list(cells())
+    assert len(all_cells) == 40
+    skipped = [c for c in all_cells if c[2]]
+    assert len(skipped) == 7
+    assert all(s == "long_500k" for _, s, _ in skipped)
+    assert {a for a, _, sk in all_cells if sk} == \
+        set(a for a in ARCHS if a not in LONG_OK)
+
+
+@pytest.mark.parametrize("arch", ["gemma3_1b", "pixtral_12b", "whisper_tiny"])
+def test_input_specs_shapes(arch):
+    cfg = get_config(arch)
+    sds, logical = input_specs(cfg, "train_4k")
+    B, S = SHAPES["train_4k"]["batch"], SHAPES["train_4k"]["seq"]
+    if cfg.frontend == "vision_patches":
+        assert sds["tokens"].shape == (B, S - cfg.num_patches)
+        assert sds["patches"].shape == (B, cfg.num_patches, cfg.d_model)
+    else:
+        assert sds["tokens"].shape == (B, S)
+    if cfg.frontend == "audio_frames":
+        assert sds["frames"].shape == (B, cfg.encoder_seq, cfg.d_model)
+    tok, pos = input_specs(cfg, "decode_32k")[0]
+    assert tok.shape == (SHAPES["decode_32k"]["batch"], 1)
+    assert pos.shape == ()
+
+
+def test_fpga_model_calibration():
+    # paper: 14 ns search / 54 ns insert at 370 MHz with 16 PEs
+    assert fpga_latency_ns("search", 16) == pytest.approx(13.5, abs=1.0)
+    assert fpga_latency_ns("insert", 16) == pytest.approx(54.0, abs=1.0)
+    # paper: 5926 MOPS at 16 PEs 370 MHz
+    assert fpga_throughput_mops(16, 370.0) == pytest.approx(5920, rel=0.01)
+
+
+def test_tpu_model_monotonic_in_k():
+    """Bandwidth-bound MOPS must fall as k (gathered stores) grows — the
+    TPU-native reading of the NSQ-ratio optimization."""
+    mops = [tpu_modeled_mops(HashTableConfig(
+        p=16, k=k, buckets=1 << 14, slots=4, replicate_reads=False))
+        for k in (1, 2, 4, 8, 16)]
+    assert all(a > b for a, b in zip(mops, mops[1:]))
+
+
+def test_step_bytes_scales():
+    c1 = HashTableConfig(p=8, k=2, buckets=256, slots=2)
+    c2 = HashTableConfig(p=8, k=8, buckets=256, slots=2)
+    assert table_step_bytes(c2) > table_step_bytes(c1)

@@ -1,0 +1,94 @@
+"""Prefill+decode must reproduce the full-sequence forward exactly (fp32,
+capacity drops disabled) for every block family."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import (init_cache, init_lm, lm_decode_step, lm_logits,
+                             lm_prefill)
+from repro.models.model_config import ModelConfig
+
+S, B = 12, 2
+
+
+def check(cfg, extra=None, atol=2e-5):
+    params, _ = init_lm(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.array(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.ones((B, S), jnp.int32)}
+    if extra:
+        batch.update(extra)
+    logits_full, _, _ = lm_logits(params, cfg, batch)
+    off = extra["patches"].shape[1] if extra and "patches" in extra else 0
+    cache, _ = init_cache(cfg, B, S + off + 4)
+    b1 = dict(batch)
+    b1["tokens"] = toks[:, :S - 1]
+    lg_pre, cache = lm_prefill(params, cfg, b1, cache)
+    lg_dec, cache = lm_decode_step(params, cfg, cache, toks[:, S - 1:S],
+                                   off + S - 1)
+    np.testing.assert_allclose(np.asarray(logits_full[:, off + S - 2]),
+                               np.asarray(lg_pre[:, 0]), atol=atol, rtol=0)
+    np.testing.assert_allclose(np.asarray(logits_full[:, off + S - 1]),
+                               np.asarray(lg_dec[:, 0]), atol=atol, rtol=0)
+
+
+def test_dense_gqa():
+    check(ModelConfig(n_layers=3, d_model=32, n_heads=4, n_kv_heads=2,
+                      d_ff=64, vocab_size=64, dtype="float32"))
+
+
+def test_gemma_local_global_qknorm():
+    check(ModelConfig(name="gemma-tiny", n_layers=6, d_model=32, n_heads=4,
+                      n_kv_heads=1, d_ff=64, vocab_size=64,
+                      attn_pattern=("local",) * 5 + ("global",),
+                      sliding_window=4, qk_norm=True, logit_softcap=30.0,
+                      dtype="float32"))
+
+
+def test_hybrid_jamba_moe():
+    check(ModelConfig(name="hyb", n_layers=8, d_model=32, n_heads=4,
+                      n_kv_heads=2, d_ff=64, vocab_size=64,
+                      block_pattern=("mamba", "mamba", "mamba", "attn"),
+                      moe_period=2, n_experts=4, experts_per_token=2,
+                      moe_d_ff=32, capacity_factor=100.0, ssm_chunk=4,
+                      dtype="float32"))
+
+
+def test_xlstm():
+    check(ModelConfig(name="xl", n_layers=4, d_model=32, n_heads=4,
+                      n_kv_heads=4, d_ff=0,
+                      block_pattern=("slstm", "mlstm", "mlstm", "mlstm"),
+                      vocab_size=64, ssm_chunk=4, dtype="float32"))
+
+
+def test_mla_deepseek():
+    check(ModelConfig(name="deepseek-tiny", n_layers=3, d_model=32, n_heads=4,
+                      n_kv_heads=4, d_ff=64, vocab_size=64, use_mla=True,
+                      q_lora_rank=16, kv_lora_rank=16, qk_rope_head_dim=8,
+                      qk_nope_head_dim=8, v_head_dim=8, moe_period=1,
+                      first_dense_layers=1, n_experts=4, experts_per_token=2,
+                      n_shared_experts=1, moe_d_ff=32, capacity_factor=100.0,
+                      dtype="float32"), atol=5e-5)
+
+
+def test_whisper_encdec():
+    cfg = ModelConfig(name="whspr", n_layers=2, d_model=32, n_heads=4,
+                      n_kv_heads=4, d_ff=64, vocab_size=64,
+                      is_encoder_decoder=True, n_encoder_layers=2,
+                      encoder_seq=16, frontend="audio_frames",
+                      norm_type="layernorm", act="gelu", use_bias=True,
+                      dtype="float32")
+    rng = np.random.default_rng(1)
+    frames = jnp.array(rng.normal(size=(B, 16, 32)), jnp.float32)
+    check(cfg, extra={"frames": frames})
+
+
+def test_vlm_patches():
+    cfg = ModelConfig(name="pix", n_layers=2, d_model=32, n_heads=4,
+                      n_kv_heads=2, d_ff=64, vocab_size=64,
+                      frontend="vision_patches", num_patches=6,
+                      dtype="float32")
+    rng = np.random.default_rng(1)
+    patches = jnp.array(rng.normal(size=(B, 6, 32)), jnp.float32)
+    check(cfg, extra={"patches": patches})

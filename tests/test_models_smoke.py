@@ -1,0 +1,80 @@
+"""Per-architecture smoke tests (deliverable f): every one of the 10 assigned
+archs instantiates its REDUCED config and runs one forward + one train step on
+CPU, asserting output shapes and no NaNs."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models.lm import init_lm, lm_logits, lm_loss
+from repro.models.stack import make_plan
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+
+B, S = 2, 16
+
+
+def _batch(cfg):
+    return {k: jnp.asarray(v) for k, v in
+            make_batch(cfg, DataConfig(batch=B, seq=S), 0).items()}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = get_smoke(arch)
+    params, specs = init_lm(cfg, jax.random.key(0))
+    batch = _batch(cfg)
+    logits, aux, h = lm_logits(params, cfg, batch)
+    S_eff = S + (cfg.num_patches if cfg.frontend == "vision_patches" else 0)
+    assert logits.shape == (B, S_eff, cfg.vocab_size)
+    assert h.shape == (B, S_eff, cfg.d_model)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    params, specs = init_lm(cfg, jax.random.key(0))
+    ocfg = AdamWConfig(lr=1e-3, total_steps=10, warmup_steps=1)
+    opt = init_adamw(params, ocfg)
+    batch = _batch(cfg)
+
+    def loss_fn(p):
+        return lm_loss(p, cfg, batch)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss)), arch
+    gn = jax.tree_util.tree_reduce(
+        lambda a, g: a + float(jnp.abs(g.astype(jnp.float32)).sum()), grads, 0.0)
+    assert np.isfinite(gn) and gn > 0, arch
+    params2, opt2, metrics = adamw_update(params, grads, opt, ocfg)
+    # params actually moved
+    moved = sum(jax.tree_util.tree_leaves(jax.tree.map(
+        lambda x, y: float(jnp.abs(x.astype(jnp.float32)
+                                   - y.astype(jnp.float32)).sum()),
+        params, params2)))
+    assert moved > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_plan_and_counts(arch):
+    """FULL configs: structural checks only (no allocation) — plan folds the
+    depth, and eval_shape'd init matches the published parameter count."""
+    cfg = get_config(arch)
+    plan = make_plan(cfg)
+    assert plan.head + plan.period * plan.repeats + plan.tail == cfg.n_layers
+    # scanned HLO body stays small: period is tiny relative to depth
+    assert plan.period <= 8
+    box = {}
+
+    def _init():
+        p, s = init_lm(cfg, jax.random.key(0))
+        box["s"] = s
+        return p
+
+    sds = jax.eval_shape(_init)
+    total = sum(int(np.prod(l.shape))
+                for l in jax.tree_util.tree_leaves(sds))
+    expect = cfg.param_count()
+    assert abs(total - expect) / expect < 0.35, (arch, total, expect)
