@@ -1,0 +1,68 @@
+"""Engine backend comparison: jnp vs pallas MOPS at p in {4, 8, 16}.
+
+Tracks the perf trajectory of the kernel path against the jnp oracle on the
+same mixed 50/50 search/insert stimulus as fig5.  On this host the Pallas
+kernels run under interpret mode (a correctness harness, not a fast path), so
+absolute pallas numbers are only meaningful on TPU — the point of the file is
+that the number exists and is tracked per commit.  Emits ``BENCH_backend.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench, row
+from repro.core import (HashTableConfig, OP_INSERT, OP_SEARCH, init_table,
+                        run_stream)
+
+PS = (4, 8, 16)
+STEPS = 8
+QPP = 8            # modest width: interpret-mode pallas must stay tractable
+ITERS = 3
+
+
+def run_one(p: int, backend: str, qpp: int = QPP, steps: int = STEPS):
+    cfg = HashTableConfig(p=p, k=p, buckets=1 << 12, slots=4,
+                          replicate_reads=False, stagger_slots=True,
+                          queries_per_pe=qpp, backend=backend)
+    tab = init_table(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    N = cfg.queries_per_step
+    ops = rng.choice([OP_SEARCH, OP_INSERT], size=(steps, N)).astype(np.int32)
+    keys = rng.integers(1, 2 ** 32, size=(steps, N, 1), dtype=np.uint32)
+    vals = rng.integers(1, 2 ** 32, size=(steps, N, 1), dtype=np.uint32)
+    ops_j, keys_j, vals_j = jnp.array(ops), jnp.array(keys), jnp.array(vals)
+    fn = jax.jit(lambda t: run_stream(t, ops_j, keys_j, vals_j))
+    us = bench(lambda: fn(tab), iters=ITERS, warmup=1)
+    return steps * N / us          # MOPS (queries per microsecond)
+
+
+def main() -> None:
+    results = {"host_backend": jax.default_backend(),
+               "interpret_mode": jax.default_backend() != "tpu",
+               "qpp": QPP, "steps": STEPS, "rows": []}
+    for p in PS:
+        mops = {}
+        for backend in ("jnp", "pallas"):
+            mops[backend] = run_one(p, backend)
+        ratio = mops["pallas"] / mops["jnp"]
+        results["rows"].append({"p": p, "mops_jnp": mops["jnp"],
+                                "mops_pallas": mops["pallas"],
+                                "pallas_over_jnp": ratio})
+        row(f"backend_compare_p{p}", 0.0,
+            f"jnp_MOPS={mops['jnp']:.2f};pallas_MOPS={mops['pallas']:.2f};"
+            f"ratio={ratio:.3f}")
+    out = os.path.join(os.path.dirname(__file__) or ".", "..",
+                       "BENCH_backend.json")
+    out = os.path.normpath(out)
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,15 +7,15 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (fig4_memory, fig5_throughput, fig6_capacity,
-                            fig7_nsq_ratio, fig10_latency, ht_hillclimb,
-                            table12_resources, table3_sota)
+    from benchmarks import (backend_compare, fig4_memory, fig5_throughput,
+                            fig6_capacity, fig7_nsq_ratio, fig10_latency,
+                            ht_hillclimb, table12_resources, table3_sota)
     from benchmarks import roofline
     mods = [("fig4", fig4_memory), ("fig5", fig5_throughput),
             ("fig6", fig6_capacity), ("fig7", fig7_nsq_ratio),
             ("table12", table12_resources), ("table3", table3_sota),
             ("fig10", fig10_latency), ("ht_hillclimb", ht_hillclimb),
-            ("roofline", roofline)]
+            ("backend_compare", backend_compare), ("roofline", roofline)]
     failures = 0
     for name, mod in mods:
         try:

@@ -2,6 +2,8 @@
 
 Public API:
   HashTableConfig, init_table, apply_step, run_stream, schedule_queries
+  engine                         — backend-pluggable probe/commit query engine
+                                   (jnp oracle + Pallas kernels; DESIGN.md §3)
   XorMemory                      — generic n-write-port XOR memory
   h3_hash, make_h3_params        — Class-H3 universal hashing
   distributed                    — shard_map multi-device replica table
@@ -30,6 +32,8 @@ from repro.core.hash_table import (
 )
 from repro.core.hashing import h3_hash, make_h3_params
 from repro.core.xor_memory import XorMemory, xor_reduce
+from repro.core import engine
+from repro.core.engine import MutationPlan, ProbeResult
 
 __all__ = [
     "HashTableConfig", "memory_bytes", "sram_blocks_ours", "sram_blocks_laforest",
@@ -37,4 +41,5 @@ __all__ = [
     "QueryBatch", "StepResults", "XorHashTable",
     "apply_step", "init_table", "run_stream", "schedule_queries",
     "h3_hash", "make_h3_params", "XorMemory", "xor_reduce",
+    "engine", "ProbeResult", "MutationPlan",
 ]

@@ -38,10 +38,18 @@ class HashTableConfig:
                                     # (j mod n_open)-th open slot, so same-step
                                     # same-bucket inserts from distinct ports
                                     # never collide while slots remain (§Perf)
+    backend: str = "auto"           # query-engine backend (repro.core.engine):
+                                    # "jnp" | "pallas" | "auto" (pallas on TPU,
+                                    # jnp elsewhere; pallas auto-falls-back to
+                                    # jnp when a replica exceeds the VMEM
+                                    # table budget)
 
     def __post_init__(self):
         if self.k < 1 or self.k > self.p:
             raise ValueError(f"need 1 <= k <= p, got k={self.k} p={self.p}")
+        if self.backend not in ("auto", "jnp", "pallas"):
+            raise ValueError(f"backend must be auto|jnp|pallas, "
+                             f"got {self.backend!r}")
         if self.buckets & (self.buckets - 1):
             raise ValueError(f"buckets must be a power of two, got {self.buckets}")
         if self.slots < 1:

@@ -19,7 +19,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-__all__ = ["CycleSimConfig", "simulate_trace", "theorem1_bound", "sequential_oracle"]
+__all__ = ["CycleSimConfig", "simulate_trace", "theorem1_bound",
+           "sequential_oracle", "measure_engine_errors"]
 
 OP_SEARCH, OP_INSERT, OP_DELETE = 1, 2, 3
 
@@ -103,3 +104,56 @@ def simulate_trace(trace: np.ndarray, cfg: CycleSimConfig) -> Tuple[int, int]:
 def theorem1_bound(p: int, t0: int, theta: float) -> float:
     """P(n_err >= theta) <= (p^2 + p*t0)/theta  (paper Theorem 1)."""
     return min(1.0, (p * p + p * t0) / max(theta, 1e-9))
+
+
+def measure_engine_errors(trace: np.ndarray, cfg, seed: int = 0,
+                          backend: str | None = None):
+    """Replay a trace through the JAX query engine and count errors vs the
+    sequential oracle — the step-level analogue of :func:`simulate_trace`.
+
+    The engine's visibility lag is exactly one step (all encodings against the
+    pre-step snapshot, all commits at step end), so a trace replayed one full
+    step of ``N = p * queries_per_pe`` queries at a time measures the same
+    relaxed-consistency window Theorem 1 bounds on the FPGA (DESIGN.md §2).
+    ``backend`` overrides ``cfg.backend`` ("jnp"/"pallas"); any engine backend
+    must report identical error counts — they share one semantics.
+
+    trace: int array [T, 3] of (op, key, val), packed positionally (query i ->
+    lane i % N), so use k == p configs unless the trace is pre-routed.
+    Returns (n_err, n_queries).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import engine as _engine
+    from repro.core.hash_table import QueryBatch, init_table
+    from repro.core.hashing import key_to_words
+
+    trace = np.asarray(trace)
+    oracle = sequential_oracle(trace)
+    N = cfg.queries_per_step
+    T = (len(trace) + N - 1) // N
+    tab = init_table(cfg, jax.random.key(seed))
+    step_fn = jax.jit(lambda t, b: _engine.step(t, b, backend=backend))
+    n_err = 0
+    for s in range(T):
+        sl = trace[s * N:(s + 1) * N]
+        m = len(sl)
+        op = np.zeros(N, np.int32); op[:m] = sl[:, 0]
+        key = np.zeros((N, cfg.key_words), np.uint32)
+        key[:m] = key_to_words(sl[:, 1], cfg.key_words)
+        val = np.zeros((N, cfg.val_words), np.uint32)
+        val[:m, 0] = sl[:, 2] & 0xFFFFFFFF
+        tab, res = step_fn(tab, QueryBatch(jnp.array(op), jnp.array(key),
+                                           jnp.array(val)))
+        found = np.asarray(res.found)[:m]
+        value = np.asarray(res.value)[:m, 0]
+        ok = np.asarray(res.ok)[:m]
+        for i in range(m):
+            o, exp = sl[i, 0], oracle[s * N + i]
+            if o == OP_SEARCH:
+                got = int(value[i]) if found[i] else None
+                want = exp if exp is None else exp & 0xFFFFFFFF
+                n_err += got != want
+            elif o == OP_DELETE:
+                n_err += bool(ok[i]) != exp
+    return n_err, len(trace)

@@ -25,20 +25,14 @@ Partial-XOR-Store-(M) write machinery in the paper's Fig 3(b).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import engine as _engine
 from repro.core.config import HashTableConfig
-from repro.core.hash_table import (OP_DELETE, OP_INSERT, OP_SEARCH,
-                                   QueryBatch, StepResults, XorHashTable,
+from repro.core.hash_table import (QueryBatch, StepResults, XorHashTable,
                                    init_table)
-from repro.core.hashing import h3_hash
-from repro.core.xor_memory import xor_reduce
 
 __all__ = ["make_ht_mesh", "init_distributed_table", "make_distributed_step"]
 
@@ -58,103 +52,31 @@ def init_distributed_table(cfg: HashTableConfig, rng: jax.Array) -> XorHashTable
     return init_table(cfg, rng)
 
 
-def _local_probe_and_encode(table: XorHashTable, batch: QueryBatch,
-                            my_port: jnp.ndarray, cfg: HashTableConfig):
-    """Device-local search dataflow + mutation-record generation."""
-    bucket = h3_hash(batch.key, table.q_masks)             # [n]
-    idx = bucket.astype(jnp.int32)
-    # local replica: store_* have leading replica axis of size 1
-    enc_keys = jnp.take(table.store_keys[0], idx, axis=1)  # [k, n, S, Wk]
-    enc_vals = jnp.take(table.store_vals[0], idx, axis=1)  # [k, n, S, Wv]
-    enc_valid = jnp.take(table.store_valid[0], idx, axis=1)  # [k, n, S]
-    dec_keys = xor_reduce(enc_keys, axis=0)                # [n, S, Wk]
-    dec_vals = xor_reduce(enc_vals, axis=0)
-    dec_validw = xor_reduce(enc_valid, axis=0)
-    occ = (dec_validw & 1).astype(bool)
-
-    key_eq = jnp.all(dec_keys == batch.key[:, None, :], axis=-1)
-    match = key_eq & occ
-    found = jnp.any(match, axis=-1)
-    mslot = jnp.argmax(match, axis=-1).astype(jnp.int32)
-    open_mask = ~occ
-    has_open = jnp.any(open_mask, axis=-1)
-    if cfg.stagger_slots:
-        # Beyond-paper port-staggered slot choice (see hash_table.apply_step).
-        n_open = jnp.sum(open_mask, axis=-1).astype(jnp.int32)
-        rank = jnp.where(n_open > 0,
-                         jnp.minimum(my_port, cfg.k - 1).astype(jnp.int32)
-                         % jnp.maximum(n_open, 1), 0)
-        csum = jnp.cumsum(open_mask, axis=-1)
-        sel = open_mask & (csum == (rank[:, None] + 1))
-        oslot = jnp.argmax(sel, axis=-1).astype(jnp.int32)
-    else:
-        oslot = jnp.argmax(open_mask, axis=-1).astype(jnp.int32)
-    value = jnp.take_along_axis(dec_vals, mslot[:, None, None], axis=1)[:, 0]
-    value = jnp.where(found[:, None], value, jnp.uint32(0))
-
-    is_ins = batch.op == OP_INSERT
-    is_del = batch.op == OP_DELETE
-    legal = my_port < cfg.k                                # search-only device?
-    ins_ok = is_ins & (found | has_open) & legal
-    del_ok = is_del & found & legal
-    do_write = ins_ok | del_ok
-    slot = jnp.where(is_del | found, mslot, oslot)
-
-    new_key = jnp.where(is_del[:, None], jnp.uint32(0), batch.key)
-    new_val = jnp.where(is_del[:, None], jnp.uint32(0), batch.val)
-    new_validw = jnp.where(is_del, jnp.uint32(0), jnp.uint32(1))
-
-    def pick(x, slot):
-        idx = slot[:, None, None] if x.ndim == 3 else slot[:, None]
-        return jnp.take_along_axis(x, idx, axis=1)[:, 0]
-
-    # my_port is a per-device scalar: own-port rows via a dynamic take on the
-    # (small) leading k axis.
-    port_c = jnp.minimum(my_port, cfg.k - 1).astype(jnp.int32)
-    own_k = pick(jnp.take(enc_keys, port_c, axis=0), slot)   # [n, Wk]
-    own_v = pick(jnp.take(enc_vals, port_c, axis=0), slot)
-    own_b = pick(jnp.take(enc_valid, port_c, axis=0), slot)
-
-    enc_k = new_key ^ pick(dec_keys, slot) ^ own_k
-    enc_v = new_val ^ pick(dec_vals, slot) ^ own_v
-    enc_b = new_validw ^ pick(dec_validw, slot) ^ own_b
-
-    ok = jnp.where(is_ins, ins_ok,
-                   jnp.where(is_del, del_ok, batch.op == OP_SEARCH))
-    results = StepResults(found=found, value=value, ok=ok, bucket=bucket)
-    record = dict(
-        port=jnp.broadcast_to(port_c, slot.shape).astype(jnp.int32),
-        bucket=jnp.where(do_write, idx, jnp.int32(cfg.buckets)),  # OOB => drop
-        slot=slot,
-        enc_k=enc_k, enc_v=enc_v, enc_b=enc_b,
-    )
-    return results, record
-
-
-def _apply_records(table: XorHashTable, rec: dict) -> XorHashTable:
-    """Scatter a flat batch of mutation records into the local replica."""
-    port, bucket, slot = rec["port"], rec["bucket"], rec["slot"]
-    sk = table.store_keys.at[0, port, bucket, slot, :].set(rec["enc_k"], mode="drop")
-    sv = table.store_vals.at[0, port, bucket, slot, :].set(rec["enc_v"], mode="drop")
-    sb = table.store_valid.at[0, port, bucket, slot].set(rec["enc_b"], mode="drop")
-    return XorHashTable(table.q_masks, sk, sv, sb, table.cfg)
-
-
 def make_distributed_step(mesh: Mesh, cfg: HashTableConfig, axis: str = "ht"):
     """Build the jitted multi-device step.
 
     queries are sharded over ``axis`` ([n_dev * n_local] global); the table is
     replicated.  Returns f(table, op, key, val) -> (table, results).
+
+    The device-local dataflow is the engine's probe + mutation-plan + record
+    encode (``cfg.backend`` selects jnp or the Pallas kernels for the probe);
+    the inter-PE pipeline is a ring all-gather of the encoded records, applied
+    locally by every device via the engine's record scatter.
     """
 
     def local_step(table, op, key, val):
-        my = jax.lax.axis_index(axis)
-        results, rec = _local_probe_and_encode(
-            table, QueryBatch(op, key, val), my, cfg)
+        my = jax.lax.axis_index(axis)      # device index == the paper's PE id
+        batch = QueryBatch(op, key, val)
+        be = _engine.resolve_backend(cfg, table)
+        pr = be.probe(table, batch, pe=my)
+        plan = _engine.mutation_plan(cfg, batch, pr)
+        rec = _engine.encode_records(pr, plan)
         # inter-PE propagation: ring all-gather of mutation records
         rec_all = jax.tree.map(
             lambda x: jax.lax.all_gather(x, axis, tiled=True), rec)
-        table = _apply_records(table, rec_all)
+        table = _engine.commit_records(table, rec_all)
+        results = StepResults(found=pr.found, value=pr.value, ok=plan.ok,
+                              bucket=pr.bucket)
         return table, results
 
     from jax.experimental.shard_map import shard_map

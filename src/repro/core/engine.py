@@ -1,0 +1,418 @@
+"""Backend-pluggable probe/commit engine — the single query dataflow seam.
+
+Every consumer of the hash table (``apply_step``/``run_stream``, the
+shard_map distributed step, the consistency checker, the serving prefix
+cache) funnels through this module, which splits the paper's PE pipeline
+(§IV-C) into two stages with exactly one jnp and one Pallas implementation
+each (DESIGN.md §3):
+
+  probe(table, batch)          hashing unit + parallel Partial-XOR-Store read
+                               + search XOR tree + result resolution.
+  commit(table, probe, batch)  non-search XOR tree encode + masked scatter
+                               into the own-port store of every replica.
+
+Backends
+--------
+``jnp``     Pure jax.numpy — the bit-exact semantic oracle (the former
+            ``kernels/ref.py`` collapsed into :func:`probe_jnp` /
+            :func:`encode_records` / :func:`commit_records`).
+``pallas``  Routes through the Pallas kernels (``kernels.ops.h3_hash``,
+            ``kernels.ops.xor_probe`` and the fused ``kernels.ops.xor_commit``)
+            — interpret mode on CPU, compiled on TPU.
+
+Backend selection is ``HashTableConfig.backend`` ("auto" picks pallas on TPU,
+jnp elsewhere) with an automatic fallback to jnp whenever the table exceeds
+``VMEM_TABLE_BUDGET_BYTES`` (the kernels keep one replica VMEM-resident,
+mirroring the FPGA's URAM residency; larger tables take HBM gathers).
+
+Replica invariant: every commit writes the same encoded row into *all*
+replicas, so replicas are byte-identical at every step boundary.  The Pallas
+probe exploits this by reading replica 0 only; the jnp probe keeps the
+paper-faithful per-PE replica gather.  Both decode identical values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import HashTableConfig
+from repro.core.hash_table import (OP_DELETE, OP_INSERT, OP_SEARCH,
+                                   QueryBatch, StepResults, XorHashTable)
+from repro.core.hashing import h3_hash as _h3_jnp
+from repro.core.xor_memory import xor_reduce
+
+__all__ = [
+    "ProbeResult", "MutationPlan",
+    "probe", "commit", "step",
+    "probe_jnp", "commit_jnp", "mutation_plan", "encode_records",
+    "commit_records", "staggered_open_slot",
+    "register_backend", "get_backend", "resolve_backend", "available_backends",
+]
+
+
+# ---------------------------------------------------------------------------
+# Stage outputs
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ProbeResult:
+    """Everything the search dataflow produces for one step of N lanes.
+
+    ``rem_*`` is the non-search XOR tree *basis*: the XOR of all k partial
+    stores EXCEPT the lane's own port (paper: "this excludes the encoded-data
+    in Partial XOR Store (M)") for every slot of the lane's bucket.
+    """
+    bucket: jnp.ndarray       # [N] uint32
+    pe: jnp.ndarray           # [N] int32 — initiating PE per lane
+    found: jnp.ndarray        # [N] bool
+    match_slot: jnp.ndarray   # [N] int32
+    open_slot: jnp.ndarray    # [N] int32 (staggered when cfg.stagger_slots)
+    has_open: jnp.ndarray     # [N] bool
+    value: jnp.ndarray        # [N, Wv] uint32 (0 where not found)
+    rem_keys: jnp.ndarray     # [N, S, Wk] uint32
+    rem_vals: jnp.ndarray     # [N, S, Wv] uint32
+    rem_valid: jnp.ndarray    # [N, S]     uint32 (full word, not masked)
+
+    def tree_flatten(self):
+        return (self.bucket, self.pe, self.found, self.match_slot,
+                self.open_slot, self.has_open, self.value,
+                self.rem_keys, self.rem_vals, self.rem_valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MutationPlan:
+    """Per-lane mutation decision (op decode + slot choice), plaintext form."""
+    ok: jnp.ndarray           # [N] bool — op accepted
+    do_write: jnp.ndarray     # [N] bool
+    port: jnp.ndarray         # [N] int32 — own write port (min(pe, k-1))
+    bucket: jnp.ndarray       # [N] int32 — == cfg.buckets (OOB) when masked
+    slot: jnp.ndarray         # [N] int32
+    new_key: jnp.ndarray      # [N, Wk] uint32 (0 for delete)
+    new_val: jnp.ndarray      # [N, Wv] uint32 (0 for delete)
+    new_valid: jnp.ndarray    # [N] uint32 (plaintext valid bit)
+
+    def tree_flatten(self):
+        return (self.ok, self.do_write, self.port, self.bucket, self.slot,
+                self.new_key, self.new_val, self.new_valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# ---------------------------------------------------------------------------
+# Shared pure stages (one implementation, used by every backend)
+# ---------------------------------------------------------------------------
+
+def _lane_pe(cfg: HashTableConfig, n: int) -> jnp.ndarray:
+    """Default positional query->PE map: lane n belongs to PE n % p."""
+    return jnp.arange(n, dtype=jnp.int32) % cfg.p
+
+
+def staggered_open_slot(open_mask: jnp.ndarray, port: jnp.ndarray) -> jnp.ndarray:
+    """Beyond-paper port-staggered slot choice: write port j claims the
+    (j mod n_open)-th open slot, so same-step inserts to one bucket from
+    distinct ports land in distinct slots while the bucket has room."""
+    n_open = jnp.sum(open_mask, axis=-1).astype(jnp.int32)          # [N]
+    rank = jnp.where(n_open > 0,
+                     port.astype(jnp.int32) % jnp.maximum(n_open, 1), 0)
+    csum = jnp.cumsum(open_mask, axis=-1)                           # [N, S]
+    sel = open_mask & (csum == (rank[:, None] + 1))
+    return jnp.argmax(sel, axis=-1).astype(jnp.int32)
+
+
+def probe_jnp(bucket: jnp.ndarray, port: jnp.ndarray, qkeys: jnp.ndarray,
+              store_keys: jnp.ndarray, store_vals: jnp.ndarray,
+              store_valid: jnp.ndarray, replica: Optional[jnp.ndarray] = None,
+              stagger: bool = False):
+    """The jnp probe stage (semantic oracle for ``xor_probe_pallas``).
+
+    store_* carry the full replica axis ``[R, k, B, S, W]``; ``replica`` maps
+    each lane to the replica it reads (None == replica 0 for all lanes).
+    Returns the same tuple as the Pallas kernel: (found, match_slot,
+    open_slot, has_open, value, rem_keys, rem_vals, rem_valid).
+    """
+    idx = bucket.astype(jnp.int32)
+    if replica is None:
+        replica = jnp.zeros_like(idx)
+    # parallel partial-store read: [N, k, S, W] gather
+    enc_keys = store_keys[replica, :, idx]
+    enc_vals = store_vals[replica, :, idx]
+    enc_valid = store_valid[replica, :, idx]
+    # search XOR reduction trees
+    dec_keys = xor_reduce(enc_keys, axis=1)                        # [N, S, Wk]
+    dec_vals = xor_reduce(enc_vals, axis=1)                        # [N, S, Wv]
+    dec_validw = xor_reduce(enc_valid, axis=1)                     # [N, S]
+
+    # result resolution
+    key_eq = jnp.all(dec_keys == qkeys[:, None, :], axis=-1)       # [N, S]
+    occ = (dec_validw & 1).astype(bool)
+    match = key_eq & occ
+    found = jnp.any(match, axis=-1)
+    mslot = jnp.argmax(match, axis=-1).astype(jnp.int32)
+    open_mask = ~occ
+    hopen = jnp.any(open_mask, axis=-1)
+    if stagger:
+        oslot = staggered_open_slot(open_mask, port)
+    else:
+        oslot = jnp.argmax(open_mask, axis=-1).astype(jnp.int32)
+    value = jnp.take_along_axis(dec_vals, mslot[:, None, None], axis=1)[:, 0]
+    value = jnp.where(found[:, None], value, jnp.uint32(0))
+
+    # non-search XOR tree basis: XOR of all stores except the own port
+    p32 = port.astype(jnp.int32)
+    own_k = jnp.take_along_axis(enc_keys, p32[:, None, None, None], axis=1)[:, 0]
+    own_v = jnp.take_along_axis(enc_vals, p32[:, None, None, None], axis=1)[:, 0]
+    own_b = jnp.take_along_axis(enc_valid, p32[:, None, None], axis=1)[:, 0]
+    return (found, mslot, oslot, hopen, value,
+            dec_keys ^ own_k, dec_vals ^ own_v, dec_validw ^ own_b)
+
+
+def mutation_plan(cfg: HashTableConfig, batch: QueryBatch, pr: ProbeResult
+                  ) -> MutationPlan:
+    """Op decode + slot choice (shared by all backends — pure elementwise)."""
+    pe = pr.pe
+    port = jnp.minimum(pe, cfg.k - 1).astype(jnp.int32)
+    is_ins = batch.op == OP_INSERT
+    is_del = batch.op == OP_DELETE
+    legal_port = pe < cfg.k                     # search-only PEs reject NSQs
+    ins_ok = is_ins & (pr.found | pr.has_open) & legal_port
+    del_ok = is_del & pr.found & legal_port
+    do_write = ins_ok | del_ok
+    slot = jnp.where(is_del | pr.found, pr.match_slot, pr.open_slot)
+    new_key = jnp.where(is_del[:, None], jnp.uint32(0), batch.key)
+    new_val = jnp.where(is_del[:, None], jnp.uint32(0), batch.val)
+    new_valid = jnp.where(is_del, jnp.uint32(0), jnp.uint32(1))
+    ok = jnp.where(is_ins, ins_ok,
+                   jnp.where(is_del, del_ok, batch.op == OP_SEARCH))
+    w_bucket = jnp.where(do_write, pr.bucket.astype(jnp.int32),
+                         jnp.int32(cfg.buckets))          # OOB => scatter drop
+    return MutationPlan(ok=ok, do_write=do_write, port=port, bucket=w_bucket,
+                        slot=slot, new_key=new_key, new_val=new_val,
+                        new_valid=new_valid)
+
+
+def _pick_slot(x: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    """Select the per-lane slot along axis 1: [N, S, ...] -> [N, ...]."""
+    idx = slot[:, None, None] if x.ndim == 3 else slot[:, None]
+    return jnp.take_along_axis(x, idx, axis=1)[:, 0]
+
+
+def encode_records(pr: ProbeResult, plan: MutationPlan) -> Dict[str, jnp.ndarray]:
+    """jnp non-search XOR tree encode: the flat mutation-record batch.
+
+    This is exactly what the distributed step all-gathers over the ICI ring —
+    the payload is independent of table size (DESIGN.md §3)."""
+    enc_k = plan.new_key ^ _pick_slot(pr.rem_keys, plan.slot)
+    enc_v = plan.new_val ^ _pick_slot(pr.rem_vals, plan.slot)
+    enc_b = plan.new_valid ^ _pick_slot(pr.rem_valid, plan.slot)
+    return dict(port=plan.port, bucket=plan.bucket, slot=plan.slot,
+                enc_k=enc_k, enc_v=enc_v, enc_b=enc_b)
+
+
+def _scatter_records(store_keys, store_vals, store_valid, rec):
+    """Masked scatter of encoded records into every replica (the inter-PE
+    propagation).  Masked lanes carry an out-of-range bucket -> dropped.
+
+    Duplicate (port, bucket, slot) targets resolve **last-wins in record
+    order** (program order), matching the Pallas commit kernel's sequential
+    loop exactly — XLA's scatter leaves duplicate ordering undefined, so
+    all but the last record per target are masked out first.  (At
+    queries_per_pe == 1 write lanes have distinct ports and this is a no-op;
+    duplicates only arise beyond the paper's one-write-per-port-per-cycle
+    regime.)"""
+    port, bucket, slot = rec["port"], rec["bucket"], rec["slot"]
+    R = store_keys.shape[0]
+    B, S = store_keys.shape[2], store_keys.shape[3]
+    tgt = (port * (B + 1) + bucket) * S + slot                      # [N]
+    live = bucket < B                                               # write lanes
+    # lane i is superseded if any later live lane hits the same target
+    later_same = (tgt[None, :] == tgt[:, None]) & live[None, :] \
+        & (jnp.arange(tgt.shape[0])[None, :] > jnp.arange(tgt.shape[0])[:, None])
+    superseded = jnp.any(later_same, axis=1)
+    bucket = jnp.where(superseded, jnp.int32(B), bucket)
+    sk = store_keys.at[:, port, bucket, slot, :].set(
+        jnp.broadcast_to(rec["enc_k"], (R,) + rec["enc_k"].shape), mode="drop")
+    sv = store_vals.at[:, port, bucket, slot, :].set(
+        jnp.broadcast_to(rec["enc_v"], (R,) + rec["enc_v"].shape), mode="drop")
+    sb = store_valid.at[:, port, bucket, slot].set(
+        jnp.broadcast_to(rec["enc_b"], (R,) + rec["enc_b"].shape), mode="drop")
+    return sk, sv, sb
+
+
+def commit_records(table: XorHashTable, rec: Dict[str, jnp.ndarray]
+                   ) -> XorHashTable:
+    """Apply a flat batch of encoded mutation records to a table."""
+    sk, sv, sb = _scatter_records(table.store_keys, table.store_vals,
+                                  table.store_valid, rec)
+    return XorHashTable(table.q_masks, sk, sv, sb, table.cfg)
+
+
+def commit_jnp(store_keys, store_vals, store_valid, port, bucket, slot,
+               do_write, new_key, new_val, new_valid):
+    """Raw-array jnp encode+commit (semantic oracle for ``xor_commit_pallas``).
+
+    store_* ``[R, k, B, S, W*]``; lane vectors as in the kernel (``bucket ==
+    B`` marks a masked lane).  Recomputes the encode basis from the snapshot —
+    use :func:`encode_records` when a ProbeResult is already in hand.
+    """
+    B = store_keys.shape[2]
+    idx = jnp.minimum(bucket, B - 1).astype(jnp.int32)
+    _, _, _, _, _, remk, remv, remb = probe_jnp(
+        idx, port, new_key, store_keys, store_vals, store_valid)
+    rec = dict(port=port,
+               bucket=jnp.where(do_write, bucket.astype(jnp.int32),
+                                jnp.int32(B)),
+               slot=slot,
+               enc_k=new_key ^ _pick_slot(remk, slot),
+               enc_v=new_val ^ _pick_slot(remv, slot),
+               enc_b=new_valid ^ _pick_slot(remb, slot))
+    return _scatter_records(store_keys, store_vals, store_valid, rec)
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+class JnpBackend:
+    """Pure jax.numpy dataflow — current semantics, the bit-exact oracle."""
+
+    name = "jnp"
+
+    def probe(self, table: XorHashTable, batch: QueryBatch,
+              pe: Optional[jnp.ndarray] = None) -> ProbeResult:
+        cfg = table.cfg
+        n = batch.op.shape[0]
+        pe = _lane_pe(cfg, n) if pe is None else jnp.broadcast_to(
+            jnp.asarray(pe, jnp.int32), (n,))
+        replica = pe if cfg.replicate_reads else jnp.zeros_like(pe)
+        port = jnp.minimum(pe, cfg.k - 1).astype(jnp.int32)
+        bucket = _h3_jnp(batch.key, table.q_masks)
+        outs = probe_jnp(bucket, port, batch.key, table.store_keys,
+                         table.store_vals, table.store_valid,
+                         replica=replica, stagger=cfg.stagger_slots)
+        return ProbeResult(bucket, pe, *outs)
+
+    def commit(self, table: XorHashTable, pr: ProbeResult, batch: QueryBatch,
+               plan: Optional[MutationPlan] = None) -> XorHashTable:
+        plan = mutation_plan(table.cfg, batch, pr) if plan is None else plan
+        return commit_records(table, encode_records(pr, plan))
+
+
+class PallasBackend:
+    """Routes the hot path through the Pallas kernels (interpret on CPU)."""
+
+    name = "pallas"
+
+    def probe(self, table: XorHashTable, batch: QueryBatch,
+              pe: Optional[jnp.ndarray] = None) -> ProbeResult:
+        from repro.kernels import ops as kops
+        cfg = table.cfg
+        n = batch.op.shape[0]
+        pe = _lane_pe(cfg, n) if pe is None else jnp.broadcast_to(
+            jnp.asarray(pe, jnp.int32), (n,))
+        port = jnp.minimum(pe, cfg.k - 1).astype(jnp.int32)
+        bucket = kops.h3_hash(batch.key, table.q_masks)
+        # Replicas are byte-identical (commit writes all of them), so the
+        # kernel probes replica 0 — one VMEM-resident table per core.
+        outs = kops.xor_probe(bucket, port, batch.key, table.store_keys[0],
+                              table.store_vals[0], table.store_valid[0],
+                              stagger=cfg.stagger_slots)
+        return ProbeResult(bucket, pe, *outs)
+
+    def commit(self, table: XorHashTable, pr: ProbeResult, batch: QueryBatch,
+               plan: Optional[MutationPlan] = None) -> XorHashTable:
+        from repro.kernels import ops as kops
+        plan = mutation_plan(table.cfg, batch, pr) if plan is None else plan
+        replica_bytes = table.memory_bytes // table.store_keys.shape[0]
+        if replica_bytes > kops.VMEM_TABLE_BUDGET_BYTES:
+            # HBM-resident regime: reuse the encode basis already in the
+            # ProbeResult instead of letting the ops fallback re-gather it
+            return commit_records(table, encode_records(pr, plan))
+        sk, sv, sb = kops.xor_commit(
+            table.store_keys, table.store_vals, table.store_valid,
+            plan.port, plan.bucket, plan.slot, plan.do_write,
+            plan.new_key, plan.new_val, plan.new_valid)
+        return XorHashTable(table.q_masks, sk, sv, sb, table.cfg)
+
+
+_BACKENDS: Dict[str, object] = {}
+
+
+def register_backend(name: str, backend) -> None:
+    _BACKENDS[name] = backend
+
+
+def get_backend(name: str):
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(f"unknown hash-table backend {name!r}; "
+                         f"registered: {sorted(_BACKENDS)}") from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+register_backend("jnp", JnpBackend())
+register_backend("pallas", PallasBackend())
+
+
+def resolve_backend(cfg: HashTableConfig, table: Optional[XorHashTable] = None):
+    """Pick the backend for this step (trace-time: shapes are static).
+
+    ``auto`` selects pallas on TPU and jnp elsewhere (interpret-mode Pallas on
+    CPU is a correctness harness, not a fast path).  An explicit ``pallas``
+    falls back to jnp when one replica of the table would not fit the VMEM
+    budget the kernels assume (HBM-resident tables take the jnp gathers).
+    """
+    from repro.kernels.ops import VMEM_TABLE_BUDGET_BYTES
+    name = getattr(cfg, "backend", "auto")
+    if name == "auto":
+        name = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if name == "pallas" and table is not None:
+        replica_bytes = table.memory_bytes // table.store_keys.shape[0]
+        if replica_bytes > VMEM_TABLE_BUDGET_BYTES:
+            name = "jnp"
+    return get_backend(name)
+
+
+# ---------------------------------------------------------------------------
+# Engine entry points
+# ---------------------------------------------------------------------------
+
+def probe(table: XorHashTable, batch: QueryBatch,
+          pe: Optional[jnp.ndarray] = None, backend: Optional[str] = None
+          ) -> ProbeResult:
+    be = get_backend(backend) if backend else resolve_backend(table.cfg, table)
+    return be.probe(table, batch, pe=pe)
+
+
+def commit(table: XorHashTable, pr: ProbeResult, batch: QueryBatch,
+           backend: Optional[str] = None) -> XorHashTable:
+    be = get_backend(backend) if backend else resolve_backend(table.cfg, table)
+    return be.commit(table, pr, batch)
+
+
+def step(table: XorHashTable, batch: QueryBatch,
+         pe: Optional[jnp.ndarray] = None, backend: Optional[str] = None
+         ) -> Tuple[XorHashTable, StepResults]:
+    """One full probe+commit step; the engine form of ``apply_step``."""
+    cfg = table.cfg
+    be = get_backend(backend) if backend else resolve_backend(cfg, table)
+    pr = be.probe(table, batch, pe=pe)
+    plan = mutation_plan(cfg, batch, pr)
+    new_table = be.commit(table, pr, batch, plan=plan)
+    results = StepResults(found=pr.found, value=pr.value, ok=plan.ok,
+                          bucket=pr.bucket)
+    return new_table, results

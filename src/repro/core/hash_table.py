@@ -30,7 +30,6 @@ paper (Theorem 1), with the FPGA's ``p + t0`` cycles becoming one step.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Tuple
 
 import numpy as np
@@ -38,7 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import HashTableConfig
-from repro.core.hashing import h3_hash, make_h3_params
+from repro.core.hashing import make_h3_params
 from repro.core.xor_memory import xor_reduce
 
 __all__ = [
@@ -141,23 +140,6 @@ def init_table(cfg: HashTableConfig, rng: jax.Array) -> XorHashTable:
 # The step: p parallel queries, data-agnostic latency
 # ---------------------------------------------------------------------------
 
-def _decode_rows(table: XorHashTable, replica_idx: jnp.ndarray,
-                 bucket_idx: jnp.ndarray):
-    """Gather + XOR-reduce the k partial stores for each query.
-
-    replica_idx/bucket_idx: [N].  Returns decoded (keys [N,S,Wk],
-    vals [N,S,Wv], valid [N,S]) plus the raw encoded rows for the
-    non-search XOR tree (enc_keys [N,k,S,Wk], ...).
-    """
-    enc_keys = table.store_keys[replica_idx, :, bucket_idx]    # [N,k,S,Wk]
-    enc_vals = table.store_vals[replica_idx, :, bucket_idx]    # [N,k,S,Wv]
-    enc_valid = table.store_valid[replica_idx, :, bucket_idx]  # [N,k,S]
-    dec_keys = xor_reduce(enc_keys, axis=1)
-    dec_vals = xor_reduce(enc_vals, axis=1)
-    dec_valid = xor_reduce(enc_valid, axis=1) & 1
-    return (dec_keys, dec_vals, dec_valid), (enc_keys, enc_vals, enc_valid)
-
-
 @jax.jit
 def apply_step(table: XorHashTable,
                batch: QueryBatch) -> Tuple[XorHashTable, StepResults]:
@@ -166,107 +148,18 @@ def apply_step(table: XorHashTable,
     Entirely branch-free: every lane executes the full search dataflow and the
     mutation dataflow is masked per-lane (masked lanes scatter with
     ``mode='drop'`` via an out-of-bounds bucket index).
+
+    The dataflow itself lives in :mod:`repro.core.engine` (DESIGN.md §3):
+    ``probe`` (hashing + partial-XOR read + XOR trees + result resolution)
+    then ``commit`` (non-search XOR encode + masked scatter), on the backend
+    selected by ``cfg.backend`` (jnp oracle or the Pallas kernels).
     """
+    from repro.core.engine import step as _engine_step
     cfg = table.cfg
     N = batch.op.shape[0]
     if N != cfg.queries_per_step:
         raise ValueError(f"batch width {N} != p*qpp {cfg.queries_per_step}")
-    lane = jnp.arange(N, dtype=jnp.int32)
-    pe = lane % cfg.p                                   # query -> PE (positional)
-    replica = pe if cfg.replicate_reads else jnp.zeros_like(pe)
-    port = jnp.minimum(pe, cfg.k - 1)                   # NSQ port (router ensures pe<k)
-
-    # -- 1. hashing unit -----------------------------------------------------
-    bucket = h3_hash(batch.key, table.q_masks)          # [N] uint32
-
-    # -- 2. partial XOR store reads + XOR reduction trees ---------------------
-    (dec_keys, dec_vals, dec_valid), (enc_keys, enc_vals, enc_valid) = \
-        _decode_rows(table, replica, bucket)
-
-    # -- 3. result resolution: slot compare + first-open-slot -----------------
-    key_eq = jnp.all(dec_keys == batch.key[:, None, :], axis=-1)   # [N,S]
-    occupied = dec_valid.astype(bool)                              # [N,S]
-    match = key_eq & occupied                                      # [N,S]
-    found = jnp.any(match, axis=-1)                                # [N]
-    match_slot = jnp.argmax(match, axis=-1).astype(jnp.int32)      # [N]
-    open_mask = ~occupied
-    has_open = jnp.any(open_mask, axis=-1)
-    if cfg.stagger_slots:
-        # Beyond-paper: the j-th write port claims the (j mod n_open)-th open
-        # slot, so same-step inserts to one bucket from distinct ports land in
-        # distinct slots (conflict-free while the bucket has room).
-        n_open = jnp.sum(open_mask, axis=-1).astype(jnp.int32)        # [N]
-        rank = jnp.where(n_open > 0, port.astype(jnp.int32) % jnp.maximum(n_open, 1), 0)
-        csum = jnp.cumsum(open_mask, axis=-1)                          # [N,S]
-        sel = open_mask & (csum == (rank[:, None] + 1))
-        open_slot = jnp.argmax(sel, axis=-1).astype(jnp.int32)
-    else:
-        open_slot = jnp.argmax(open_mask, axis=-1).astype(jnp.int32)
-
-    value = jnp.take_along_axis(
-        dec_vals, match_slot[:, None, None], axis=1)[:, 0]         # [N,Wv]
-    value = jnp.where(found[:, None], value, jnp.uint32(0))
-
-    # -- 4. mutation dataflow (masked) ----------------------------------------
-    is_ins = batch.op == OP_INSERT
-    is_del = batch.op == OP_DELETE
-    legal_port = pe < cfg.k                        # search-only PEs reject NSQs
-    ins_ok = is_ins & (found | has_open) & legal_port
-    del_ok = is_del & found & legal_port
-    do_write = ins_ok | del_ok
-    slot = jnp.where(is_del | found, match_slot, open_slot)        # [N]
-
-    # New plaintext entry per lane.
-    new_key = jnp.where(is_del[:, None], jnp.uint32(0), batch.key)
-    new_val = jnp.where(is_del[:, None], jnp.uint32(0), batch.val)
-    new_valid = jnp.where(is_del, jnp.uint32(0), jnp.uint32(1))
-
-    # Non-search XOR tree: encode against all stores EXCEPT the own port
-    #   enc = plain ^ (XOR over all k stores) ^ own-store row
-    # (paper: "this excludes the encoded-data in Partial XOR Store (M)").
-    def pick(dec, slot):
-        # dec: [N,S,...] -> [N,...] at slot
-        idx = slot[:, None, None] if dec.ndim == 3 else slot[:, None]
-        r = jnp.take_along_axis(dec, idx, axis=1)
-        return r[:, 0] if dec.ndim == 3 else r[:, 0]
-
-    port_i32 = port.astype(jnp.int32)
-    ek = jnp.take_along_axis(enc_keys, port_i32[:, None, None, None], axis=1)[:, 0]
-    ev = jnp.take_along_axis(enc_vals, port_i32[:, None, None, None], axis=1)[:, 0]
-    eb = jnp.take_along_axis(enc_valid, port_i32[:, None, None], axis=1)[:, 0]
-    own_k = pick(ek, slot)                                         # [N,Wk]
-    own_v = pick(ev, slot)                                         # [N,Wv]
-    own_b = pick(eb, slot)                                         # [N]
-
-    all_k = pick(dec_keys, slot)
-    all_v = pick(dec_vals, slot)
-    all_b = pick(xor_reduce(enc_valid, axis=1), slot)
-
-    enc_new_key = new_key ^ all_k ^ own_k                          # [N,Wk]
-    enc_new_val = new_val ^ all_v ^ own_v
-    enc_new_valid = new_valid ^ all_b ^ own_b
-
-    # -- 5. commit: scatter into the own-port store of EVERY replica ----------
-    # (inter-PE propagation).  Masked lanes get an out-of-range bucket and are
-    # dropped by the scatter.
-    B = cfg.buckets
-    w_bucket = jnp.where(do_write, bucket.astype(jnp.int32), jnp.int32(B))
-    new_store_keys = table.store_keys.at[:, port_i32, w_bucket, slot, :].set(
-        jnp.broadcast_to(enc_new_key, (table.store_keys.shape[0],) + enc_new_key.shape),
-        mode="drop")
-    new_store_vals = table.store_vals.at[:, port_i32, w_bucket, slot, :].set(
-        jnp.broadcast_to(enc_new_val, (table.store_vals.shape[0],) + enc_new_val.shape),
-        mode="drop")
-    new_store_valid = table.store_valid.at[:, port_i32, w_bucket, slot].set(
-        jnp.broadcast_to(enc_new_valid, (table.store_valid.shape[0],) + enc_new_valid.shape),
-        mode="drop")
-
-    ok = jnp.where(is_ins, ins_ok,
-                   jnp.where(is_del, del_ok, batch.op == OP_SEARCH))
-    results = StepResults(found=found, value=value, ok=ok, bucket=bucket)
-    new_table = XorHashTable(table.q_masks, new_store_keys, new_store_vals,
-                             new_store_valid, cfg)
-    return new_table, results
+    return _engine_step(table, batch)
 
 
 def run_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,

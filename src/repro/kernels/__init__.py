@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the paper's hot paths (validated interpret=True):
-h3_hash (GF(2) hashing) and xor_probe (fused decode+probe).  Use
-repro.kernels.ops for the jit'd, fallback-guarded entry points."""
-from repro.kernels.ops import h3_hash, xor_probe
+h3_hash (GF(2) hashing), xor_probe (fused decode+probe) and xor_commit (fused
+non-search XOR encode + masked commit).  Use repro.kernels.ops for the jit'd,
+fallback-guarded entry points; the jnp oracles live in repro.core.engine."""
+from repro.kernels.ops import h3_hash, xor_commit, xor_probe
 
-__all__ = ["h3_hash", "xor_probe"]
+__all__ = ["h3_hash", "xor_probe", "xor_commit"]

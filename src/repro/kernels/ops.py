@@ -2,6 +2,10 @@
 pure-jnp fallback (used when the table exceeds the VMEM-resident regime or on
 backends without Mosaic gather support).
 
+The jnp fallbacks ARE the engine's jnp backend (``repro.core.engine``) — there
+is exactly one jnp and one Pallas implementation of each stage; the former
+``kernels/ref.py`` oracles were collapsed into the engine.
+
 On this container the kernels execute under ``interpret=True`` (CPU); on TPU
 set ``interpret=False`` (the default flips on TPU backends).
 """
@@ -12,9 +16,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref as _ref
+from repro.core.hashing import h3_hash as _h3_jnp
 from repro.kernels.h3_hash import h3_hash_pallas
 from repro.kernels.xor_probe import xor_probe_pallas
+from repro.kernels.xor_commit import xor_commit_pallas
 
 # VMEM-resident table budget (one replica must fit alongside query blocks).
 VMEM_TABLE_BUDGET_BYTES = 96 * 1024 * 1024
@@ -29,24 +34,50 @@ def h3_hash(keys: jnp.ndarray, q_masks: jnp.ndarray, use_pallas: bool = True,
             block_n: int = 1024) -> jnp.ndarray:
     """Hash ``[N, W]`` uint32 keys -> ``[N]`` uint32 bucket indices."""
     n = keys.shape[0]
-    if not use_pallas or n % min(block_n, n):
-        return _ref.h3_hash_ref(keys.T, q_masks)
+    # index_bits == 0 (single-bucket table) has an empty Q matrix — the
+    # kernel's J-dim block would be zero-sized; the jnp path returns zeros.
+    if not use_pallas or q_masks.shape[0] == 0 or n % min(block_n, n):
+        return _h3_jnp(keys, q_masks)
     return h3_hash_pallas(keys.T, q_masks, block_n=min(block_n, n),
                           interpret=not _on_tpu())
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "block_q"))
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_q", "stagger"))
 def xor_probe(bucket: jnp.ndarray, port: jnp.ndarray, qkeys: jnp.ndarray,
               store_keys: jnp.ndarray, store_vals: jnp.ndarray,
               store_valid: jnp.ndarray, use_pallas: bool = True,
-              block_q: int = 256):
+              block_q: int = 256, stagger: bool = False):
     """Fused decode+probe of one replica.  See xor_probe_pallas docstring."""
     n = bucket.shape[0]
     table_bytes = 4 * (store_keys.size + store_vals.size + store_valid.size)
     if (not use_pallas or n % min(block_q, n)
             or table_bytes > VMEM_TABLE_BUDGET_BYTES):
-        return _ref.xor_probe_ref(bucket, port, qkeys, store_keys, store_vals,
-                                  store_valid)
+        from repro.core.engine import probe_jnp
+        return probe_jnp(bucket, port, qkeys, store_keys[None],
+                         store_vals[None], store_valid[None], stagger=stagger)
     return xor_probe_pallas(bucket, port, qkeys, store_keys, store_vals,
                             store_valid, block_q=min(block_q, n),
-                            interpret=not _on_tpu())
+                            interpret=not _on_tpu(), stagger=stagger)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def xor_commit(store_keys: jnp.ndarray, store_vals: jnp.ndarray,
+               store_valid: jnp.ndarray, port: jnp.ndarray,
+               bucket: jnp.ndarray, slot: jnp.ndarray, do_write: jnp.ndarray,
+               new_key: jnp.ndarray, new_val: jnp.ndarray,
+               new_valid: jnp.ndarray, use_pallas: bool = True):
+    """Fused non-search XOR encode + masked commit into every replica.
+
+    store_* carry the replica axis ``[R, k, B, S, W*]``; see
+    xor_commit_pallas.  Falls back to the engine's jnp encode+scatter when the
+    replica exceeds the VMEM budget.
+    """
+    replica_bytes = 4 * (store_keys.size + store_vals.size
+                         + store_valid.size) // store_keys.shape[0]
+    if not use_pallas or replica_bytes > VMEM_TABLE_BUDGET_BYTES:
+        from repro.core.engine import commit_jnp
+        return commit_jnp(store_keys, store_vals, store_valid, port, bucket,
+                          slot, do_write, new_key, new_val, new_valid)
+    return xor_commit_pallas(store_keys, store_vals, store_valid, port, bucket,
+                             slot, do_write, new_key, new_val, new_valid,
+                             interpret=not _on_tpu())

@@ -33,7 +33,8 @@ DEFAULT_BLOCK_Q = 256
 def _xor_probe_kernel(bucket_ref, port_ref, qkey_ref, skeys_ref, svals_ref,
                       svalid_ref, found_ref, mslot_ref, oslot_ref, hopen_ref,
                       value_ref, remk_ref, remv_ref, remb_ref,
-                      *, k: int, slots: int, key_words: int, val_words: int):
+                      *, k: int, slots: int, key_words: int, val_words: int,
+                      stagger: bool):
     idx = bucket_ref[:].astype(jnp.int32)                  # [BQ]
     port = port_ref[:].astype(jnp.int32)                   # [BQ]
 
@@ -63,8 +64,15 @@ def _xor_probe_kernel(bucket_ref, port_ref, qkey_ref, skeys_ref, svals_ref,
     match = key_eq & occ                                   # [BQ, S]
     found = jnp.any(match, axis=-1)
     mslot = jnp.argmax(match, axis=-1).astype(jnp.int32)
-    hopen = jnp.any(~occ, axis=-1)
-    oslot = jnp.argmax(~occ, axis=-1).astype(jnp.int32)
+    open_mask = ~occ
+    hopen = jnp.any(open_mask, axis=-1)
+    if stagger:
+        # one source of truth for the beyond-paper slot policy (pure jnp,
+        # traceable inside the kernel; trace-time import avoids a cycle)
+        from repro.core.engine import staggered_open_slot
+        oslot = staggered_open_slot(open_mask, port)
+    else:
+        oslot = jnp.argmax(open_mask, axis=-1).astype(jnp.int32)
 
     value = jnp.take_along_axis(dec_v, mslot[:, None, None], axis=1)[:, 0]
     value = jnp.where(found[:, None], value, jnp.uint32(0))
@@ -87,11 +95,11 @@ def _xor_probe_kernel(bucket_ref, port_ref, qkey_ref, skeys_ref, svals_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_q", "interpret"))
+                   static_argnames=("block_q", "interpret", "stagger"))
 def xor_probe_pallas(bucket: jnp.ndarray, port: jnp.ndarray, qkeys: jnp.ndarray,
                      store_keys: jnp.ndarray, store_vals: jnp.ndarray,
                      store_valid: jnp.ndarray, block_q: int = DEFAULT_BLOCK_Q,
-                     interpret: bool = True):
+                     interpret: bool = True, stagger: bool = False):
     """Probe one replica for a batch of queries.
 
     bucket [N] uint32, port [N] int32, qkeys [N, Wk] uint32,
@@ -132,7 +140,7 @@ def xor_probe_pallas(bucket: jnp.ndarray, port: jnp.ndarray, qkeys: jnp.ndarray,
     )
     return pl.pallas_call(
         functools.partial(_xor_probe_kernel, k=k, slots=S,
-                          key_words=Wk, val_words=Wv),
+                          key_words=Wk, val_words=Wv, stagger=stagger),
         grid=grid,
         in_specs=[
             qspec1,

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
-                        QueryBatch, apply_step, init_table)
+                        QueryBatch, engine, init_table)
 
 __all__ = ["PrefixCache", "chain_key"]
 
@@ -39,13 +39,14 @@ class PrefixCache:
     """Hash-table-backed page table for KV blocks."""
 
     def __init__(self, num_pages: int = 4096, block_tokens: int = 16,
-                 p: int = 8, seed: int = 0):
+                 p: int = 8, seed: int = 0, backend: str = "auto"):
         buckets = 1 << max(int(np.ceil(np.log2(max(num_pages, 2) * 2))), 4)
         self.cfg = HashTableConfig(
             p=p, k=p, buckets=buckets, slots=4, key_words=2, val_words=2,
-            replicate_reads=False, stagger_slots=True)
+            replicate_reads=False, stagger_slots=True, backend=backend)
         self.table = init_table(self.cfg, jax.random.key(seed))
-        self._step = jax.jit(apply_step)
+        # probe+commit through the pluggable query engine (DESIGN.md §3/§4)
+        self._step = jax.jit(engine.step)
         self.block_tokens = block_tokens
         self.free_pages: List[int] = list(range(num_pages - 1, -1, -1))
         self.lru: Dict[int, int] = {}       # key64 -> last-touch counter

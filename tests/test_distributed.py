@@ -13,7 +13,8 @@ SCRIPT = textwrap.dedent("""
     from repro.core.distributed import *
 
     cfg = HashTableConfig(p=8, k=4, buckets=512, slots=4,
-                          replicate_reads=False, stagger_slots=True)
+                          replicate_reads=False, stagger_slots=True,
+                          backend='BACKEND')
     mesh = make_ht_mesh(8)
     tab = init_distributed_table(cfg, jax.random.key(0))
     step = make_distributed_step(mesh, cfg)
@@ -54,11 +55,13 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
-def test_distributed_table_8dev():
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_distributed_table_8dev(backend):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = "src"
-    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+    script = SCRIPT.replace("BACKEND", backend)
+    r = subprocess.run([sys.executable, "-c", script], env=env,
                        capture_output=True, text=True, timeout=600,
                        cwd=os.path.dirname(os.path.dirname(__file__)))
     assert "DISTRIBUTED_OK" in r.stdout, r.stdout + r.stderr

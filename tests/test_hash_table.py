@@ -1,5 +1,7 @@
 """Core XOR hash table vs a python-dict oracle: S/I/U/D semantics, NSQ
-routing, table-full behaviour, both replica layouts."""
+routing, table-full behaviour, both replica layouts, both engine backends."""
+import dataclasses
+
 import numpy as np
 import pytest
 import jax
@@ -10,8 +12,10 @@ from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
                         run_stream, schedule_queries)
 
 
-def run_trace(cfg, trace, seed=0):
+def run_trace(cfg, trace, seed=0, backend=None):
     """trace: list of (op, key:int, val:int).  Returns ordered results."""
+    if backend is not None:
+        cfg = dataclasses.replace(cfg, backend=backend)
     tab = init_table(cfg, jax.random.key(seed))
     op = np.array([t[0] for t in trace], np.int32)
     kw = np.zeros((len(trace), cfg.key_words), np.uint32)
@@ -35,11 +39,13 @@ def run_trace(cfg, trace, seed=0):
     return tab, out
 
 
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
 @pytest.mark.parametrize("replicate", [True, False])
 @pytest.mark.parametrize("kw", [1, 2])
-def test_insert_search_update_delete(replicate, kw):
+def test_insert_search_update_delete(replicate, kw, backend):
     cfg = HashTableConfig(p=4, k=2, buckets=256, slots=4, key_words=kw,
-                          val_words=1, replicate_reads=replicate)
+                          val_words=1, replicate_reads=replicate,
+                          backend=backend)
     trace = []
     keys = [(i * 2654435761) % (1 << 32) | 1 for i in range(24)]
     for i, k in enumerate(keys):
@@ -87,10 +93,12 @@ def test_search_missing_returns_none():
     assert not out[1]["found"]
 
 
-def test_bucket_overflow_rejected():
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_bucket_overflow_rejected(backend):
     # 1 bucket x 2 slots: the 3rd distinct key cannot be inserted.
     # (stagger_slots so the two same-step inserts take distinct slots.)
-    cfg = HashTableConfig(p=2, k=2, buckets=1, slots=2, stagger_slots=True)
+    cfg = HashTableConfig(p=2, k=2, buckets=1, slots=2, stagger_slots=True,
+                          backend=backend)
     trace = [(OP_INSERT, 1, 10), (OP_INSERT, 2, 20), (OP_INSERT, 3, 30),
              (OP_SEARCH, 3, 0)]
     _, out = run_trace(cfg, trace)
@@ -99,8 +107,9 @@ def test_bucket_overflow_rejected():
     assert not out[3]["found"]
 
 
-def test_nsq_on_search_only_pe_rejected():
-    cfg = HashTableConfig(p=4, k=2, buckets=64, slots=2)
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_nsq_on_search_only_pe_rejected(backend):
+    cfg = HashTableConfig(p=4, k=2, buckets=64, slots=2, backend=backend)
     tab = init_table(cfg, jax.random.key(0))
     op = np.zeros(4, np.int32)
     op[3] = OP_INSERT                        # lane 3 -> PE 3 >= k

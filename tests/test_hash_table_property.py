@@ -4,7 +4,9 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
                         run_stream, schedule_queries, init_table)

@@ -1,5 +1,5 @@
-"""Per-kernel Pallas (interpret=True) vs pure-jnp oracle: bit-exact across
-shape/dtype sweeps (all integer tensors)."""
+"""Per-kernel Pallas (interpret=True) vs the engine's pure-jnp oracle:
+bit-exact across shape/dtype sweeps (all integer tensors)."""
 import numpy as np
 import pytest
 import jax
@@ -7,9 +7,11 @@ import jax.numpy as jnp
 
 from repro.core import (HashTableConfig, OP_INSERT, init_table, run_stream,
                         schedule_queries)
-from repro.kernels import ref
+from repro.core.engine import commit_jnp, probe_jnp
+from repro.core.hashing import h3_hash as h3_jnp
 from repro.kernels.h3_hash import h3_hash_pallas
 from repro.kernels.xor_probe import xor_probe_pallas
+from repro.kernels.xor_commit import xor_commit_pallas
 from repro.kernels.ops import h3_hash as h3_op, xor_probe as probe_op
 
 
@@ -20,7 +22,7 @@ def test_h3_kernel_sweep(W, N, block, J, rng):
     q = jnp.array(rng.integers(0, 2 ** 32, size=(J, W), dtype=np.uint32))
     keys = jnp.array(rng.integers(0, 2 ** 32, size=(W, N), dtype=np.uint32))
     out_k = h3_hash_pallas(keys, q, block_n=block)
-    out_r = ref.h3_hash_ref(keys, q)
+    out_r = h3_jnp(keys.T, q)
     assert out_k.dtype == jnp.uint32
     assert (np.asarray(out_k) == np.asarray(out_r)).all()
     assert int(out_r.max()) < 2 ** J
@@ -68,7 +70,8 @@ def test_xor_probe_kernel_sweep(k, slots, kw, vw, rng):
     args = (bucket, port, jnp.array(qkeys), tab.store_keys[0],
             tab.store_vals[0], tab.store_valid[0])
     outs_k = xor_probe_pallas(*args, block_q=64)
-    outs_r = ref.xor_probe_ref(*args)
+    outs_r = probe_jnp(args[0], args[1], args[2], args[3][None], args[4][None],
+                       args[5][None])
     names = ["found", "mslot", "oslot", "hopen", "value", "remk", "remv",
              "remb"]
     for nm, a, b in zip(names, outs_k, outs_r):
@@ -80,12 +83,56 @@ def test_xor_probe_kernel_sweep(k, slots, kw, vw, rng):
 
 
 def test_ops_wrappers_fallback(rng):
-    """ops.py falls back to ref for non-divisible batch sizes."""
+    """ops.py falls back to the jnp oracle for non-divisible batch sizes."""
     q = jnp.array(rng.integers(0, 2 ** 32, size=(8, 1), dtype=np.uint32))
     keys = jnp.array(rng.integers(0, 2 ** 32, size=(77, 1), dtype=np.uint32))
     out = h3_op(keys, q)                         # 77 not divisible
-    assert (np.asarray(out) == np.asarray(
-        ref.h3_hash_ref(keys.T, q))).all()
+    assert (np.asarray(out) == np.asarray(h3_jnp(keys, q))).all()
+
+
+@pytest.mark.parametrize("k,slots,stagger", [(2, 2, False), (4, 4, True),
+                                             (8, 2, False)])
+@pytest.mark.parametrize("R", [1, 4])
+def test_xor_commit_kernel_vs_oracle(k, slots, stagger, R, rng):
+    """Fused encode+commit kernel == jnp encode+scatter, for every replica."""
+    kw, vw, B, N = 2, 1, 64, 32
+    _, tab, ins_keys, _ = _populated_table(rng, k, B, slots, kw, vw, 24)
+    # build a write batch against a populated single-replica table, then
+    # replicate the state R times (replicas are identical by construction)
+    sk = jnp.broadcast_to(tab.store_keys[0], (R,) + tab.store_keys.shape[1:])
+    sv = jnp.broadcast_to(tab.store_vals[0], (R,) + tab.store_vals.shape[1:])
+    sb = jnp.broadcast_to(tab.store_valid[0], (R,) + tab.store_valid.shape[1:])
+    qkeys = np.zeros((N, kw), np.uint32)
+    qkeys[:24] = ins_keys                        # overwrite existing entries
+    qkeys[24:] = rng.integers(1, 2 ** 32, size=(N - 24, kw), dtype=np.uint32)
+    bucket = h3_jnp(jnp.array(qkeys), tab.q_masks)
+    port = jnp.array(rng.integers(0, k, N, dtype=np.int32))
+    pr = probe_jnp(bucket, port, jnp.array(qkeys), sk, sv, sb, stagger=stagger)
+    found, mslot, oslot, hopen = pr[0], pr[1], pr[2], pr[3]
+    slot = jnp.where(found, mslot, oslot)
+    # restrict writes to unique buckets: duplicate (port, bucket, slot)
+    # targets have unspecified scatter order in the jnp oracle (the router
+    # never produces them within a step at queries_per_pe=1)
+    uniq = np.zeros(N, bool)
+    seen = set()
+    for i, bb in enumerate(np.asarray(bucket)):
+        if int(bb) not in seen:
+            uniq[i] = True
+            seen.add(int(bb))
+    do_write = (found | hopen) & jnp.array(uniq & (rng.random(N) < 0.8))
+    w_bucket = jnp.where(do_write, bucket.astype(jnp.int32), jnp.int32(B))
+    new_key = jnp.array(qkeys)
+    new_val = jnp.array(rng.integers(1, 2 ** 32, size=(N, vw), dtype=np.uint32))
+    new_valid = jnp.ones((N,), jnp.uint32)
+    args = (sk, sv, sb, port, w_bucket, slot, do_write,
+            new_key, new_val, new_valid)
+    outs_k = xor_commit_pallas(*args)
+    outs_r = commit_jnp(*args)
+    for nm, a, b in zip(("keys", "vals", "valid"), outs_k, outs_r):
+        assert (np.asarray(a) == np.asarray(b)).all(), nm
+    # replicas must stay identical after the commit
+    for a in outs_k:
+        assert (np.asarray(a) == np.asarray(a)[0:1]).all()
 
 
 def test_h3_distribution_quality(rng):

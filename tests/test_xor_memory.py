@@ -2,7 +2,9 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import XorMemory, sram_blocks_laforest, sram_blocks_ours
 from repro.core.xor_memory import xor_reduce
