@@ -11,7 +11,8 @@ ROWS: List[str] = []
 
 
 def bench(fn: Callable, iters: int = 20, warmup: int = 3) -> float:
-    """Median wall time per call in microseconds (blocks on jax outputs)."""
+    """Median wall time per call in microseconds (blocks on jax outputs).
+    For *comparing* implementations use :func:`bench_group` instead."""
     for _ in range(warmup):
         out = fn()
         jax.block_until_ready(out)
@@ -22,6 +23,39 @@ def bench(fn: Callable, iters: int = 20, warmup: int = 3) -> float:
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts) * 1e6)
+
+
+def mixed_stream(cfg, steps: int, seed: int = 0):
+    """The paper's uniform stimulus, shared by every throughput benchmark:
+    [T, N] tensors of 50% search / 50% insert-update ops with random keys
+    and values (jnp arrays, ready for run_stream)."""
+    import jax.numpy as jnp
+    from repro.core import OP_INSERT, OP_SEARCH
+    rng = np.random.default_rng(seed)
+    N = cfg.queries_per_step
+    ops = rng.choice([OP_SEARCH, OP_INSERT], size=(steps, N)).astype(np.int32)
+    keys = rng.integers(1, 2 ** 32, size=(steps, N, cfg.key_words),
+                        dtype=np.uint32)
+    vals = rng.integers(1, 2 ** 32, size=(steps, N, cfg.val_words),
+                        dtype=np.uint32)
+    return jnp.array(ops), jnp.array(keys), jnp.array(vals)
+
+
+def bench_group(fns: dict, iters: int = 9, warmup: int = 2) -> dict:
+    """Paired best-of-N timing for *comparing* implementations: every round
+    times each fn once (round-robin), so host-load drift hits all candidates
+    equally instead of whichever one ran during a contended window.  Returns
+    {name: best wall time per call in microseconds}."""
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    best = {name: float("inf") for name in fns}
+    for _ in range(iters):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return {name: t * 1e6 for name, t in best.items()}
 
 
 def row(name: str, us_per_call: float, derived: str) -> None:

@@ -1,44 +1,52 @@
 """Fig 5 / Fig 8: throughput (MOPS) vs number of PEs.
 
-Measured on this host (CPU, jnp fast path, compact layout) for the *scaling
-shape*; the FPGA-model and TPU-roofline-model columns give the cross-device
-view (the paper's absolute MOPS are Fmax-bound FPGA numbers and do not port).
-Mix: 50% search / 50% insert-update (the paper's uniform stimulus)."""
+Measured on this host for the *scaling shape*; the FPGA-model and
+TPU-roofline-model columns give the cross-device view (the paper's absolute
+MOPS are Fmax-bound FPGA numbers and do not port).  Mix: 50% search / 50%
+insert-update (the paper's uniform stimulus).
+
+The stream now runs through the engine seam (``run_stream``): on pallas
+backends that is the fused xor_stream kernel (one launch per stream, table
+VMEM-resident across steps — DESIGN.md §3.1), elsewhere the scanned jnp
+oracle.  ``--fused`` / ``--scanned`` force one side; default is the
+backend-resolved auto path (fused on TPU, scan on CPU)."""
 from __future__ import annotations
 
-import numpy as np
-import jax
-import jax.numpy as jnp
+import argparse
 
-from benchmarks.common import bench, row
-from repro.core import (HashTableConfig, OP_INSERT, OP_SEARCH, init_table,
-                        run_stream)
+import jax
+
+from benchmarks.common import bench, mixed_stream, row
+from repro.core import HashTableConfig, init_table, run_stream
 from repro.core.perfmodel import fpga_throughput_mops, tpu_modeled_mops
 
 STEPS = 16
 QPP = 64          # wide-vector mode: queries per PE per step
 
 
-def run_one(p: int, qpp: int = QPP, steps: int = STEPS):
+def run_one(p: int, qpp: int = QPP, steps: int = STEPS, fused=None):
     cfg = HashTableConfig(p=p, k=p, buckets=1 << 14, slots=4,
                           replicate_reads=False, stagger_slots=True,
                           queries_per_pe=qpp)
     tab = init_table(cfg, jax.random.key(0))
-    rng = np.random.default_rng(0)
-    N = cfg.queries_per_step
-    ops = rng.choice([OP_SEARCH, OP_INSERT], size=(steps, N)).astype(np.int32)
-    keys = rng.integers(1, 2 ** 32, size=(steps, N, 1), dtype=np.uint32)
-    vals = rng.integers(1, 2 ** 32, size=(steps, N, 1), dtype=np.uint32)
-    ops_j, keys_j, vals_j = jnp.array(ops), jnp.array(keys), jnp.array(vals)
-    fn = jax.jit(lambda t: run_stream(t, ops_j, keys_j, vals_j))
+    ops_j, keys_j, vals_j = mixed_stream(cfg, steps)
+    fn = jax.jit(lambda t: run_stream(t, ops_j, keys_j, vals_j, fused=fused))
     us = bench(lambda: fn(tab), iters=3, warmup=1)
-    mops = steps * N / us
+    mops = steps * cfg.queries_per_step / us
     return mops, cfg
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--fused", action="store_true",
+                   help="force the fused stream kernel")
+    g.add_argument("--scanned", action="store_true",
+                   help="force the scanned per-step path")
+    args = ap.parse_args()
+    fused = True if args.fused else (False if args.scanned else None)
     for p in (1, 2, 4, 8, 16):
-        mops, cfg = run_one(p)
+        mops, cfg = run_one(p, fused=fused)
         fpga = fpga_throughput_mops(p, 370.0)
         tpu = tpu_modeled_mops(cfg)
         row(f"fig5_throughput_p{p}", 0.0,

@@ -1,0 +1,96 @@
+"""Fused-stream scaling: MOPS vs stream length T, plus the bucket-blocked
+HBM-resident regime.
+
+The fused xor_stream kernel amortizes one kernel launch over the whole
+``[T, N]`` stream while the scanned path dispatches probe+commit per step —
+so the fused/scanned ratio should GROW with T (the FPGA pipeline analogy:
+longer bursts keep the PE array full).  The ``blocked`` rows pin
+``bucket_tiles=8`` so the same table runs the bucket-axis-blocked kernel,
+exercising the HBM-resident code path that previously fell back to jnp
+gathers.  Emits ``BENCH_stream.json`` (full mode only; ``--smoke`` is the CI
+harness check).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+
+from benchmarks.common import bench_group, mixed_stream, row
+from repro.core import HashTableConfig, init_table, run_stream
+
+P = 8
+QPP = 8
+TS = (2, 8, 32)
+ITERS = 9          # paired best-of-N rounds (bench_group): drift-immune
+
+
+def run_t(steps: int, qpp: int = QPP, iters: int = ITERS,
+          blocked_tiles: int = 8):
+    """scanned vs fused vs bucket-blocked-fused on identical stimulus,
+    timed round-robin (drift-immune paired comparison)."""
+    cfg = HashTableConfig(p=P, k=P, buckets=1 << 12, slots=4,
+                          replicate_reads=False, stagger_slots=True,
+                          queries_per_pe=qpp, backend="pallas")
+    tab = init_table(cfg, jax.random.key(0))
+    N = cfg.queries_per_step
+    ops_j, keys_j, vals_j = mixed_stream(cfg, steps)
+    jfn = jax.jit(run_stream,
+                  static_argnames=("backend", "fused", "bucket_tiles"))
+
+    fns = {
+        "scanned": functools.partial(jfn, tab, ops_j, keys_j, vals_j,
+                                     fused=False),
+        "fused": functools.partial(jfn, tab, ops_j, keys_j, vals_j,
+                                   fused=True),
+        # pinned bucket_tiles exercises the >VMEM blocked regime without
+        # allocating a table beyond the budget (the knob is jit-static, so
+        # the cache keeps this distinct from the auto-tiled fused variant)
+        f"blocked{blocked_tiles}": functools.partial(
+            jfn, tab, ops_j, keys_j, vals_j, fused=True,
+            bucket_tiles=blocked_tiles),
+    }
+    us = bench_group(fns, iters=iters, warmup=2)
+    return {name: steps * N / t for name, t in us.items()}   # MOPS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 iter, no JSON — CI harness check")
+    args = ap.parse_args()
+    ts, qpp, iters = ((2,), 2, 1) if args.smoke else (TS, QPP, ITERS)
+
+    results = {"host_backend": jax.default_backend(),
+               "interpret_mode": jax.default_backend() != "tpu",
+               "p": P, "qpp": qpp, "iters": iters,
+               "stat": "paired best-of-N (bench_group round-robin)",
+               "rows": []}
+    for steps in ts:
+        mops = run_t(steps, qpp=qpp, iters=iters)
+        scanned, fused, blocked = (mops["scanned"], mops["fused"],
+                                   mops["blocked8"])
+        results["rows"].append({
+            "steps": steps, "mops_scanned": scanned, "mops_fused": fused,
+            "mops_fused_blocked8": blocked,
+            "fused_over_scanned": fused / scanned,
+        })
+        row(f"stream_throughput_T{steps}", 0.0,
+            f"scanned_MOPS={scanned:.2f};fused_MOPS={fused:.2f};"
+            f"fused_blocked8_MOPS={blocked:.2f};"
+            f"fused_over_scanned={fused / scanned:.3f}")
+    if args.smoke:
+        print("smoke OK")
+        return
+    out = os.path.normpath(os.path.join(os.path.dirname(__file__) or ".",
+                                        "..", "BENCH_stream.json"))
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,16 @@ each (DESIGN.md §3):
   commit(table, probe, batch)  non-search XOR tree encode + masked scatter
                                into the own-port store of every replica.
 
+plus a third, stream-granular stage (the StreamBackend protocol, DESIGN.md
+§3.1):
+
+  run_stream(table, ops, keys, vals)  a whole [T, N] query stream — the
+                               scanned per-step oracle on jnp; on pallas one
+                               fused xor_stream kernel with the table
+                               VMEM-persistent across steps, double-buffered
+                               query DMA, and bucket-axis blocking past the
+                               VMEM budget.
+
 Backends
 --------
 ``jnp``     Pure jax.numpy — the bit-exact semantic oracle (the former
@@ -46,7 +56,7 @@ from repro.core.xor_memory import xor_reduce
 
 __all__ = [
     "ProbeResult", "MutationPlan",
-    "probe", "commit", "step",
+    "probe", "commit", "step", "run_stream",
     "probe_jnp", "commit_jnp", "mutation_plan", "encode_records",
     "commit_records", "staggered_open_slot",
     "register_backend", "get_backend", "resolve_backend", "available_backends",
@@ -235,10 +245,19 @@ def _scatter_records(store_keys, store_vals, store_valid, rec):
     B, S = store_keys.shape[2], store_keys.shape[3]
     tgt = (port * (B + 1) + bucket) * S + slot                      # [N]
     live = bucket < B                                               # write lanes
-    # lane i is superseded if any later live lane hits the same target
-    later_same = (tgt[None, :] == tgt[:, None]) & live[None, :] \
-        & (jnp.arange(tgt.shape[0])[None, :] > jnp.arange(tgt.shape[0])[:, None])
-    superseded = jnp.any(later_same, axis=1)
+    # lane i is superseded iff it is not the segment-max lane index of its
+    # target.  A stable sort groups equal targets in lane order, so a lane is
+    # superseded exactly when its successor in sorted order shares its target
+    # — O(N log N) and independent of table size, so the oracle scales to
+    # stream-sized batches.  Dead lanes get unique negative keys so they
+    # never join (or split) a live segment.
+    lane = jnp.arange(tgt.shape[0], dtype=jnp.int32)
+    tgt_eff = jnp.where(live, tgt.astype(jnp.int32), -1 - lane)
+    order = jnp.argsort(tgt_eff, stable=True)
+    stgt = tgt_eff[order]
+    sup_sorted = jnp.concatenate(
+        [stgt[:-1] == stgt[1:], jnp.zeros((1,), jnp.bool_)])
+    superseded = jnp.zeros(tgt.shape, jnp.bool_).at[order].set(sup_sorted)
     bucket = jnp.where(superseded, jnp.int32(B), bucket)
     sk = store_keys.at[:, port, bucket, slot, :].set(
         jnp.broadcast_to(rec["enc_k"], (R,) + rec["enc_k"].shape), mode="drop")
@@ -281,7 +300,35 @@ def commit_jnp(store_keys, store_vals, store_valid, port, bucket, slot,
 
 # ---------------------------------------------------------------------------
 # Backends
+#
+# StreamBackend protocol: in addition to probe/commit, a backend may expose
+#   run_stream(table, ops, keys, vals, bucket_tiles=None)
+#       -> (table', StepResults[T, N])
+# processing a whole [T, N] query stream at once.  The jnp implementation is
+# the scanned per-step oracle; the pallas implementation is the fused
+# xor_stream kernel (table VMEM-persistent across steps, query blocks
+# double-buffered, bucket-axis blocking past the VMEM budget — DESIGN.md
+# §3.1).  ``engine.run_stream`` dispatches between them.
 # ---------------------------------------------------------------------------
+
+def _scan_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,
+                 vals: jnp.ndarray, backend: Optional[str] = None
+                 ) -> Tuple[XorHashTable, "StepResults"]:
+    """The scanned per-step stream: one engine.step per [N] slice (the
+    semantic oracle for the fused stream kernel)."""
+    def body(tab, xs):
+        op, key, val = xs
+        tab, res = step(tab, QueryBatch(op, key, val), backend=backend)
+        return tab, res
+    return jax.lax.scan(body, table, (ops, keys, vals))
+
+
+def _empty_stream_results(cfg: HashTableConfig, n: int) -> StepResults:
+    return StepResults(found=jnp.zeros((0, n), jnp.bool_),
+                       value=jnp.zeros((0, n, cfg.val_words), jnp.uint32),
+                       ok=jnp.zeros((0, n), jnp.bool_),
+                       bucket=jnp.zeros((0, n), jnp.uint32))
+
 
 class JnpBackend:
     """Pure jax.numpy dataflow — current semantics, the bit-exact oracle."""
@@ -306,6 +353,13 @@ class JnpBackend:
                plan: Optional[MutationPlan] = None) -> XorHashTable:
         plan = mutation_plan(table.cfg, batch, pr) if plan is None else plan
         return commit_records(table, encode_records(pr, plan))
+
+    def run_stream(self, table: XorHashTable, ops: jnp.ndarray,
+                   keys: jnp.ndarray, vals: jnp.ndarray,
+                   bucket_tiles: Optional[int] = None
+                   ) -> Tuple[XorHashTable, StepResults]:
+        # bucket_tiles is a fused-kernel knob; the scan has no tiling
+        return _scan_stream(table, ops, keys, vals, backend=self.name)
 
 
 class PallasBackend:
@@ -333,8 +387,8 @@ class PallasBackend:
                plan: Optional[MutationPlan] = None) -> XorHashTable:
         from repro.kernels import ops as kops
         plan = mutation_plan(table.cfg, batch, pr) if plan is None else plan
-        replica_bytes = table.memory_bytes // table.store_keys.shape[0]
-        if replica_bytes > kops.VMEM_TABLE_BUDGET_BYTES:
+        if kops.replica_bytes(table.store_keys, table.store_vals,
+                              table.store_valid) > kops.VMEM_TABLE_BUDGET_BYTES:
             # HBM-resident regime: reuse the encode basis already in the
             # ProbeResult instead of letting the ops fallback re-gather it
             return commit_records(table, encode_records(pr, plan))
@@ -343,6 +397,48 @@ class PallasBackend:
             plan.port, plan.bucket, plan.slot, plan.do_write,
             plan.new_key, plan.new_val, plan.new_valid)
         return XorHashTable(table.q_masks, sk, sv, sb, table.cfg)
+
+    def run_stream(self, table: XorHashTable, ops: jnp.ndarray,
+                   keys: jnp.ndarray, vals: jnp.ndarray,
+                   bucket_tiles: Optional[int] = None
+                   ) -> Tuple[XorHashTable, StepResults]:
+        """The fused stream kernel: one pallas_call for the whole [T, N]
+        stream, table VMEM-persistent across steps.  Unlike the per-step
+        kernels this path does NOT fall back to jnp past the VMEM budget —
+        HBM-resident tables run compiled Pallas via bucket-axis blocking
+        (``bucket_tiles=None`` sizes the tiling from the VMEM budget; pass it
+        explicitly to pin the regime — NB the budget is read at trace time,
+        so callers that re-jit this function must pass ``bucket_tiles``
+        rather than vary the budget, or the jit cache will conflate them).
+
+        Replicas are byte-identical at step boundaries (commit writes all of
+        them), so the kernel streams over replica 0 and the result is
+        broadcast back to all R replicas."""
+        from repro.kernels import ops as kops
+        cfg = table.cfg
+        T, N = ops.shape
+        if T == 0:
+            return table, _empty_stream_results(cfg, N)
+        pe = _lane_pe(cfg, N)
+        port = jnp.minimum(pe, cfg.k - 1).astype(jnp.int32)
+        legal = (pe < cfg.k).astype(jnp.int32)
+        bucket = kops.h3_hash(keys.reshape(T * N, cfg.key_words),
+                              table.q_masks).reshape(T, N)
+        tiles = bucket_tiles if bucket_tiles is not None else \
+            kops.stream_bucket_tiles(table.store_keys, table.store_vals,
+                                     table.store_valid)
+        sk, sv, sb, found, ok, value = kops.xor_stream(
+            bucket, port, legal, ops, keys, vals, table.store_keys[0],
+            table.store_vals[0], table.store_valid[0], bucket_tiles=tiles,
+            stagger=cfg.stagger_slots)
+        R = table.store_keys.shape[0]
+        new_table = XorHashTable(
+            table.q_masks,
+            jnp.broadcast_to(sk[None], (R,) + sk.shape),
+            jnp.broadcast_to(sv[None], (R,) + sv.shape),
+            jnp.broadcast_to(sb[None], (R,) + sb.shape), cfg)
+        return new_table, StepResults(found=found, value=value, ok=ok,
+                                      bucket=bucket)
 
 
 _BACKENDS: Dict[str, object] = {}
@@ -368,21 +464,31 @@ register_backend("jnp", JnpBackend())
 register_backend("pallas", PallasBackend())
 
 
+def _resolve_name(cfg: HashTableConfig, backend: Optional[str] = None) -> str:
+    """The shared auto-selection policy: explicit arg > cfg.backend; ``auto``
+    picks pallas on TPU and jnp elsewhere (interpret-mode Pallas on CPU is a
+    correctness harness, not a fast path)."""
+    name = backend if backend is not None else getattr(cfg, "backend", "auto")
+    if name == "auto":
+        name = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return name
+
+
 def resolve_backend(cfg: HashTableConfig, table: Optional[XorHashTable] = None):
     """Pick the backend for this step (trace-time: shapes are static).
 
-    ``auto`` selects pallas on TPU and jnp elsewhere (interpret-mode Pallas on
-    CPU is a correctness harness, not a fast path).  An explicit ``pallas``
-    falls back to jnp when one replica of the table would not fit the VMEM
-    budget the kernels assume (HBM-resident tables take the jnp gathers).
+    Auto-selection via :func:`_resolve_name`, plus the per-step VMEM
+    fallback: an explicit ``pallas`` falls back to jnp when one replica of
+    the table would not fit the VMEM budget the kernels assume
+    (HBM-resident tables take the jnp gathers).  The stream path
+    (:func:`run_stream`) shares the name resolution but deliberately skips
+    this fallback — it bucket-blocks instead.
     """
-    from repro.kernels.ops import VMEM_TABLE_BUDGET_BYTES
-    name = getattr(cfg, "backend", "auto")
-    if name == "auto":
-        name = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    from repro.kernels import ops as kops
+    name = _resolve_name(cfg)
     if name == "pallas" and table is not None:
-        replica_bytes = table.memory_bytes // table.store_keys.shape[0]
-        if replica_bytes > VMEM_TABLE_BUDGET_BYTES:
+        if kops.replica_bytes(table.store_keys, table.store_vals,
+                              table.store_valid) > kops.VMEM_TABLE_BUDGET_BYTES:
             name = "jnp"
     return get_backend(name)
 
@@ -416,3 +522,36 @@ def step(table: XorHashTable, batch: QueryBatch,
     results = StepResults(found=pr.found, value=pr.value, ok=plan.ok,
                           bucket=pr.bucket)
     return new_table, results
+
+
+def run_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,
+               vals: jnp.ndarray, backend: Optional[str] = None,
+               fused: Optional[bool] = None,
+               bucket_tiles: Optional[int] = None
+               ) -> Tuple[XorHashTable, StepResults]:
+    """Stream a whole ``[T, N]`` query trace through the engine seam.
+
+    ``fused`` selects the third stage of the seam (DESIGN.md §3.1):
+      None   dispatch to the resolved backend's StreamBackend implementation
+             — the fused xor_stream kernel on pallas, the scanned per-step
+             oracle on jnp.
+      True   force the fused Pallas stream kernel (bucket-blocked past the
+             VMEM budget; interpret mode off-TPU).
+      False  force the scanned per-step path (the semantic oracle).
+
+    Note the fused path does not use :func:`resolve_backend`'s VMEM fallback:
+    tables beyond the budget run compiled Pallas with bucket-axis blocking —
+    auto-sized from the VMEM budget, or pinned via ``bucket_tiles``.
+    """
+    cfg = table.cfg
+    if ops.ndim != 2 or ops.shape[1] != cfg.queries_per_step:
+        raise ValueError(f"stream shape {ops.shape} != [T, p*qpp="
+                         f"{cfg.queries_per_step}]")
+    name = _resolve_name(cfg, backend)
+    if fused is True:
+        return get_backend("pallas").run_stream(table, ops, keys, vals,
+                                                bucket_tiles=bucket_tiles)
+    if fused is False:
+        return _scan_stream(table, ops, keys, vals, backend=name)
+    return get_backend(name).run_stream(table, ops, keys, vals,
+                                        bucket_tiles=bucket_tiles)

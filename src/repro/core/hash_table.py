@@ -163,13 +163,20 @@ def apply_step(table: XorHashTable,
 
 
 def run_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,
-               vals: jnp.ndarray) -> Tuple[XorHashTable, StepResults]:
-    """Scan ``apply_step`` over a [T, N]-shaped query stream."""
-    def body(tab, xs):
-        op, key, val = xs
-        tab, res = apply_step(tab, QueryBatch(op, key, val))
-        return tab, res
-    return jax.lax.scan(body, table, (ops, keys, vals))
+               vals: jnp.ndarray, backend: str | None = None,
+               fused: bool | None = None, bucket_tiles: int | None = None
+               ) -> Tuple[XorHashTable, StepResults]:
+    """Stream a [T, N]-shaped query trace through the engine seam.
+
+    ``fused=None`` routes to the resolved backend's StreamBackend
+    implementation — the fused Pallas xor_stream kernel (table
+    VMEM-persistent across steps, bucket-blocked past the VMEM budget) on
+    the pallas backend, the scanned per-step oracle on jnp.  ``fused=True`` /
+    ``False`` force one side; ``bucket_tiles`` pins the fused kernel's
+    bucket-axis blocking (DESIGN.md §3.1)."""
+    from repro.core.engine import run_stream as _engine_run_stream
+    return _engine_run_stream(table, ops, keys, vals, backend=backend,
+                              fused=fused, bucket_tiles=bucket_tiles)
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,11 @@
 """Pallas TPU kernels for the paper's hot paths (validated interpret=True):
-h3_hash (GF(2) hashing), xor_probe (fused decode+probe) and xor_commit (fused
-non-search XOR encode + masked commit).  Use repro.kernels.ops for the jit'd,
-fallback-guarded entry points; the jnp oracles live in repro.core.engine."""
-from repro.kernels.ops import h3_hash, xor_commit, xor_probe
+h3_hash (GF(2) hashing), xor_probe (fused decode+probe), xor_commit (fused
+non-search XOR encode + masked commit) and xor_stream (fused whole-stream
+probe->commit with a VMEM-persistent, bucket-tiled table).  Use
+repro.kernels.ops for the jit'd, fallback-guarded entry points; the jnp
+oracles live in repro.core.engine."""
+from repro.kernels.ops import (h3_hash, replica_bytes, stream_bucket_tiles,
+                               xor_commit, xor_probe, xor_stream)
 
-__all__ = ["h3_hash", "xor_probe", "xor_commit"]
+__all__ = ["h3_hash", "xor_probe", "xor_commit", "xor_stream",
+           "replica_bytes", "stream_bucket_tiles"]

@@ -20,6 +20,7 @@ from repro.core.hashing import h3_hash as _h3_jnp
 from repro.kernels.h3_hash import h3_hash_pallas
 from repro.kernels.xor_probe import xor_probe_pallas
 from repro.kernels.xor_commit import xor_commit_pallas
+from repro.kernels.xor_stream import xor_stream_pallas
 
 # VMEM-resident table budget (one replica must fit alongside query blocks).
 VMEM_TABLE_BUDGET_BYTES = 96 * 1024 * 1024
@@ -27,6 +28,31 @@ VMEM_TABLE_BUDGET_BYTES = 96 * 1024 * 1024
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def replica_bytes(store_keys, store_vals, store_valid) -> int:
+    """Bytes of ONE replica of the XOR store arrays (4 bytes per uint32 word).
+
+    The single source of truth for every VMEM-budget check (engine backend
+    resolution, the probe/commit fallbacks, stream bucket-tiling).  Accepts
+    either the replicated 5D layout ``[R, k, B, S, W]`` or a single 4D
+    replica ``[k, B, S, W]``.
+    """
+    total = 4 * (store_keys.size + store_vals.size + store_valid.size)
+    reps = store_keys.shape[0] if store_keys.ndim == 5 else 1
+    return total // reps
+
+
+def stream_bucket_tiles(store_keys, store_vals, store_valid) -> int:
+    """Bucket-axis blocking factor for the fused stream kernel: the smallest
+    power-of-two tile count whose tile fits ``VMEM_TABLE_BUDGET_BYTES`` (1 ==
+    the whole replica is VMEM-resident; capped at one bucket per tile)."""
+    rb = replica_bytes(store_keys, store_vals, store_valid)
+    buckets = store_keys.shape[-3]
+    tiles = 1
+    while rb // tiles > VMEM_TABLE_BUDGET_BYTES and tiles < buckets:
+        tiles *= 2
+    return tiles
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "block_n"))
@@ -49,7 +75,7 @@ def xor_probe(bucket: jnp.ndarray, port: jnp.ndarray, qkeys: jnp.ndarray,
               block_q: int = 256, stagger: bool = False):
     """Fused decode+probe of one replica.  See xor_probe_pallas docstring."""
     n = bucket.shape[0]
-    table_bytes = 4 * (store_keys.size + store_vals.size + store_valid.size)
+    table_bytes = replica_bytes(store_keys, store_vals, store_valid)
     if (not use_pallas or n % min(block_q, n)
             or table_bytes > VMEM_TABLE_BUDGET_BYTES):
         from repro.core.engine import probe_jnp
@@ -72,12 +98,29 @@ def xor_commit(store_keys: jnp.ndarray, store_vals: jnp.ndarray,
     xor_commit_pallas.  Falls back to the engine's jnp encode+scatter when the
     replica exceeds the VMEM budget.
     """
-    replica_bytes = 4 * (store_keys.size + store_vals.size
-                         + store_valid.size) // store_keys.shape[0]
-    if not use_pallas or replica_bytes > VMEM_TABLE_BUDGET_BYTES:
+    if (not use_pallas or replica_bytes(store_keys, store_vals, store_valid)
+            > VMEM_TABLE_BUDGET_BYTES):
         from repro.core.engine import commit_jnp
         return commit_jnp(store_keys, store_vals, store_valid, port, bucket,
                           slot, do_write, new_key, new_val, new_valid)
     return xor_commit_pallas(store_keys, store_vals, store_valid, port, bucket,
                              slot, do_write, new_key, new_val, new_valid,
                              interpret=not _on_tpu())
+
+
+def xor_stream(bucket: jnp.ndarray, port: jnp.ndarray, legal: jnp.ndarray,
+               ops: jnp.ndarray, qkeys: jnp.ndarray, qvals: jnp.ndarray,
+               store_keys: jnp.ndarray, store_vals: jnp.ndarray,
+               store_valid: jnp.ndarray, bucket_tiles: int = 1,
+               stagger: bool = False):
+    """Fused in-kernel query streaming over one replica: probe + plan +
+    non-search XOR encode + last-wins commit for a whole ``[T, N]`` stream in
+    a single Pallas kernel, table VMEM-resident across steps (bucket-tiled
+    when one replica exceeds the VMEM budget — pick ``bucket_tiles`` with
+    :func:`stream_bucket_tiles`).  See xor_stream_pallas.  Interpret mode on
+    CPU; the scanned per-step engine path is the semantic oracle.
+    """
+    return xor_stream_pallas(bucket, port, legal, ops, qkeys, qvals,
+                             store_keys, store_vals, store_valid,
+                             bucket_tiles=bucket_tiles,
+                             interpret=not _on_tpu(), stagger=stagger)

@@ -1,0 +1,245 @@
+"""Pallas TPU kernel: fused in-kernel query streaming (DESIGN.md §3.1).
+
+The scanned path pays a full table HBM round-trip per step: every
+``lax.scan`` iteration launches ``xor_probe``, bounces ``ProbeResult`` /
+``MutationPlan`` through jnp elementwise stages, then launches ``xor_commit``.
+This kernel is the paper's PE pipeline proper — the table never leaves
+on-chip memory between cycles.  One ``pallas_call`` processes the whole
+``[T, N]`` query stream:
+
+  grid = (bucket_tiles, T)   # T minor: all T steps run back-to-back
+                             # while one bucket tile is VMEM-resident
+
+Per grid step ``(bt, t)`` the kernel fuses, for the lanes of step ``t``
+whose bucket lands in tile ``bt``:
+
+  probe    k-store read (vector gather over the tile's bucket axis)
+           + search XOR tree + slot resolution (match/open/stagger)
+  plan     op decode (insert/delete acceptance, slot choice)
+  encode   non-search XOR tree against the *pre-step* tile state
+  commit   masked sequential scatter, lane order == program order
+
+VMEM persistence: the table tile is an ``input_output_aliases`` pair whose
+block index depends only on ``bt`` — at ``t == 0`` the input tile is latched
+into the (aliased) output block, which then stays VMEM-resident for all T
+consecutive steps (Pallas guarantees output-block preservation across
+consecutive iterations with the same block index).  Probes read the output
+refs, so step t sees the state after steps 0..t-1 with zero HBM traffic
+in between.
+
+Double buffering: the per-step query blocks (``bucket/op/key/val``) are
+indexed by ``t``, so the standard Pallas pipeline prefetches step t+1's
+queries into the revolving input buffers while step t computes and commits —
+the kernel-level expression of the FPGA's query FIFO.
+
+Bucket-axis blocking (the HBM-resident regime): when one replica exceeds
+``VMEM_TABLE_BUDGET_BYTES`` the bucket axis is split into ``bucket_tiles``
+power-of-two tiles.  A lane's bucket determines both where it probes and
+where it commits, so mutations in tile bt never touch any other tile —
+sweeping tiles in the outer grid axis is semantically identical to the
+unblocked kernel, and duplicate same-step write targets always share a tile,
+where the sequential commit loop preserves stable lane order; last-wins
+semantics therefore survive blocking (the ordering argument in DESIGN.md
+§3.1).  Per-lane results are emitted per tile (masked to the tile's lanes)
+and gathered by tile index outside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hash_table import OP_DELETE, OP_INSERT, OP_SEARCH
+
+
+def _xor_stream_kernel(bucket_ref, op_ref, port_ref, legal_ref, qkey_ref,
+                       qval_ref, skeys_ref, svals_ref, svalid_ref,
+                       okeys_ref, ovals_ref, ovalid_ref,
+                       found_ref, ok_ref, value_ref,
+                       *, k: int, tile_buckets: int, n: int, stagger: bool):
+    bt = pl.program_id(0)
+    t = pl.program_id(1)
+
+    # Latch the tile once per sweep; steps 1..T-1 reuse the VMEM-resident
+    # output block (same block index on consecutive iterations).
+    @pl.when(t == 0)
+    def _():
+        okeys_ref[...] = skeys_ref[...]
+        ovals_ref[...] = svals_ref[...]
+        ovalid_ref[...] = svalid_ref[...]
+
+    bucket = bucket_ref[0].astype(jnp.int32)               # [N]
+    op = op_ref[0]                                         # [N]
+    port = port_ref[:].astype(jnp.int32)                   # [N]
+    legal = legal_ref[:] != 0                              # [N]
+    in_tile = (bucket // tile_buckets) == bt
+    local = jnp.clip(bucket - bt * tile_buckets, 0, tile_buckets - 1)
+
+    # step-t snapshot of this tile == output refs after steps 0..t-1
+    sk = okeys_ref[...]                                    # [k, Bt, S, Wk]
+    sv = ovals_ref[...]
+    sb = ovalid_ref[...]
+    key_words = sk.shape[-1]
+
+    # --- probe: parallel partial-store read + search XOR trees --------------
+    rows_k = jnp.take(sk, local, axis=1)                   # [k, N, S, Wk]
+    rows_v = jnp.take(sv, local, axis=1)
+    rows_b = jnp.take(sb, local, axis=1)
+
+    def xtree(x):                                          # static fold over k
+        acc = x[0]
+        for i in range(1, k):
+            acc = acc ^ x[i]
+        return acc
+
+    dec_k = xtree(rows_k)                                  # [N, S, Wk]
+    dec_v = xtree(rows_v)                                  # [N, S, Wv]
+    dec_b = xtree(rows_b)                                  # [N, S]
+
+    qk = qkey_ref[0]                                       # [N, Wk]
+    qv = qval_ref[0]                                       # [N, Wv]
+    key_eq = jnp.ones(dec_b.shape, dtype=jnp.bool_)
+    for w in range(key_words):
+        key_eq = key_eq & (dec_k[..., w] == qk[:, None, w])
+    occ = (dec_b & 1).astype(jnp.bool_)
+    match = key_eq & occ                                   # [N, S]
+    found = jnp.any(match, axis=-1)
+    mslot = jnp.argmax(match, axis=-1).astype(jnp.int32)
+    open_mask = ~occ
+    hopen = jnp.any(open_mask, axis=-1)
+    if stagger:
+        from repro.core.engine import staggered_open_slot
+        oslot = staggered_open_slot(open_mask, port)
+    else:
+        oslot = jnp.argmax(open_mask, axis=-1).astype(jnp.int32)
+    value = jnp.take_along_axis(dec_v, mslot[:, None, None], axis=1)[:, 0]
+    value = jnp.where(found[:, None], value, jnp.uint32(0))
+
+    # non-search XOR tree basis: XOR of all stores except the own port
+    own_k = jnp.take_along_axis(rows_k, port[None, :, None, None], axis=0)[0]
+    own_v = jnp.take_along_axis(rows_v, port[None, :, None, None], axis=0)[0]
+    own_b = jnp.take_along_axis(rows_b, port[None, :, None], axis=0)[0]
+    rem_k = dec_k ^ own_k                                  # [N, S, Wk]
+    rem_v = dec_v ^ own_v
+    rem_b = dec_b ^ own_b
+
+    # --- plan: op decode + slot choice (mutation_plan, in-kernel) -----------
+    is_ins = op == OP_INSERT
+    is_del = op == OP_DELETE
+    ins_ok = is_ins & (found | hopen) & legal
+    del_ok = is_del & found & legal
+    do_write = (ins_ok | del_ok) & in_tile
+    slot = jnp.where(is_del | found, mslot, oslot)
+    new_key = jnp.where(is_del[:, None], jnp.uint32(0), qk)
+    new_val = jnp.where(is_del[:, None], jnp.uint32(0), qv)
+    new_valid = jnp.where(is_del, jnp.uint32(0), jnp.uint32(1))
+    lane_ok = jnp.where(is_ins, ins_ok,
+                        jnp.where(is_del, del_ok, op == OP_SEARCH))
+
+    # --- encode: non-search XOR tree output for the chosen slot -------------
+    enc_k = new_key ^ jnp.take_along_axis(rem_k, slot[:, None, None],
+                                          axis=1)[:, 0]
+    enc_v = new_val ^ jnp.take_along_axis(rem_v, slot[:, None, None],
+                                          axis=1)[:, 0]
+    enc_b = new_valid ^ jnp.take_along_axis(rem_b, slot[:, None], axis=1)[:, 0]
+
+    # --- per-tile results (gathered by tile index outside the kernel) -------
+    found_ref[0, 0] = found & in_tile
+    ok_ref[0, 0] = lane_ok & in_tile
+    value_ref[0, 0] = jnp.where((found & in_tile)[:, None], value,
+                                jnp.uint32(0))
+
+    # --- masked sequential commit (encodings already snapshotted) -----------
+    dw = do_write.astype(jnp.int32)
+
+    def body(i, carry):
+        @pl.when(dw[i] != 0)
+        def _():
+            pt, bk, sl = port[i], local[i], slot[i]
+            okeys_ref[pt, bk, sl, :] = jax.lax.dynamic_index_in_dim(
+                enc_k, i, 0, keepdims=False)
+            ovals_ref[pt, bk, sl, :] = jax.lax.dynamic_index_in_dim(
+                enc_v, i, 0, keepdims=False)
+            ovalid_ref[pt, bk, sl] = enc_b[i]
+        return carry
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bucket_tiles", "interpret", "stagger"))
+def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
+                      legal: jnp.ndarray, ops: jnp.ndarray,
+                      qkeys: jnp.ndarray, qvals: jnp.ndarray,
+                      store_keys: jnp.ndarray, store_vals: jnp.ndarray,
+                      store_valid: jnp.ndarray, bucket_tiles: int = 1,
+                      interpret: bool = True, stagger: bool = False):
+    """Stream T steps of N queries through one fused kernel.
+
+    bucket/ops ``[T, N]``; port/legal ``[N]``; qkeys ``[T, N, Wk]``;
+    qvals ``[T, N, Wv]``; store_* one replica ``[k, B, S, W*]``.  Returns
+    ``(store_keys', store_vals', store_valid', found[T, N] bool,
+    ok[T, N] bool, value[T, N, Wv])``.  ``bucket_tiles`` must be a
+    power-of-two divisor of B (1 == fully VMEM-resident table).
+    """
+    T, N = ops.shape
+    k, B, S, Wk = store_keys.shape
+    Wv = store_vals.shape[-1]
+    BT = bucket_tiles
+    if BT < 1 or B % BT:
+        raise ValueError(f"bucket_tiles={BT} must divide buckets={B}")
+    Bt = B // BT
+    grid = (BT, T)
+
+    qspec2 = pl.BlockSpec((1, N), lambda bt, t: (t, 0))
+    lane1 = pl.BlockSpec((N,), lambda bt, t: (0,))
+    tile = lambda shape: pl.BlockSpec(
+        (shape[0], Bt) + shape[2:],
+        lambda bt, t: (0, bt) + (0,) * (len(shape) - 2))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct(store_keys.shape, store_keys.dtype),
+        jax.ShapeDtypeStruct(store_vals.shape, store_vals.dtype),
+        jax.ShapeDtypeStruct(store_valid.shape, store_valid.dtype),
+        jax.ShapeDtypeStruct((BT, T, N), jnp.bool_),
+        jax.ShapeDtypeStruct((BT, T, N), jnp.bool_),
+        jax.ShapeDtypeStruct((BT, T, N, Wv), jnp.uint32),
+    )
+    out_specs = (
+        tile(store_keys.shape), tile(store_vals.shape), tile(store_valid.shape),
+        pl.BlockSpec((1, 1, N), lambda bt, t: (bt, t, 0)),
+        pl.BlockSpec((1, 1, N), lambda bt, t: (bt, t, 0)),
+        pl.BlockSpec((1, 1, N, Wv), lambda bt, t: (bt, t, 0, 0)),
+    )
+    sk, sv, sb, found_full, ok_full, value_full = pl.pallas_call(
+        functools.partial(_xor_stream_kernel, k=k, tile_buckets=Bt, n=N,
+                          stagger=stagger),
+        grid=grid,
+        in_specs=[
+            qspec2,                                        # bucket
+            qspec2,                                        # op
+            lane1,                                         # port
+            lane1,                                         # legal
+            pl.BlockSpec((1, N, Wk), lambda bt, t: (t, 0, 0)),
+            pl.BlockSpec((1, N, Wv), lambda bt, t: (t, 0, 0)),
+            tile(store_keys.shape), tile(store_vals.shape),
+            tile(store_valid.shape),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        # the table updates in place — without aliasing every tile sweep
+        # would round-trip the full table through fresh output buffers
+        input_output_aliases={6: 0, 7: 1, 8: 2},
+        interpret=interpret,
+    )(bucket.astype(jnp.uint32), ops.astype(jnp.int32),
+      port.astype(jnp.int32), legal.astype(jnp.int32), qkeys, qvals,
+      store_keys, store_vals, store_valid)
+
+    # every lane's real result lives in its bucket's tile
+    tile_idx = (bucket.astype(jnp.int32) // Bt)[None]      # [1, T, N]
+    found = jnp.take_along_axis(found_full, tile_idx, axis=0)[0]
+    ok = jnp.take_along_axis(ok_full, tile_idx, axis=0)[0]
+    value = jnp.take_along_axis(value_full, tile_idx[..., None], axis=0)[0]
+    return sk, sv, sb, found, ok, value

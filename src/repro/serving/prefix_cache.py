@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
-                        QueryBatch, engine, init_table)
+                        engine, init_table)
 
 __all__ = ["PrefixCache", "chain_key"]
 
@@ -45,8 +45,14 @@ class PrefixCache:
             p=p, k=p, buckets=buckets, slots=4, key_words=2, val_words=2,
             replicate_reads=False, stagger_slots=True, backend=backend)
         self.table = init_table(self.cfg, jax.random.key(seed))
-        # probe+commit through the pluggable query engine (DESIGN.md §3/§4)
-        self._step = jax.jit(engine.step)
+        # probe+commit through the pluggable query engine (DESIGN.md §3/§4);
+        # multi-step batches ride the stream seam — the fused xor_stream
+        # kernel on pallas-capable backends, the scanned oracle on jnp.
+        # (retraces once per distinct step count T; admission/lookup batch
+        # shapes repeat, so the cache stays warm)
+        self._stream = jax.jit(engine.run_stream,
+                               static_argnames=("backend", "fused",
+                                                "bucket_tiles"))
         self.block_tokens = block_tokens
         self.free_pages: List[int] = list(range(num_pages - 1, -1, -1))
         self.lru: Dict[int, int] = {}       # key64 -> last-touch counter
@@ -59,24 +65,28 @@ class PrefixCache:
              vals: Optional[np.ndarray] = None):
         n = len(ops)
         N = self.cfg.queries_per_step
-        found = np.zeros(n, bool)
-        value = np.zeros((n, 2), np.uint32)
+        if n == 0:
+            return np.zeros(0, bool), np.zeros((0, 2), np.uint32)
         if vals is None:
             vals = np.zeros((n, 2), np.uint32)
         keys = np.zeros((n, 2), np.uint32)
         keys[:, 0] = (keys64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
         keys[:, 1] = (keys64 >> np.uint64(32)).astype(np.uint32)
-        for s in range(0, n, N):
-            sl = slice(s, min(s + N, n))
-            m = sl.stop - sl.start
-            op = np.zeros(N, np.int32); op[:m] = ops[sl]
-            kk = np.zeros((N, 2), np.uint32); kk[:m] = keys[sl]
-            vv = np.zeros((N, 2), np.uint32); vv[:m] = vals[sl]
-            self.table, res = self._step(
-                self.table, QueryBatch(jnp.array(op), jnp.array(kk),
-                                       jnp.array(vv)))
-            found[sl] = np.asarray(res.found)[:m]
-            value[sl] = np.asarray(res.value)[:m]
+        # pad to [T, N] step tensors (pad lanes are NOPs) and run the whole
+        # batch through engine.run_stream — one fused kernel launch instead
+        # of one probe+commit dispatch per step on pallas-capable backends.
+        # T rounds up to a power of two so fluctuating batch sizes compile
+        # O(log max_T) stream programs instead of one per distinct T.
+        T = -(-n // N)
+        T = 1 << (T - 1).bit_length()
+        op_t = np.zeros(T * N, np.int32); op_t[:n] = ops
+        kk_t = np.zeros((T * N, 2), np.uint32); kk_t[:n] = keys
+        vv_t = np.zeros((T * N, 2), np.uint32); vv_t[:n] = vals
+        self.table, res = self._stream(
+            self.table, jnp.array(op_t.reshape(T, N)),
+            jnp.array(kk_t.reshape(T, N, 2)), jnp.array(vv_t.reshape(T, N, 2)))
+        found = np.asarray(res.found).reshape(T * N)[:n]
+        value = np.asarray(res.value).reshape(T * N, 2)[:n]
         return found, value
 
     # ---------------------------------------------------------------- lookup

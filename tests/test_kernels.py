@@ -110,9 +110,10 @@ def test_xor_commit_kernel_vs_oracle(k, slots, stagger, R, rng):
     pr = probe_jnp(bucket, port, jnp.array(qkeys), sk, sv, sb, stagger=stagger)
     found, mslot, oslot, hopen = pr[0], pr[1], pr[2], pr[3]
     slot = jnp.where(found, mslot, oslot)
-    # restrict writes to unique buckets: duplicate (port, bucket, slot)
-    # targets have unspecified scatter order in the jnp oracle (the router
-    # never produces them within a step at queries_per_pe=1)
+    # restrict writes to unique buckets so each lane's expected row is easy
+    # to state independently; duplicate targets resolve last-wins on every
+    # path (see test_scatter_records_supersession_still_last_wins and the
+    # engine/stream duplicate-target tests)
     uniq = np.zeros(N, bool)
     seen = set()
     for i, bb in enumerate(np.asarray(bucket)):

@@ -1,0 +1,225 @@
+"""The fused stream kernel (kernels/xor_stream.py, DESIGN.md §3.1) must be
+bit-exact with the scanned per-step jnp oracle — same per-step StepResults
+AND same final table — on long randomized S/I/U/D traces, for both replica
+layouts, stagger on/off, and tables below/above the VMEM budget (the
+bucket-blocked path).  Also covers the StreamBackend dispatch and the
+replica_bytes / stream_bucket_tiles helpers."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro.kernels.ops as kops
+from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
+                        QueryBatch, apply_step, engine, init_table,
+                        run_stream, schedule_queries)
+
+
+def _random_trace(rng, n, key_words, key_space=60):
+    op = rng.choice([OP_SEARCH, OP_INSERT, OP_DELETE], size=n,
+                    p=[0.5, 0.35, 0.15]).astype(np.int32)
+    keys = np.zeros((n, key_words), np.uint32)
+    keys[:, 0] = rng.integers(1, key_space, size=n)
+    vals = rng.integers(1, 2 ** 32, size=(n, 1), dtype=np.uint32)
+    return op, keys, vals
+
+
+def _assert_same(tab_a, res_a, tab_b, res_b, what=""):
+    for name in ("found", "value", "ok", "bucket"):
+        a = np.asarray(getattr(res_a, name))
+        b = np.asarray(getattr(res_b, name))
+        assert (a == b).all(), f"{what}: StepResults.{name} diverged"
+    for name in ("store_keys", "store_vals", "store_valid"):
+        a = np.asarray(getattr(tab_a, name))
+        b = np.asarray(getattr(tab_b, name))
+        assert (a == b).all(), \
+            f"{what}: table.{name} diverged ({(a != b).sum()} words)"
+
+
+def _oracle_and_fused(cfg, ops, kk, vv, seed=0):
+    tab = init_table(cfg, jax.random.key(seed))
+    oj = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv),
+                    backend="jnp", fused=False)
+    of = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv),
+                    fused=True)
+    return oj, of
+
+
+@pytest.mark.parametrize("replicate", [True, False])
+@pytest.mark.parametrize("stagger", [False, True])
+@pytest.mark.parametrize("kw", [1, 2])
+def test_fused_stream_bit_exact_on_random_trace(replicate, stagger, kw, rng):
+    cfg = HashTableConfig(p=4, k=2, buckets=128, slots=4, key_words=kw,
+                          val_words=1, replicate_reads=replicate,
+                          stagger_slots=stagger)
+    op, keys, vals = _random_trace(rng, 128, kw)
+    ops, kk, vv = schedule_queries(op, keys, vals, cfg)
+    (tab_j, res_j), (tab_f, res_f) = _oracle_and_fused(cfg, ops, kk, vv)
+    _assert_same(tab_j, res_j, tab_f, res_f,
+                 f"replicate={replicate} stagger={stagger} kw={kw}")
+
+
+@pytest.mark.parametrize("stagger", [False, True])
+def test_fused_stream_bucket_blocked_bit_exact(stagger, rng, monkeypatch):
+    """Tables above the VMEM budget run the bucket-axis-blocked kernel and
+    stay bit-exact (the stable-order-within-a-tile last-wins argument)."""
+    cfg = HashTableConfig(p=4, k=2, buckets=128, slots=4,
+                          replicate_reads=False, stagger_slots=stagger)
+    op, keys, vals = _random_trace(rng, 128, 1)
+    ops, kk, vv = schedule_queries(op, keys, vals, cfg)
+    tab = init_table(cfg, jax.random.key(0))
+    rb = kops.replica_bytes(tab.store_keys, tab.store_vals, tab.store_valid)
+    monkeypatch.setattr(kops, "VMEM_TABLE_BUDGET_BYTES", rb // 7)
+    assert kops.stream_bucket_tiles(tab.store_keys, tab.store_vals,
+                                    tab.store_valid) == 8
+    (tab_j, res_j), (tab_f, res_f) = _oracle_and_fused(cfg, ops, kk, vv)
+    _assert_same(tab_j, res_j, tab_f, res_f, f"blocked stagger={stagger}")
+
+
+def test_fused_stream_explicit_bucket_tiles(rng):
+    """bucket_tiles pinned through the seam (the jit-static knob the
+    benchmarks use) is bit-exact with auto tiling and with the oracle."""
+    cfg = HashTableConfig(p=4, k=2, buckets=64, slots=4, stagger_slots=True)
+    op, keys, vals = _random_trace(rng, 64, 1)
+    ops, kk, vv = schedule_queries(op, keys, vals, cfg)
+    tab = init_table(cfg, jax.random.key(0))
+    oj = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv),
+                    backend="jnp", fused=False)
+    for tiles in (1, 4):
+        of = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv),
+                        fused=True, bucket_tiles=tiles)
+        _assert_same(*oj, *of, what=f"bucket_tiles={tiles}")
+    with pytest.raises(ValueError):
+        run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv),
+                   fused=True, bucket_tiles=3)       # must divide buckets
+
+
+def test_fused_stream_matches_scanned_pallas(rng):
+    """Third seam stage vs second: fused stream == scanned Pallas kernels."""
+    cfg = HashTableConfig(p=4, k=4, buckets=64, slots=4, stagger_slots=True,
+                          backend="pallas")
+    op, keys, vals = _random_trace(rng, 64, 1)
+    ops, kk, vv = schedule_queries(op, keys, vals, cfg)
+    tab = init_table(cfg, jax.random.key(0))
+    tab_s, res_s = run_stream(tab, jnp.array(ops), jnp.array(kk),
+                              jnp.array(vv), fused=False)
+    tab_f, res_f = run_stream(tab, jnp.array(ops), jnp.array(kk),
+                              jnp.array(vv), fused=True)
+    _assert_same(tab_s, res_s, tab_f, res_f, "scanned-pallas vs fused")
+
+
+def test_fused_stream_duplicate_write_targets_last_wins():
+    """qpp > 1: same-step writes from one port to one (bucket, slot) resolve
+    last-wins in lane order — in the fused kernel exactly as in the oracle,
+    across multiple steps of one stream."""
+    cfg = HashTableConfig(p=2, k=2, buckets=32, slots=2, queries_per_pe=2)
+    tab = init_table(cfg, jax.random.key(0))
+    # step 0: lanes 0 and 2 (both PE 0) insert the same key; step 1: search.
+    ops = np.array([[OP_INSERT, 0, OP_INSERT, 0],
+                    [OP_SEARCH, 0, 0, 0]], np.int32)
+    keys = np.array([[[9], [0], [9], [0]], [[9], [0], [0], [0]]], np.uint32)
+    vals = np.array([[[111], [0], [222], [0]],
+                     [[0], [0], [0], [0]]], np.uint32)
+    tab_f, res_f = run_stream(tab, jnp.array(ops), jnp.array(keys),
+                              jnp.array(vals), fused=True)
+    assert bool(np.asarray(res_f.found)[1, 0])
+    assert int(np.asarray(res_f.value)[1, 0, 0]) == 222, "later lane must win"
+    tab_j, res_j = run_stream(tab, jnp.array(ops), jnp.array(keys),
+                              jnp.array(vals), backend="jnp", fused=False)
+    _assert_same(tab_j, res_j, tab_f, res_f, "duplicate targets")
+
+
+def test_stream_backend_dispatch(rng):
+    """fused=None routes by backend: jnp -> scan, pallas -> fused kernel;
+    all three entries agree with apply_step iterated by hand."""
+    cfg = HashTableConfig(p=4, k=4, buckets=64, slots=4)
+    op, keys, vals = _random_trace(rng, 32, 1)
+    ops, kk, vv = schedule_queries(op, keys, vals, cfg)
+    tab = init_table(cfg, jax.random.key(0))
+    outs = {}
+    for label, kwargs in {
+        "auto": {},
+        "jnp": dict(backend="jnp"),
+        "pallas-auto": dict(backend="pallas"),      # -> fused via dispatch
+        "fused": dict(fused=True),
+        "scanned": dict(fused=False),
+    }.items():
+        outs[label] = run_stream(tab, jnp.array(ops), jnp.array(kk),
+                                 jnp.array(vv), **kwargs)
+    # hand-rolled scan of apply_step as the reference
+    ref = tab
+    for t in range(ops.shape[0]):
+        ref, _ = apply_step(ref, QueryBatch(jnp.array(ops[t]),
+                                            jnp.array(kk[t]),
+                                            jnp.array(vv[t])))
+    base = np.asarray(ref.store_keys)
+    for label, (tab_x, _) in outs.items():
+        assert (np.asarray(tab_x.store_keys) == base).all(), label
+    _assert_same(*outs["jnp"], *outs["pallas-auto"], what="jnp vs dispatch")
+
+
+def test_stream_empty_and_shape_guard():
+    cfg = HashTableConfig(p=2, k=2, buckets=16, slots=2)
+    tab = init_table(cfg, jax.random.key(0))
+    n = cfg.queries_per_step
+    tab2, res = run_stream(tab, jnp.zeros((0, n), jnp.int32),
+                           jnp.zeros((0, n, 1), jnp.uint32),
+                           jnp.zeros((0, n, 1), jnp.uint32), fused=True)
+    assert res.found.shape == (0, n)
+    assert (np.asarray(tab2.store_keys) == np.asarray(tab.store_keys)).all()
+    with pytest.raises(ValueError):
+        run_stream(tab, jnp.zeros((1, n + 1), jnp.int32),
+                   jnp.zeros((1, n + 1, 1), jnp.uint32),
+                   jnp.zeros((1, n + 1, 1), jnp.uint32))
+
+
+def test_replica_bytes_helper():
+    cfg = HashTableConfig(p=4, k=2, buckets=64, slots=2, key_words=2,
+                          val_words=1, replicate_reads=True)
+    tab = init_table(cfg, jax.random.key(0))
+    rb = kops.replica_bytes(tab.store_keys, tab.store_vals, tab.store_valid)
+    assert rb == tab.memory_bytes // cfg.replicas
+    # 4D single replica == one 5D replica
+    assert kops.replica_bytes(tab.store_keys[0], tab.store_vals[0],
+                              tab.store_valid[0]) == rb
+    # helper is the engine's budget check too
+    assert engine.resolve_backend(
+        dataclasses.replace(cfg, backend="pallas"), tab).name == "pallas"
+
+
+def test_stream_bucket_tiles_power_of_two(monkeypatch):
+    cfg = HashTableConfig(p=2, k=2, buckets=64, slots=2)
+    tab = init_table(cfg, jax.random.key(0))
+    args = (tab.store_keys, tab.store_vals, tab.store_valid)
+    assert kops.stream_bucket_tiles(*args) == 1
+    rb = kops.replica_bytes(*args)
+    monkeypatch.setattr(kops, "VMEM_TABLE_BUDGET_BYTES", rb // 3)
+    assert kops.stream_bucket_tiles(*args) == 4
+    monkeypatch.setattr(kops, "VMEM_TABLE_BUDGET_BYTES", 1)
+    # capped at one bucket per tile
+    assert kops.stream_bucket_tiles(*args) == cfg.buckets
+
+
+def test_scatter_records_supersession_still_last_wins(rng):
+    """The O(N log N) segment-max supersession mask must keep XLA-scatter
+    duplicate resolution bit-identical to sequential last-wins, including
+    interleaved dead lanes."""
+    cfg = HashTableConfig(p=2, k=2, buckets=16, slots=2, queries_per_pe=4)
+    tab = init_table(cfg, jax.random.key(0))
+    n = cfg.queries_per_step
+    # many duplicate targets: one hot key from both ports, plus dead lanes
+    op = np.zeros(n, np.int32)
+    op[0::2] = OP_INSERT
+    keys = np.zeros((n, 1), np.uint32)
+    keys[0::2, 0] = 7
+    vals = np.arange(1, n + 1, dtype=np.uint32).reshape(n, 1)
+    tab2, _ = apply_step(tab, QueryBatch(jnp.array(op), jnp.array(keys),
+                                         jnp.array(vals)))
+    _, res = apply_step(tab2, QueryBatch(
+        jnp.array([OP_SEARCH] + [0] * (n - 1), np.int32),
+        jnp.array(keys[:1].repeat(n, 0)), jnp.zeros((n, 1), jnp.uint32)))
+    # port 0's last write lane is n-2 (lanes 0,2,..: even lanes, PE = lane%2)
+    # all even lanes are PE 0 -> port 0, same key 7, same slot => last wins
+    assert int(np.asarray(res.value)[0, 0]) == n - 1
