@@ -1,0 +1,132 @@
+"""Distributed scaling: bucket-sharded stream vs replicated per-step MOPS.
+
+Sweeps shard count D over a fake-device mesh and times, on identical
+stimulus (``bench_group`` paired round-robin, drift-immune):
+
+  sharded_stream    make_distributed_stream with cfg.shards == D — ONE jitted
+                    call routes all T steps to owner shards (all_to_all) and
+                    streams each device's ``buckets/D``-bucket partition
+                    locally
+  replicated_step   make_distributed_step with cfg.shards == 1 — the
+                    superseded design: T dispatches, each probing the FULL
+                    replicated table and all-gathering mutation records
+
+The sharded side wins on both axes the refactor targets: per-device memory
+traffic shrinks with the partition (``buckets/D`` vs ``buckets``) and the
+stream amortizes one launch over T steps.  Off-TPU the local streams run the
+scanned jnp path on both sides (interpret-mode Pallas is a correctness
+harness, not a fast path — same policy as BENCH_stream.json); the comparison
+stays apples-to-apples.
+
+Emits ``BENCH_distributed.json`` (full mode; ``--smoke`` is the CI harness
+check).  The measurement re-execs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the conftest
+convention) so the driver process keeps its single-device view.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+SHARDS = (2, 4, 8)
+T_FULL, NL_FULL, BUCKETS_FULL, ITERS = 16, 8, 1 << 13, 9
+T_SMOKE, NL_SMOKE, BUCKETS_SMOKE = 2, 2, 1 << 8
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _sweep(smoke: bool) -> None:
+    import jax
+
+    from benchmarks.common import bench_group, mixed_stream, row
+    from repro.core import HashTableConfig
+    from repro.core.distributed import (init_distributed_table,
+                                        make_distributed_step,
+                                        make_distributed_stream, make_ht_mesh)
+
+    shards = SHARDS[:1] if smoke else SHARDS
+    T, nl, buckets, iters = ((T_SMOKE, NL_SMOKE, BUCKETS_SMOKE, 1) if smoke
+                             else (T_FULL, NL_FULL, BUCKETS_FULL, ITERS))
+    results = {"host_backend": jax.default_backend(),
+               "interpret_mode": jax.default_backend() != "tpu",
+               "steps": T, "n_local": nl, "buckets": buckets, "iters": iters,
+               "stat": "paired best-of-N (bench_group round-robin)",
+               "rows": []}
+    for D in shards:
+        cfg = HashTableConfig(p=D, k=D, buckets=buckets, slots=2,
+                              queries_per_pe=nl, replicate_reads=False,
+                              stagger_slots=True, shards=D)
+        cfg_rep = dataclasses.replace(cfg, shards=1)
+        mesh = make_ht_mesh(D)
+        tab_sh = init_distributed_table(cfg, jax.random.key(0), mesh)
+        tab_rep = init_distributed_table(cfg_rep, jax.random.key(0))
+        stream = make_distributed_stream(mesh, cfg)
+        step = make_distributed_step(mesh, cfg_rep)
+        N = D * nl
+        ops_j, keys_j, vals_j = mixed_stream(cfg, T)
+
+        def run_sharded():
+            _, res = stream(tab_sh, ops_j, keys_j, vals_j)
+            return res.found
+
+        def run_replicated():
+            tab, res = tab_rep, None
+            for t in range(T):
+                tab, res = step(tab, ops_j[t], keys_j[t], vals_j[t])
+            return res.found          # chains through every step's table
+
+        us = bench_group({"sharded_stream": run_sharded,
+                          "replicated_step": run_replicated}, iters=iters)
+        mops = {name: T * N / t for name, t in us.items()}
+        results["rows"].append({
+            "shards": D,
+            "mops_sharded_stream": mops["sharded_stream"],
+            "mops_replicated_step": mops["replicated_step"],
+            "sharded_over_replicated": (mops["sharded_stream"]
+                                        / mops["replicated_step"]),
+        })
+        row(f"distributed_throughput_D{D}", 0.0,
+            f"sharded_MOPS={mops['sharded_stream']:.3f};"
+            f"replicated_MOPS={mops['replicated_step']:.3f};"
+            f"sharded_over_replicated="
+            f"{mops['sharded_stream'] / mops['replicated_step']:.3f}")
+    if smoke:
+        print("smoke OK")
+        return
+    out = os.path.join(_ROOT, "BENCH_distributed.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 iter, no JSON — CI harness check")
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.child:
+        _sweep(args.smoke)
+        return
+    # a device mesh needs >1 device; fork with forced fake devices so the
+    # driver (benchmarks/run.py) keeps its real single-device view
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_ROOT, "src"), _ROOT, env.get("PYTHONPATH", "")])
+    cmd = [sys.executable, os.path.abspath(__file__), "--child"]
+    if args.smoke:
+        cmd.append("--smoke")
+    r = subprocess.run(cmd, env=env, cwd=_ROOT)
+    if r.returncode:
+        raise RuntimeError(f"distributed_throughput child failed "
+                           f"(exit {r.returncode})")
+
+
+if __name__ == "__main__":
+    main()

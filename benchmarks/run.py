@@ -10,17 +10,19 @@ def main() -> None:
     # some benchmark mains parse argv (e.g. --smoke); the driver runs them
     # all in full mode, and a stray driver arg must not SystemExit the sweep
     sys.argv = sys.argv[:1]
-    from benchmarks import (backend_compare, fig4_memory, fig5_throughput,
-                            fig6_capacity, fig7_nsq_ratio, fig10_latency,
-                            ht_hillclimb, stream_throughput, table12_resources,
-                            table3_sota)
+    from benchmarks import (backend_compare, distributed_throughput,
+                            fig4_memory, fig5_throughput, fig6_capacity,
+                            fig7_nsq_ratio, fig10_latency, ht_hillclimb,
+                            stream_throughput, table12_resources, table3_sota)
     from benchmarks import roofline
     mods = [("fig4", fig4_memory), ("fig5", fig5_throughput),
             ("fig6", fig6_capacity), ("fig7", fig7_nsq_ratio),
             ("table12", table12_resources), ("table3", table3_sota),
             ("fig10", fig10_latency), ("ht_hillclimb", ht_hillclimb),
             ("backend_compare", backend_compare),
-            ("stream_throughput", stream_throughput), ("roofline", roofline)]
+            ("stream_throughput", stream_throughput),
+            ("distributed_throughput", distributed_throughput),
+            ("roofline", roofline)]
     failures = 0
     for name, mod in mods:
         try:

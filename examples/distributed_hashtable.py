@@ -1,12 +1,18 @@
 """Multi-device hash table: the paper's PE array across a device mesh.
 
 8 simulated devices = 8 PEs; 4 own write ports (NSQ ratio 4/8); queries are
-sharded across devices; mutations propagate with one ring all-gather per step
-(the FPGA inter-PE pipeline on ICI).
+sharded across devices.  Two mappings (DESIGN.md §2.1):
+
+  replicated    every device holds the whole table; mutations propagate with
+                one ring all-gather per step (the FPGA inter-PE pipeline)
+  bucket-sharded each device OWNS buckets/8 of the table; queries are routed
+                to owner shards (all_to_all on the high H3 bits) and each
+                partition streams locally — capacity scales with the mesh
 
 Run:  PYTHONPATH=src python examples/distributed_hashtable.py
 (the script re-execs itself with XLA_FLAGS for 8 host devices)
 """
+import dataclasses
 import os
 import sys
 
@@ -20,7 +26,8 @@ import jax.numpy as jnp
 
 from repro.core import HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH
 from repro.core.distributed import (init_distributed_table, make_ht_mesh,
-                                    make_distributed_step)
+                                    make_distributed_step,
+                                    make_distributed_stream)
 
 
 def main():
@@ -64,6 +71,30 @@ def main():
                        jnp.array(keys), jnp.array(vals))
     print("key deleted by another PE, now found:",
           bool(np.asarray(res4.found)[0]))
+
+    # ---- bucket-sharded mapping: capacity scales with the mesh -------------
+    scfg = dataclasses.replace(cfg, shards=n_dev)
+    stab = init_distributed_table(scfg, jax.random.key(0), mesh)
+    local_shape = stab.store_keys.sharding.shard_shape(stab.store_keys.shape)
+    print(f"\nsharded: {scfg.buckets} global buckets, each device owns "
+          f"{local_shape[2]} ({scfg.local_buckets}) — routed all_to_all "
+          f"stream, one launch for a whole [T, N] trace")
+    stream = make_distributed_stream(mesh, scfg)
+    T = 4
+    n_ins = cfg.k * n_local                 # only NSQ-capable origins land
+    sops = np.zeros((T, N), np.int32)
+    sops[0] = OP_INSERT                     # step 0: every device inserts
+    sops[1:] = OP_SEARCH                    # steps 1..: everyone searches
+    skeys = np.broadcast_to(keys, (T, N, 1)).copy()
+    svals = np.broadcast_to(vals, (T, N, 1)).copy()
+    # steps 1+ search the keys that actually landed, from every origin device
+    skeys[1:] = np.resize(keys[:n_ins], (N, 1))
+    stab, sres = stream(stab, jnp.array(sops), jnp.array(skeys),
+                        jnp.array(svals))
+    f = np.asarray(sres.found)
+    print(f"inserted {int(np.asarray(sres.ok)[0, :n_ins].sum())} keys via "
+          f"owner routing; visible next step on every origin lane: "
+          f"{int(f[1].sum())}/{N}")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,9 @@ Public API:
                                    (jnp oracle + Pallas kernels; DESIGN.md §3)
   XorMemory                      — generic n-write-port XOR memory
   h3_hash, make_h3_params        — Class-H3 universal hashing
-  distributed                    — shard_map multi-device replica table
+  distributed                    — shard_map multi-device table: bucket-
+                                   sharded owner routing (capacity scales
+                                   with the mesh) + the replicated oracle
   baselines                      — partitioned-atomic table, FASTHash mode
   consistency                    — Theorem-1 cycle simulator
   perfmodel                      — FPGA cycle model + TPU roofline model

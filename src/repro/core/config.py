@@ -9,6 +9,10 @@ Terminology maps 1:1 onto the paper:
   slots  — slots per bucket for collision resolution (paper: 2-4 typical).
   key_words / val_words — key/value width in uint32 words (32/64/128-bit ==
            1/2/4 words, the paper's evaluated sizes).
+  shards — bucket-shard partitions across a device mesh (beyond-paper scale
+           axis): each shard owns buckets/shards contiguous buckets, selected
+           by the high bits of the H3 index (core.distributed; DESIGN.md
+           §2.1).  1 == single memory domain.
   replicate_reads — True  = paper-faithful: one replica per PE (p replicas).
                     False = TPU-native ('compact') variant: a single replica
                     per device; vector gathers are natively multi-ported on
@@ -43,6 +47,13 @@ class HashTableConfig:
                                     # jnp elsewhere; pallas auto-falls-back to
                                     # jnp when a replica exceeds the VMEM
                                     # table budget)
+    shards: int = 1                 # bucket-shard partitions across a device
+                                    # mesh (core.distributed): the bucket axis
+                                    # splits into `shards` contiguous ranges of
+                                    # `local_buckets` each, one per device; the
+                                    # high bits of the H3 bucket index select
+                                    # the owner shard.  1 == single memory
+                                    # domain (replicated when distributed).
 
     def __post_init__(self):
         if self.k < 1 or self.k > self.p:
@@ -54,10 +65,34 @@ class HashTableConfig:
             raise ValueError(f"buckets must be a power of two, got {self.buckets}")
         if self.slots < 1:
             raise ValueError("slots >= 1")
+        if self.shards < 1 or self.shards & (self.shards - 1):
+            raise ValueError(f"shards must be a power of two >= 1, "
+                             f"got {self.shards}")
+        if self.shards > self.buckets:
+            raise ValueError(f"need shards <= buckets, got shards={self.shards}"
+                             f" buckets={self.buckets}")
 
     @property
     def index_bits(self) -> int:
         return (self.buckets - 1).bit_length()
+
+    @property
+    def global_buckets(self) -> int:
+        """The full hash space (== buckets): the H3 index always spans every
+        shard; a shard owns the `local_buckets`-sized range selected by the
+        high `index_bits - local_index_bits` bits."""
+        return self.buckets
+
+    @property
+    def local_buckets(self) -> int:
+        """Buckets held by one shard partition (buckets/shards)."""
+        return self.buckets // self.shards
+
+    @property
+    def local_index_bits(self) -> int:
+        """Low bucket-index bits that address within a shard; the remaining
+        high bits are the owner shard id."""
+        return (self.local_buckets - 1).bit_length()
 
     @property
     def replicas(self) -> int:

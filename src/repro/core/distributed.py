@@ -1,40 +1,63 @@
 """Multi-device XOR hash table: the paper's PE array mapped onto a TPU mesh.
 
-Mapping (DESIGN.md §2):
-  PE                    -> device on the replica mesh axis
-  replica per PE        -> one replica per device (in_spec replicated)
-  Partial XOR Store j   -> bank j of every replica; owned by device j (< k)
-  inter-PE pipeline     -> ``jax.lax.all_gather`` of per-step mutation records
-                           over the ICI ring (p cycles on FPGA == one ring
-                           all-gather here), applied locally by every device
-  p queries / cycle     -> n_dev * local_batch queries / step, data-agnostic
+Two mappings share one seam (``make_distributed_stream``; DESIGN.md §2):
 
-Consistency matches the paper's relaxed model: mutation encodings are computed
-against the pre-step snapshot (all replicas identical), commits happen at step
-end, so the visibility window is exactly one step.
+**Bucket-sharded** (``cfg.shards == n_dev`` — the scaling design).  The
+bucket axis is partitioned by ownership: device ``d`` holds global buckets
+``[d * local_buckets, (d+1) * local_buckets)`` — the high bits of the H3
+bucket index name the owner, the low bits address within the partition.
+Per stream:
 
-The per-step collective payload is ``n_dev * local_nsq * record_bytes`` —
-independent of table size, which is what makes the design scale to large
-meshes (only mutations move, never table state).
+  route    each device hashes its local ``[T, n]`` lane block, scatters
+           queries into a destination-major send buffer (capacity ``n`` per
+           owner, so arbitrary skew cannot drop queries) and exchanges them
+           with ONE ``all_to_all`` for all T steps (engine.route_stream)
+  stream   the owner runs its whole routed ``[T, D*n]`` stream against its
+           partition in one go — the fused ``xor_stream`` Pallas kernel with
+           a bucket-base offset on the pallas backend (one compiled launch,
+           partition VMEM-persistent across steps), the scanned jnp oracle
+           elsewhere (engine.run_stream_local)
+  return   results ride the inverse ``all_to_all`` and land on their origin
+           lanes via the saved send permutation (engine.inverse_route)
 
-NSQ capability: devices with ``axis_index < k`` own a write port; the router
-must direct mutations to them (``schedule_queries`` on the sharded stream).
-Search-only devices still *apply* remote mutations (their replica must stay
-consistent) but never initiate them — the analogue of dropping the
-Partial-XOR-Store-(M) write machinery in the paper's Fig 3(b).
+Capacity grows with the mesh (each device holds ``buckets/shards`` of the
+table) and the per-stream collective payload is ``2 * T * n_dev * shards *
+n * query_bytes`` (the ``shards`` factor is the skew-proof per-owner
+capacity padding) — independent of table size.  Routed order is
+(origin-device, origin-lane) == program order, so the owner's sequential
+last-wins commit resolves duplicate targets exactly like the replicated
+oracle: the two mappings are bit-exact (tests/test_distributed_sharded.py).
+
+**Replicated** (``cfg.shards == 1`` — the semantic oracle, and the paper's
+literal PE array).  Every device holds the entire table; one ring
+``all_gather`` of encoded mutation records per step (the FPGA inter-PE
+pipeline on ICI) keeps replicas identical.  Capacity is capped at one
+device's memory — which is why the sharded mapping exists.
+
+Common to both: device == PE (``pe = axis_index``), so NSQ capability lives
+with the *origin* device — ``axis_index < k`` owns write port ``axis_index``
+and mutations it initiates write partial store ``port`` wherever the bucket
+lives; search-only devices (``>= k``) never initiate mutations, the analogue
+of dropping the Partial-XOR-Store-(M) write machinery in the paper's
+Fig 3(b).  Consistency keeps the paper's relaxed model: encodings are
+computed against the pre-step snapshot, commits land at step end, the
+visibility window is exactly one step — in both mappings, since a bucket's
+whole history lives on one owner processed in step order.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import engine as _engine
 from repro.core.config import HashTableConfig
 from repro.core.hash_table import (QueryBatch, StepResults, XorHashTable,
                                    init_table)
+from repro.core.hashing import h3_hash as _h3, make_h3_params
 
-__all__ = ["make_ht_mesh", "init_distributed_table", "make_distributed_step"]
+__all__ = ["make_ht_mesh", "init_distributed_table", "make_distributed_step",
+           "make_distributed_stream"]
 
 
 def make_ht_mesh(n_devices: int | None = None, axis: str = "ht") -> Mesh:
@@ -43,47 +66,128 @@ def make_ht_mesh(n_devices: int | None = None, axis: str = "ht") -> Mesh:
     return jax.make_mesh((n,), (axis,))
 
 
-def init_distributed_table(cfg: HashTableConfig, rng: jax.Array) -> XorHashTable:
-    """One replica's state; shard_map replicates it per device."""
+def init_distributed_table(cfg: HashTableConfig, rng: jax.Array,
+                           mesh: Mesh | None = None,
+                           axis: str = "ht") -> XorHashTable:
+    """Build the distributed table state.
+
+    ``cfg.shards == 1``: one replica's state; shard_map replicates it per
+    device (capacity = one device).  ``cfg.shards > 1``: the GLOBAL table
+    with its bucket axis sharded over ``mesh``'s ``axis`` — each device
+    materializes only its ``cfg.local_buckets``-bucket partition, so
+    capacity scales with the mesh.  The H3 matrix spans the global index
+    space either way and is replicated.
+    """
     if cfg.replicate_reads:
         raise ValueError("distributed table uses the compact per-device layout; "
                          "set replicate_reads=False (replication happens across "
                          "devices instead)")
-    return init_table(cfg, rng)
+    if cfg.shards == 1:
+        return init_table(cfg, rng)
+    if mesh is None:
+        raise ValueError("a bucket-sharded table (cfg.shards > 1) needs the "
+                         "mesh to place its partitions")
+    n_dev = mesh.shape[axis]
+    if cfg.shards != n_dev:
+        raise ValueError(f"cfg.shards={cfg.shards} != mesh axis "
+                         f"{axis!r} size {n_dev}")
+    R, k, B, S = cfg.replicas, cfg.k, cfg.buckets, cfg.slots
+    shard_b = NamedSharding(mesh, P(None, None, axis))   # bucket axis (dim 2)
+    rep = NamedSharding(mesh, P())
+    zeros = lambda shape: jax.jit(lambda: jnp.zeros(shape, jnp.uint32),
+                                  out_shardings=shard_b)()
+    return XorHashTable(
+        q_masks=jax.device_put(
+            make_h3_params(rng, cfg.key_words, cfg.index_bits), rep),
+        store_keys=zeros((R, k, B, S, cfg.key_words)),
+        store_vals=zeros((R, k, B, S, cfg.val_words)),
+        store_valid=zeros((R, k, B, S)),
+        cfg=cfg,
+    )
 
 
-def make_distributed_step(mesh: Mesh, cfg: HashTableConfig, axis: str = "ht"):
-    """Build the jitted multi-device step.
+def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
+                            axis: str = "ht",
+                            fused: bool | None = None,
+                            bucket_tiles: int | None = None):
+    """Build the jitted multi-device stream.
 
-    queries are sharded over ``axis`` ([n_dev * n_local] global); the table is
-    replicated.  Returns f(table, op, key, val) -> (table, results).
-
-    The device-local dataflow is the engine's probe + mutation-plan + record
-    encode (``cfg.backend`` selects jnp or the Pallas kernels for the probe);
-    the inter-PE pipeline is a ring all-gather of the encoded records, applied
-    locally by every device via the engine's record scatter.
+    Returns ``f(table, ops, keys, vals) -> (table, results)`` over ``[T, N]``
+    step tensors, queries sharded over ``axis`` (``N = n_dev * n_local``).
+    ``cfg.shards`` selects the mapping (module docstring): ``n_dev`` =
+    bucket-sharded route+stream+return, ``1`` = the replicated per-step
+    all-gather oracle scanned over T.  ``fused``/``bucket_tiles`` pin the
+    sharded local-stream regime exactly as in ``engine.run_stream``.
     """
-
-    def local_step(table, op, key, val):
-        my = jax.lax.axis_index(axis)      # device index == the paper's PE id
-        batch = QueryBatch(op, key, val)
-        be = _engine.resolve_backend(cfg, table)
-        pr = be.probe(table, batch, pe=my)
-        plan = _engine.mutation_plan(cfg, batch, pr)
-        rec = _engine.encode_records(pr, plan)
-        # inter-PE propagation: ring all-gather of mutation records
-        rec_all = jax.tree.map(
-            lambda x: jax.lax.all_gather(x, axis, tiled=True), rec)
-        table = _engine.commit_records(table, rec_all)
-        results = StepResults(found=pr.found, value=pr.value, ok=plan.ok,
-                              bucket=pr.bucket)
-        return table, results
-
     from jax.experimental.shard_map import shard_map
+    n_dev = mesh.shape[axis]
+    if cfg.shards not in (1, n_dev):
+        raise ValueError(f"cfg.shards must be 1 (replicated) or the mesh "
+                         f"axis size {n_dev}, got {cfg.shards}")
+
+    if cfg.shards == 1:
+        def local_stream(table, ops, keys, vals):
+            my = jax.lax.axis_index(axis)   # device index == the paper's PE id
+
+            def body(tab, xs):
+                op, key, val = xs
+                batch = QueryBatch(op, key, val)
+                be = _engine.resolve_backend(cfg, tab)
+                pr = be.probe(tab, batch, pe=my)
+                plan = _engine.mutation_plan(cfg, batch, pr)
+                rec = _engine.encode_records(pr, plan)
+                # inter-PE propagation: ring all-gather of mutation records
+                rec_all = jax.tree.map(
+                    lambda x: jax.lax.all_gather(x, axis, tiled=True), rec)
+                tab = _engine.commit_records(tab, rec_all)
+                return tab, StepResults(found=pr.found, value=pr.value,
+                                        ok=plan.ok, bucket=pr.bucket)
+
+            return jax.lax.scan(body, table, (ops, keys, vals))
+
+        table_spec = XorHashTable(P(), P(), P(), P(), cfg)
+    else:
+        def local_stream(table, ops, keys, vals):
+            d = jax.lax.axis_index(axis)
+            T, n = ops.shape
+            bucket = _h3(keys.reshape(T * n, cfg.key_words),
+                         table.q_masks).reshape(T, n)
+            (r_op, r_key, r_val, r_bkt), tgt = _engine.route_stream(
+                cfg, axis, bucket, ops, keys, vals, bucket)
+            # routed lane r belongs to origin device r // n == its PE
+            pe = jnp.repeat(jnp.arange(n_dev, dtype=jnp.int32), n)
+            sk, sv, sb, found, ok, value = _engine.run_stream_local(
+                cfg, table.store_keys, table.store_vals, table.store_valid,
+                pe, r_bkt, r_op, r_key, r_val,
+                bucket_base=d * cfg.local_buckets,
+                fused=fused, bucket_tiles=bucket_tiles)
+            f_l, ok_l, v_l = _engine.inverse_route(axis, tgt, found, ok, value)
+            table = XorHashTable(table.q_masks, sk, sv, sb, cfg)
+            return table, StepResults(found=f_l, value=v_l, ok=ok_l,
+                                      bucket=bucket)
+
+        table_spec = XorHashTable(P(), P(None, None, axis),
+                                  P(None, None, axis), P(None, None, axis),
+                                  cfg)
+
     fn = shard_map(
-        local_step, mesh=mesh,
-        in_specs=(P(), P(axis), P(axis), P(axis)),
-        out_specs=(P(), P(axis)),
+        local_stream, mesh=mesh,
+        in_specs=(table_spec, P(None, axis), P(None, axis), P(None, axis)),
+        out_specs=(table_spec, P(None, axis)),
         check_rep=False,
     )
     return jax.jit(fn)
+
+
+def make_distributed_step(mesh: Mesh, cfg: HashTableConfig, axis: str = "ht"):
+    """Per-step entry point — the ``T == 1`` special case of
+    :func:`make_distributed_stream`.  Returns ``f(table, op, key, val) ->
+    (table, results)`` with ``[N]``-shaped per-step tensors.
+    """
+    stream = make_distributed_stream(mesh, cfg, axis)
+
+    def step_fn(table, op, key, val):
+        table, res = stream(table, op[None], key[None], val[None])
+        return table, jax.tree.map(lambda x: x[0], res)
+
+    return step_fn

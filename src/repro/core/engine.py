@@ -21,6 +21,16 @@ plus a third, stream-granular stage (the StreamBackend protocol, DESIGN.md
                                query DMA, and bucket-axis blocking past the
                                VMEM budget.
 
+and a fourth, bucket-sharded stage (DESIGN.md §2) used under shard_map by
+``core.distributed.make_distributed_stream`` when ``cfg.shards > 1``:
+
+  route_stream / run_stream_local / inverse_route
+                               bucket -> owner shard via the high H3 index
+                               bits, queries exchanged with all_to_all, each
+                               partition streamed locally (the fused kernel
+                               with a bucket-base offset), results returned
+                               to origin lanes by the inverse permutation.
+
 Backends
 --------
 ``jnp``     Pure jax.numpy — the bit-exact semantic oracle (the former
@@ -59,6 +69,7 @@ __all__ = [
     "probe", "commit", "step", "run_stream",
     "probe_jnp", "commit_jnp", "mutation_plan", "encode_records",
     "commit_records", "staggered_open_slot",
+    "shard_owner", "route_stream", "inverse_route", "run_stream_local",
     "register_backend", "get_backend", "resolve_backend", "available_backends",
 ]
 
@@ -387,15 +398,18 @@ class PallasBackend:
                plan: Optional[MutationPlan] = None) -> XorHashTable:
         from repro.kernels import ops as kops
         plan = mutation_plan(table.cfg, batch, pr) if plan is None else plan
+        # Replicas are byte-identical, so one encoding serves every replica:
+        # compute it ONCE from the ProbeResult rem basis the probe already
+        # produced, leaving the per-replica kernel grid only the masked
+        # scatter (instead of R identical gather+XOR-tree encodes).
+        rec = encode_records(pr, plan)
         if kops.replica_bytes(table.store_keys, table.store_vals,
                               table.store_valid) > kops.VMEM_TABLE_BUDGET_BYTES:
-            # HBM-resident regime: reuse the encode basis already in the
-            # ProbeResult instead of letting the ops fallback re-gather it
-            return commit_records(table, encode_records(pr, plan))
+            return commit_records(table, rec)
         sk, sv, sb = kops.xor_commit(
             table.store_keys, table.store_vals, table.store_valid,
-            plan.port, plan.bucket, plan.slot, plan.do_write,
-            plan.new_key, plan.new_val, plan.new_valid)
+            rec["port"], rec["bucket"], rec["slot"],
+            rec["enc_k"], rec["enc_v"], rec["enc_b"])
         return XorHashTable(table.q_masks, sk, sv, sb, table.cfg)
 
     def run_stream(self, table: XorHashTable, ops: jnp.ndarray,
@@ -555,3 +569,163 @@ def run_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,
         return _scan_stream(table, ops, keys, vals, backend=name)
     return get_backend(name).run_stream(table, ops, keys, vals,
                                         bucket_tiles=bucket_tiles)
+
+
+# ---------------------------------------------------------------------------
+# Stage four: the bucket-sharded routing seam (DESIGN.md §2)
+#
+# When the table is partitioned by bucket ownership across a mesh
+# (``cfg.shards`` partitions of ``cfg.local_buckets`` buckets each), queries
+# must execute on the shard that owns their bucket.  The three functions
+# below are the shard_map-side dataflow used by
+# ``core.distributed.make_distributed_stream``:
+#
+#   route_stream       bucket -> owner shard (high H3 index bits), queries
+#                      exchanged with all_to_all in program order
+#   run_stream_local   the whole routed [T, Nr] stream against one partition
+#                      — the fused xor_stream kernel (bucket-base offset) on
+#                      pallas, the scanned jnp oracle elsewhere
+#   inverse_route      per-lane results returned to origin lanes by the
+#                      inverse permutation
+# ---------------------------------------------------------------------------
+
+def shard_owner(cfg: HashTableConfig, bucket: jnp.ndarray) -> jnp.ndarray:
+    """Owner shard of each global bucket index — the high index bits."""
+    return bucket.astype(jnp.int32) >> cfg.local_index_bits
+
+
+def _pack_u32(arrays):
+    """Pack ``[T, n]`` / ``[T, n, W]`` word-typed arrays into one
+    ``[T, n, Wtot]`` uint32 tensor (so a routing exchange is ONE collective
+    on one buffer, not one per payload).  Returns (packed, meta) where meta
+    replays dtypes/shapes for :func:`_unpack_u32`."""
+    meta, cols = [], []
+    for x in arrays:
+        col = x[..., None] if x.ndim == 2 else x
+        meta.append((x.dtype, x.ndim == 2, col.shape[-1]))
+        cols.append(col.astype(jnp.uint32))
+    return jnp.concatenate(cols, axis=-1), meta
+
+
+def _unpack_u32(packed, meta):
+    outs, off = [], 0
+    for dtype, squeeze, w in meta:
+        col = packed[..., off:off + w]
+        off += w
+        outs.append((col[..., 0] if squeeze else col).astype(dtype))
+    return outs
+
+
+def route_stream(cfg: HashTableConfig, axis: str, bucket: jnp.ndarray,
+                 *arrays: jnp.ndarray):
+    """Exchange per-step query payloads with their owner shards (shard_map
+    collective).
+
+    ``bucket`` ``[T, n]``: global H3 bucket of each local lane; its high
+    index bits name the owner shard.  The payload ``[T, n(, W)]`` arrays are
+    packed into one uint32 buffer and scattered into a ``[T, D*n, Wtot]``
+    send buffer — destination-major with capacity ``n`` per destination, so
+    arbitrary key skew (up to every lane owned by one shard) cannot drop
+    queries; unused slots stay zero, i.e. ``OP_NOP`` — then exchanged with
+    ONE ``all_to_all`` covering all T steps and every payload.
+
+    Routed arrays arrive in (origin-device, origin-lane) order, which equals
+    global program order, so the owner's sequential last-wins commit resolves
+    duplicate targets exactly like the replicated oracle.  Also returns
+    ``tgt [T, n]``, each lane's position in the routed stream; pass it to
+    :func:`inverse_route` to bring results home.
+    """
+    owner = shard_owner(cfg, bucket)                                # [T, n]
+    D = jax.lax.psum(1, axis)
+    T, n = owner.shape
+    onehot = owner[:, :, None] == jnp.arange(D, dtype=jnp.int32)    # [T, n, D]
+    rank = jnp.cumsum(onehot, axis=1)                               # [T, n, D]
+    pos = jnp.take_along_axis(rank, owner[:, :, None], axis=2)[..., 0] - 1
+    tgt = owner * n + pos                                           # [T, n]
+    packed, meta = _pack_u32(arrays)
+    buf = jnp.zeros((T, D * n, packed.shape[-1]), jnp.uint32)
+    buf = buf.at[jnp.arange(T)[:, None], tgt].set(packed)
+    routed = jax.lax.all_to_all(buf, axis, split_axis=1, concat_axis=1,
+                                tiled=True)
+    return _unpack_u32(routed, meta), tgt
+
+
+def inverse_route(axis: str, tgt: jnp.ndarray, *arrays: jnp.ndarray):
+    """Return routed per-lane results to their origin lanes — the inverse of
+    :func:`route_stream`: pack, ONE all_to_all back, gather by send
+    position."""
+    packed, meta = _pack_u32(arrays)
+    back = jax.lax.all_to_all(packed, axis, split_axis=1, concat_axis=1,
+                              tiled=True)
+    idx = jnp.broadcast_to(tgt[..., None], tgt.shape + (packed.shape[-1],))
+    return _unpack_u32(jnp.take_along_axis(back, idx, axis=1), meta)
+
+
+def run_stream_local(cfg: HashTableConfig, store_keys: jnp.ndarray,
+                     store_vals: jnp.ndarray, store_valid: jnp.ndarray,
+                     pe: jnp.ndarray, bucket: jnp.ndarray, ops: jnp.ndarray,
+                     keys: jnp.ndarray, vals: jnp.ndarray, *,
+                     bucket_base, backend: Optional[str] = None,
+                     fused: Optional[bool] = None,
+                     bucket_tiles: Optional[int] = None):
+    """Stream ``[T, Nr]`` routed queries through ONE bucket-shard partition.
+
+    ``store_*`` ``[R, k, local_buckets, S, W]`` hold the global bucket range
+    ``[bucket_base, bucket_base + local_buckets)``; ``bucket`` carries the
+    precomputed GLOBAL indices.  Lanes outside the partition (router padding
+    or foreign shards) are inert: no writes, found/ok False, value 0.  On the
+    pallas backend this is the fused ``xor_stream`` kernel with the
+    bucket-base offset (the bucket-tiling path reused unchanged); elsewhere
+    the scanned jnp oracle with the same partition masking.  Returns
+    ``(store_keys', store_vals', store_valid', found, ok, value)``.
+    """
+    name = _resolve_name(cfg, backend)
+    use_fused = fused if fused is not None else (name == "pallas")
+    k = cfg.k
+    port = jnp.minimum(pe, k - 1).astype(jnp.int32)
+    base = jnp.asarray(bucket_base).astype(jnp.int32)
+    R = store_keys.shape[0]
+    if use_fused:
+        from repro.kernels import ops as kops
+        legal = (pe < k).astype(jnp.int32)
+        tiles = bucket_tiles if bucket_tiles is not None else \
+            kops.stream_bucket_tiles(store_keys, store_vals, store_valid)
+        sk, sv, sb, found, ok, value = kops.xor_stream(
+            bucket, port, legal, ops, keys, vals, store_keys[0],
+            store_vals[0], store_valid[0], bucket_tiles=tiles,
+            stagger=cfg.stagger_slots, bucket_base=base)
+        bc = lambda x: jnp.broadcast_to(x[None], (R,) + x.shape)
+        return bc(sk), bc(sv), bc(sb), found, ok, value
+
+    Bl = store_keys.shape[2]
+
+    def body(carry, xs):
+        sk, sv, sb = carry
+        op, key, val, bkt = xs
+        rel = bkt.astype(jnp.int32) - base
+        in_part = (rel >= 0) & (rel < Bl)
+        idx = jnp.clip(rel, 0, Bl - 1)
+        (found, mslot, oslot, hopen, value,
+         remk, remv, remb) = probe_jnp(idx, port, key, sk, sv, sb,
+                                       stagger=cfg.stagger_slots)
+        # mask the probe to the partition, then reuse the single-domain
+        # mutation semantics verbatim (one source of truth): out-of-partition
+        # lanes can't match, can't claim a slot, and scatter-drop via the OOB
+        # bucket marker (cfg.buckets >= Bl).  Masked found flips the slot
+        # CHOICE vs the fused kernel only on inert lanes (do_write False, no
+        # observable effect).
+        found = found & in_part
+        value = jnp.where(found[:, None], value, jnp.uint32(0))
+        pr = ProbeResult(bucket=idx, pe=pe, found=found, match_slot=mslot,
+                         open_slot=oslot, has_open=hopen & in_part,
+                         value=value, rem_keys=remk, rem_vals=remv,
+                         rem_valid=remb)
+        plan = mutation_plan(cfg, QueryBatch(op, key, val), pr)
+        ok = plan.ok & jnp.where(op == OP_SEARCH, in_part, True)
+        sk, sv, sb = _scatter_records(sk, sv, sb, encode_records(pr, plan))
+        return (sk, sv, sb), (found, ok, value)
+
+    (sk, sv, sb), (found, ok, value) = jax.lax.scan(
+        body, (store_keys, store_vals, store_valid),
+        (ops, keys, vals, bucket))
+    return sk, sv, sb, found, ok, value

@@ -1,9 +1,10 @@
 """Pallas TPU kernels for the paper's hot paths (validated interpret=True):
-h3_hash (GF(2) hashing), xor_probe (fused decode+probe), xor_commit (fused
-non-search XOR encode + masked commit) and xor_stream (fused whole-stream
-probe->commit with a VMEM-persistent, bucket-tiled table).  Use
-repro.kernels.ops for the jit'd, fallback-guarded entry points; the jnp
-oracles live in repro.core.engine."""
+h3_hash (GF(2) hashing), xor_probe (fused decode+probe), xor_commit (masked
+scatter of engine-encoded mutation records into every replica) and
+xor_stream (fused whole-stream probe->commit with a VMEM-persistent,
+bucket-tiled table; a bucket-base offset runs shard-local partitions in the
+global index space).  Use repro.kernels.ops for the jit'd, fallback-guarded
+entry points; the jnp oracles live in repro.core.engine."""
 from repro.kernels.ops import (h3_hash, replica_bytes, stream_bucket_tiles,
                                xor_commit, xor_probe, xor_stream)
 

@@ -89,22 +89,24 @@ def xor_probe(bucket: jnp.ndarray, port: jnp.ndarray, qkeys: jnp.ndarray,
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def xor_commit(store_keys: jnp.ndarray, store_vals: jnp.ndarray,
                store_valid: jnp.ndarray, port: jnp.ndarray,
-               bucket: jnp.ndarray, slot: jnp.ndarray, do_write: jnp.ndarray,
-               new_key: jnp.ndarray, new_val: jnp.ndarray,
-               new_valid: jnp.ndarray, use_pallas: bool = True):
-    """Fused non-search XOR encode + masked commit into every replica.
+               bucket: jnp.ndarray, slot: jnp.ndarray, enc_k: jnp.ndarray,
+               enc_v: jnp.ndarray, enc_b: jnp.ndarray,
+               use_pallas: bool = True):
+    """Masked commit of pre-encoded mutation records into every replica.
 
-    store_* carry the replica axis ``[R, k, B, S, W*]``; see
-    xor_commit_pallas.  Falls back to the engine's jnp encode+scatter when the
-    replica exceeds the VMEM budget.
+    store_* carry the replica axis ``[R, k, B, S, W*]``; enc_* come from
+    ``engine.encode_records`` (one encode serves all replicas — see
+    xor_commit_pallas).  ``bucket >= B`` marks a masked lane.  Falls back to
+    the engine's jnp record scatter when the replica exceeds the VMEM budget.
     """
     if (not use_pallas or replica_bytes(store_keys, store_vals, store_valid)
             > VMEM_TABLE_BUDGET_BYTES):
-        from repro.core.engine import commit_jnp
-        return commit_jnp(store_keys, store_vals, store_valid, port, bucket,
-                          slot, do_write, new_key, new_val, new_valid)
+        from repro.core.engine import _scatter_records
+        rec = dict(port=port, bucket=bucket, slot=slot,
+                   enc_k=enc_k, enc_v=enc_v, enc_b=enc_b)
+        return _scatter_records(store_keys, store_vals, store_valid, rec)
     return xor_commit_pallas(store_keys, store_vals, store_valid, port, bucket,
-                             slot, do_write, new_key, new_val, new_valid,
+                             slot, enc_k, enc_v, enc_b,
                              interpret=not _on_tpu())
 
 
@@ -112,15 +114,18 @@ def xor_stream(bucket: jnp.ndarray, port: jnp.ndarray, legal: jnp.ndarray,
                ops: jnp.ndarray, qkeys: jnp.ndarray, qvals: jnp.ndarray,
                store_keys: jnp.ndarray, store_vals: jnp.ndarray,
                store_valid: jnp.ndarray, bucket_tiles: int = 1,
-               stagger: bool = False):
+               stagger: bool = False, bucket_base=0):
     """Fused in-kernel query streaming over one replica: probe + plan +
     non-search XOR encode + last-wins commit for a whole ``[T, N]`` stream in
     a single Pallas kernel, table VMEM-resident across steps (bucket-tiled
     when one replica exceeds the VMEM budget — pick ``bucket_tiles`` with
-    :func:`stream_bucket_tiles`).  See xor_stream_pallas.  Interpret mode on
-    CPU; the scanned per-step engine path is the semantic oracle.
+    :func:`stream_bucket_tiles`).  ``bucket_base`` (traced scalar) offsets a
+    shard-local partition into the global bucket space; lanes outside the
+    partition are inert.  See xor_stream_pallas.  Interpret mode on CPU; the
+    scanned per-step engine path is the semantic oracle.
     """
     return xor_stream_pallas(bucket, port, legal, ops, qkeys, qvals,
                              store_keys, store_vals, store_valid,
                              bucket_tiles=bucket_tiles,
-                             interpret=not _on_tpu(), stagger=stagger)
+                             interpret=not _on_tpu(), stagger=stagger,
+                             bucket_base=bucket_base)

@@ -1,17 +1,22 @@
-"""Pallas TPU kernel: fused non-search XOR tree encode + masked commit.
+"""Pallas TPU kernel: masked scatter of pre-encoded mutation records.
 
 The mutation half of the paper's PE pipeline (§IV-C.3): for every write lane
 the new plaintext entry is XOR-encoded against the *other* k-1 partial stores
 (the non-search XOR tree) and the encoding is scattered into the own-port
-store of EVERY replica (inter-PE propagation).  Fusing the encode with the
-scatter keeps the whole mutation dataflow inside one VMEM-resident kernel —
-the table never round-trips through HBM between the tree and the write.
+store of EVERY replica (inter-PE propagation).
 
-Timing matches the FPGA (and the jnp oracle) exactly: every encoding is
-computed against the pre-step snapshot first, then all write ports commit.
-The commit itself is a sequential masked scatter over lanes (lane order =
-program order, so duplicate (port, bucket, slot) targets resolve last-wins;
-the router guarantees write lanes have distinct ports at queries_per_pe=1).
+Replicas are byte-identical at step boundaries, so the encoding is the same
+for every replica — the engine computes it ONCE from the ``ProbeResult`` rem
+basis the probe stage already produced (``engine.encode_records``), and this
+kernel's per-replica grid is left with only the masked sequential scatter.
+(Earlier revisions re-ran the gather + XOR-tree encode inside the grid, once
+per replica — R identical encodes for R replicas.)
+
+Timing matches the FPGA (and the jnp oracle) exactly: encodings come from the
+pre-step snapshot (via the probe), then all write ports commit.  The commit
+is a sequential masked scatter over lanes (lane order = program order, so
+duplicate (port, bucket, slot) targets resolve last-wins; the router
+guarantees write lanes have distinct ports at queries_per_pe=1).
 
 Grid: one step per replica; the replica block plus the lane vectors live in
 VMEM.  Tables beyond the VMEM budget take the jnp fallback in ops.py.
@@ -26,51 +31,24 @@ from jax.experimental import pallas as pl
 
 
 def _xor_commit_kernel(skeys_ref, svals_ref, svalid_ref, port_ref, bucket_ref,
-                       slot_ref, dw_ref, nkey_ref, nval_ref, nvalid_ref,
+                       slot_ref, enck_ref, encv_ref, encb_ref,
                        okeys_ref, ovals_ref, ovalid_ref,
-                       *, k: int, buckets: int, n: int):
+                       *, buckets: int, n: int):
     # --- snapshot: read the pre-step replica, pass it through ---------------
-    sk = skeys_ref[...]                                    # [1, k, B, S, Wk]
-    sv = svals_ref[...]
-    sb = svalid_ref[...]
-    okeys_ref[...] = sk
-    ovals_ref[...] = sv
-    ovalid_ref[...] = sb
+    okeys_ref[...] = skeys_ref[...]
+    ovals_ref[...] = svals_ref[...]
+    ovalid_ref[...] = svalid_ref[...]
 
     port = port_ref[:].astype(jnp.int32)                   # [N]
     bucket = bucket_ref[:].astype(jnp.int32)               # [N] (OOB == masked)
     slot = slot_ref[:].astype(jnp.int32)                   # [N]
-    dw = dw_ref[:].astype(jnp.int32)                       # [N]
-    idx = jnp.minimum(bucket, buckets - 1)                 # clamp masked lanes
+    enc_k = enck_ref[...]                                  # [N, Wk]
+    enc_v = encv_ref[...]                                  # [N, Wv]
+    enc_b = encb_ref[:]                                    # [N]
 
-    # --- non-search XOR tree (against the snapshot) -------------------------
-    # gather the k partial-store rows of each lane's (bucket, slot)
-    rows_k = jnp.take(sk[0], idx, axis=1)                  # [k, N, S, Wk]
-    rows_v = jnp.take(sv[0], idx, axis=1)                  # [k, N, S, Wv]
-    rows_b = jnp.take(sb[0], idx, axis=1)                  # [k, N, S]
-    rk = jnp.take_along_axis(rows_k, slot[None, :, None, None], axis=2)[:, :, 0]
-    rv = jnp.take_along_axis(rows_v, slot[None, :, None, None], axis=2)[:, :, 0]
-    rb = jnp.take_along_axis(rows_b, slot[None, :, None], axis=2)[:, :, 0]
-
-    def xtree(x):                                          # static fold over k
-        acc = x[0]
-        for i in range(1, k):
-            acc = acc ^ x[i]
-        return acc
-
-    dec_k, dec_v, dec_b = xtree(rk), xtree(rv), xtree(rb)  # [N, W*] / [N]
-    own_k = jnp.take_along_axis(rk, port[None, :, None], axis=0)[0]
-    own_v = jnp.take_along_axis(rv, port[None, :, None], axis=0)[0]
-    own_b = jnp.take_along_axis(rb, port[None, :], axis=0)[0]
-
-    # enc = plain ^ (XOR over all k stores) ^ own-store row
-    enc_k = nkey_ref[...] ^ dec_k ^ own_k                  # [N, Wk]
-    enc_v = nval_ref[...] ^ dec_v ^ own_v                  # [N, Wv]
-    enc_b = nvalid_ref[:] ^ dec_b ^ own_b                  # [N]
-
-    # --- masked sequential commit (all encodings are already snapshotted) ---
+    # --- masked sequential commit (encodings pre-computed by the engine) ----
     def body(i, carry):
-        @pl.when(dw[i] != 0)
+        @pl.when(bucket[i] < buckets)
         def _():
             pt, bk, sl = port[i], bucket[i], slot[i]
             okeys_ref[0, pt, bk, sl, :] = jax.lax.dynamic_index_in_dim(
@@ -87,14 +65,14 @@ def _xor_commit_kernel(skeys_ref, svals_ref, svalid_ref, port_ref, bucket_ref,
 def xor_commit_pallas(store_keys: jnp.ndarray, store_vals: jnp.ndarray,
                       store_valid: jnp.ndarray, port: jnp.ndarray,
                       bucket: jnp.ndarray, slot: jnp.ndarray,
-                      do_write: jnp.ndarray, new_key: jnp.ndarray,
-                      new_val: jnp.ndarray, new_valid: jnp.ndarray,
-                      interpret: bool = True):
-    """Fused encode+commit over all replicas.
+                      enc_k: jnp.ndarray, enc_v: jnp.ndarray,
+                      enc_b: jnp.ndarray, interpret: bool = True):
+    """Masked scatter of encoded records into all replicas.
 
-    store_* ``[R, k, B, S, W*]``; port/bucket/slot/do_write ``[N]`` (bucket ==
-    B marks a masked lane); new_* plaintext ``[N, Wk] / [N, Wv] / [N]``.
-    Returns the updated (store_keys, store_vals, store_valid).
+    store_* ``[R, k, B, S, W*]``; port/bucket/slot ``[N]`` (``bucket >= B``
+    marks a masked lane — dropped); enc_* the XOR-encoded rows
+    ``[N, Wk] / [N, Wv] / [N]`` from ``engine.encode_records``.  Returns the
+    updated (store_keys, store_vals, store_valid).
     """
     R, k, B, S, Wk = store_keys.shape
     Wv = store_vals.shape[-1]
@@ -112,11 +90,11 @@ def xor_commit_pallas(store_keys: jnp.ndarray, store_vals: jnp.ndarray,
         jax.ShapeDtypeStruct(store_valid.shape, store_valid.dtype),
     )
     return pl.pallas_call(
-        functools.partial(_xor_commit_kernel, k=k, buckets=B, n=N),
+        functools.partial(_xor_commit_kernel, buckets=B, n=N),
         grid=grid,
         in_specs=[
             rep(store_keys.shape), rep(store_vals.shape), rep(store_valid.shape),
-            lane1, lane1, lane1, lane1,
+            lane1, lane1, lane1,
             lane2(Wk), lane2(Wv), lane1,
         ],
         out_specs=(rep(store_keys.shape), rep(store_vals.shape),
@@ -128,4 +106,4 @@ def xor_commit_pallas(store_keys: jnp.ndarray, store_vals: jnp.ndarray,
         interpret=interpret,
     )(store_keys, store_vals, store_valid,
       port.astype(jnp.int32), bucket.astype(jnp.int32), slot.astype(jnp.int32),
-      do_write.astype(jnp.int32), new_key, new_val, new_valid)
+      enc_k, enc_v, enc_b)

@@ -42,6 +42,16 @@ where the sequential commit loop preserves stable lane order; last-wins
 semantics therefore survive blocking (the ordering argument in DESIGN.md
 §3.1).  Per-lane results are emitted per tile (masked to the tile's lanes)
 and gathered by tile index outside the kernel.
+
+Bucket-base offset (the sharded regime, DESIGN.md §2): ``bucket_base`` is a
+*traced* scalar — under ``shard_map`` it is ``axis_index * local_buckets`` —
+marking the global bucket range ``[base, base + B)`` this table partition
+owns.  Lane buckets stay GLOBAL; the kernel probes/commits at ``bucket -
+base`` and lanes outside the partition are inert for every tile (no writes,
+found/ok False, value 0), which is what makes the router's NOP padding and
+the tile sweep safe without any extra masking.  ``base == 0`` with a full
+table recovers the single-domain kernel bit-exactly, so the bucket-tiling
+path is reused unchanged by shard-local tables.
 """
 from __future__ import annotations
 
@@ -54,11 +64,12 @@ from jax.experimental import pallas as pl
 from repro.core.hash_table import OP_DELETE, OP_INSERT, OP_SEARCH
 
 
-def _xor_stream_kernel(bucket_ref, op_ref, port_ref, legal_ref, qkey_ref,
-                       qval_ref, skeys_ref, svals_ref, svalid_ref,
+def _xor_stream_kernel(bucket_ref, op_ref, port_ref, legal_ref, base_ref,
+                       qkey_ref, qval_ref, skeys_ref, svals_ref, svalid_ref,
                        okeys_ref, ovals_ref, ovalid_ref,
                        found_ref, ok_ref, value_ref,
-                       *, k: int, tile_buckets: int, n: int, stagger: bool):
+                       *, k: int, tile_buckets: int, buckets: int, n: int,
+                       stagger: bool):
     bt = pl.program_id(0)
     t = pl.program_id(1)
 
@@ -70,12 +81,17 @@ def _xor_stream_kernel(bucket_ref, op_ref, port_ref, legal_ref, qkey_ref,
         ovals_ref[...] = svals_ref[...]
         ovalid_ref[...] = svalid_ref[...]
 
-    bucket = bucket_ref[0].astype(jnp.int32)               # [N]
+    bucket = bucket_ref[0].astype(jnp.int32)               # [N] GLOBAL index
     op = op_ref[0]                                         # [N]
     port = port_ref[:].astype(jnp.int32)                   # [N]
     legal = legal_ref[:] != 0                              # [N]
-    in_tile = (bucket // tile_buckets) == bt
-    local = jnp.clip(bucket - bt * tile_buckets, 0, tile_buckets - 1)
+    # partition-relative bucket: lanes outside [base, base + buckets) never
+    # claim a tile, so they are inert (router pads / foreign shards)
+    rel = bucket - base_ref[0]
+    in_part = (rel >= 0) & (rel < buckets)
+    rel_c = jnp.clip(rel, 0, buckets - 1)
+    in_tile = in_part & ((rel_c // tile_buckets) == bt)
+    local = jnp.clip(rel_c - bt * tile_buckets, 0, tile_buckets - 1)
 
     # step-t snapshot of this tile == output refs after steps 0..t-1
     sk = okeys_ref[...]                                    # [k, Bt, S, Wk]
@@ -175,7 +191,8 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
                       qkeys: jnp.ndarray, qvals: jnp.ndarray,
                       store_keys: jnp.ndarray, store_vals: jnp.ndarray,
                       store_valid: jnp.ndarray, bucket_tiles: int = 1,
-                      interpret: bool = True, stagger: bool = False):
+                      interpret: bool = True, stagger: bool = False,
+                      bucket_base=0):
     """Stream T steps of N queries through one fused kernel.
 
     bucket/ops ``[T, N]``; port/legal ``[N]``; qkeys ``[T, N, Wk]``;
@@ -183,6 +200,8 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
     ``(store_keys', store_vals', store_valid', found[T, N] bool,
     ok[T, N] bool, value[T, N, Wv])``.  ``bucket_tiles`` must be a
     power-of-two divisor of B (1 == fully VMEM-resident table).
+    ``bucket_base`` (traced scalar) marks the global bucket range this
+    table partition owns; lanes outside ``[base, base + B)`` are inert.
     """
     T, N = ops.shape
     k, B, S, Wk = store_keys.shape
@@ -192,9 +211,11 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
         raise ValueError(f"bucket_tiles={BT} must divide buckets={B}")
     Bt = B // BT
     grid = (BT, T)
+    base = jnp.reshape(jnp.asarray(bucket_base).astype(jnp.int32), (1,))
 
     qspec2 = pl.BlockSpec((1, N), lambda bt, t: (t, 0))
     lane1 = pl.BlockSpec((N,), lambda bt, t: (0,))
+    base1 = pl.BlockSpec((1,), lambda bt, t: (0,))
     tile = lambda shape: pl.BlockSpec(
         (shape[0], Bt) + shape[2:],
         lambda bt, t: (0, bt) + (0,) * (len(shape) - 2))
@@ -214,14 +235,15 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
         pl.BlockSpec((1, 1, N, Wv), lambda bt, t: (bt, t, 0, 0)),
     )
     sk, sv, sb, found_full, ok_full, value_full = pl.pallas_call(
-        functools.partial(_xor_stream_kernel, k=k, tile_buckets=Bt, n=N,
-                          stagger=stagger),
+        functools.partial(_xor_stream_kernel, k=k, tile_buckets=Bt, buckets=B,
+                          n=N, stagger=stagger),
         grid=grid,
         in_specs=[
             qspec2,                                        # bucket
             qspec2,                                        # op
             lane1,                                         # port
             lane1,                                         # legal
+            base1,                                         # bucket_base
             pl.BlockSpec((1, N, Wk), lambda bt, t: (t, 0, 0)),
             pl.BlockSpec((1, N, Wv), lambda bt, t: (t, 0, 0)),
             tile(store_keys.shape), tile(store_vals.shape),
@@ -231,14 +253,16 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
         out_shape=out_shapes,
         # the table updates in place — without aliasing every tile sweep
         # would round-trip the full table through fresh output buffers
-        input_output_aliases={6: 0, 7: 1, 8: 2},
+        input_output_aliases={7: 0, 8: 1, 9: 2},
         interpret=interpret,
     )(bucket.astype(jnp.uint32), ops.astype(jnp.int32),
-      port.astype(jnp.int32), legal.astype(jnp.int32), qkeys, qvals,
+      port.astype(jnp.int32), legal.astype(jnp.int32), base, qkeys, qvals,
       store_keys, store_vals, store_valid)
 
-    # every lane's real result lives in its bucket's tile
-    tile_idx = (bucket.astype(jnp.int32) // Bt)[None]      # [1, T, N]
+    # every lane's real result lives in its bucket's tile (out-of-partition
+    # lanes are masked False/0 in every tile, so any gather index works)
+    rel = jnp.clip(bucket.astype(jnp.int32) - base[0], 0, B - 1)
+    tile_idx = (rel // Bt)[None]                           # [1, T, N]
     found = jnp.take_along_axis(found_full, tile_idx, axis=0)[0]
     ok = jnp.take_along_axis(ok_full, tile_idx, axis=0)[0]
     value = jnp.take_along_axis(value_full, tile_idx[..., None], axis=0)[0]

@@ -43,12 +43,16 @@ class ServeConfig:
     s_max: int = 256
     block_tokens: int = 16
     eos_token: int = -1                 # -1: run to max_new_tokens
+    cache_shards: int = 1               # bucket-shard the prefix-cache page
+                                        # table across this many devices
+                                        # (PrefixCache(shards=); 1 == local)
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
         self.cfg, self.params, self.scfg = cfg, params, scfg
-        self.prefix_cache = PrefixCache(block_tokens=scfg.block_tokens)
+        self.prefix_cache = PrefixCache(block_tokens=scfg.block_tokens,
+                                        shards=scfg.cache_shards)
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * scfg.slots
         self.pos = np.zeros(scfg.slots, np.int32)
@@ -94,14 +98,16 @@ class Engine:
         self.slots[slot] = req
 
     # ------------------------------------------------------------------- step
-    def step(self) -> int:
-        """Admit + one batched decode step.  Returns #active slots."""
+    def step(self) -> List[Request]:
+        """Admit + one batched decode step.  Returns the requests that
+        finished (and freed their slot) this step."""
         for i in range(len(self.slots)):
             if self.slots[i] is None and self.queue:
                 self._admit(i, self.queue.pop(0))
         active = [i for i, r in enumerate(self.slots) if r is not None]
+        finished: List[Request] = []
         if not active:
-            return 0
+            return finished
         toks = np.zeros((self.scfg.slots, 1), np.int32)
         for i in active:
             toks[i, 0] = self.slots[i].out_tokens[-1]
@@ -120,11 +126,14 @@ class Engine:
                     or int(nxt[i]) == self.scfg.eos_token):
                 r.done = True
                 self.slots[i] = None
-        return len(active)
+                finished.append(r)
+        return finished
 
     def run(self) -> List[Request]:
+        """Drain the queue and every occupied slot; returns the requests that
+        actually finished during this call — including ones already sitting
+        in slots when ``run()`` was invoked, which a queue snapshot misses."""
         finished: List[Request] = []
-        pending = list(self.queue)
         while self.queue or any(s is not None for s in self.slots):
-            self.step()
-        return pending
+            finished.extend(self.step())
+        return finished

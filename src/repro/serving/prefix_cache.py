@@ -36,23 +36,43 @@ def chain_key(parent: int, block_tokens: np.ndarray) -> int:
 
 
 class PrefixCache:
-    """Hash-table-backed page table for KV blocks."""
+    """Hash-table-backed page table for KV blocks.
+
+    ``shards > 1`` partitions the page table's bucket axis across a device
+    mesh (``core.distributed``): each device owns ``buckets/shards`` buckets
+    and probes/commits ride the routed distributed stream, so the page table
+    can exceed one device's memory.  Requires ``shards`` devices and
+    ``p % shards == 0`` (lanes split evenly over the mesh).
+    """
 
     def __init__(self, num_pages: int = 4096, block_tokens: int = 16,
-                 p: int = 8, seed: int = 0, backend: str = "auto"):
+                 p: int = 8, seed: int = 0, backend: str = "auto",
+                 shards: int = 1):
         buckets = 1 << max(int(np.ceil(np.log2(max(num_pages, 2) * 2))), 4)
+        if p % shards:
+            raise ValueError(f"need p % shards == 0, got p={p} shards={shards}")
         self.cfg = HashTableConfig(
             p=p, k=p, buckets=buckets, slots=4, key_words=2, val_words=2,
-            replicate_reads=False, stagger_slots=True, backend=backend)
-        self.table = init_table(self.cfg, jax.random.key(seed))
+            replicate_reads=False, stagger_slots=True, backend=backend,
+            shards=shards)
         # probe+commit through the pluggable query engine (DESIGN.md §3/§4);
         # multi-step batches ride the stream seam — the fused xor_stream
         # kernel on pallas-capable backends, the scanned oracle on jnp.
         # (retraces once per distinct step count T; admission/lookup batch
         # shapes repeat, so the cache stays warm)
-        self._stream = jax.jit(engine.run_stream,
-                               static_argnames=("backend", "fused",
-                                                "bucket_tiles"))
+        if shards > 1:
+            from repro.core.distributed import (init_distributed_table,
+                                                make_distributed_stream,
+                                                make_ht_mesh)
+            self.mesh = make_ht_mesh(shards)
+            self.table = init_distributed_table(self.cfg, jax.random.key(seed),
+                                                self.mesh)
+            self._stream = make_distributed_stream(self.mesh, self.cfg)
+        else:
+            self.table = init_table(self.cfg, jax.random.key(seed))
+            self._stream = jax.jit(engine.run_stream,
+                                   static_argnames=("backend", "fused",
+                                                    "bucket_tiles"))
         self.block_tokens = block_tokens
         self.free_pages: List[int] = list(range(num_pages - 1, -1, -1))
         self.lru: Dict[int, int] = {}       # key64 -> last-touch counter

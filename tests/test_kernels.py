@@ -94,7 +94,9 @@ def test_ops_wrappers_fallback(rng):
                                              (8, 2, False)])
 @pytest.mark.parametrize("R", [1, 4])
 def test_xor_commit_kernel_vs_oracle(k, slots, stagger, R, rng):
-    """Fused encode+commit kernel == jnp encode+scatter, for every replica."""
+    """Scatter-only commit kernel fed one engine-side encode == the jnp
+    encode+scatter oracle, for every replica (replicas byte-identical, so
+    one encoding serves all R — the per-replica grid only scatters)."""
     kw, vw, B, N = 2, 1, 64, 32
     _, tab, ins_keys, _ = _populated_table(rng, k, B, slots, kw, vw, 24)
     # build a write batch against a populated single-replica table, then
@@ -109,6 +111,7 @@ def test_xor_commit_kernel_vs_oracle(k, slots, stagger, R, rng):
     port = jnp.array(rng.integers(0, k, N, dtype=np.int32))
     pr = probe_jnp(bucket, port, jnp.array(qkeys), sk, sv, sb, stagger=stagger)
     found, mslot, oslot, hopen = pr[0], pr[1], pr[2], pr[3]
+    remk, remv, remb = pr[5], pr[6], pr[7]
     slot = jnp.where(found, mslot, oslot)
     # restrict writes to unique buckets so each lane's expected row is easy
     # to state independently; duplicate targets resolve last-wins on every
@@ -125,10 +128,16 @@ def test_xor_commit_kernel_vs_oracle(k, slots, stagger, R, rng):
     new_key = jnp.array(qkeys)
     new_val = jnp.array(rng.integers(1, 2 ** 32, size=(N, vw), dtype=np.uint32))
     new_valid = jnp.ones((N,), jnp.uint32)
-    args = (sk, sv, sb, port, w_bucket, slot, do_write,
-            new_key, new_val, new_valid)
-    outs_k = xor_commit_pallas(*args)
-    outs_r = commit_jnp(*args)
+    # the engine-side one-shot encode (encode_records on the rem basis)
+    pick = lambda x, s: jnp.take_along_axis(
+        x, s.reshape((N,) + (1,) * (x.ndim - 1)), axis=1)[:, 0]
+    enc_k = new_key ^ pick(remk, slot)
+    enc_v = new_val ^ pick(remv, slot)
+    enc_b = new_valid ^ pick(remb, slot)
+    outs_k = xor_commit_pallas(sk, sv, sb, port, w_bucket, slot,
+                               enc_k, enc_v, enc_b)
+    outs_r = commit_jnp(sk, sv, sb, port, w_bucket, slot, do_write,
+                        new_key, new_val, new_valid)
     for nm, a, b in zip(("keys", "vals", "valid"), outs_k, outs_r):
         assert (np.asarray(a) == np.asarray(b)).all(), nm
     # replicas must stay identical after the commit

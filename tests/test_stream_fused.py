@@ -202,6 +202,66 @@ def test_stream_bucket_tiles_power_of_two(monkeypatch):
     assert kops.stream_bucket_tiles(*args) == cfg.buckets
 
 
+def test_run_stream_local_partitions_merge_to_oracle(rng):
+    """The shard-local stream (engine.run_stream_local): manually partition a
+    table's bucket axis, run the SAME global-bucket stream against every
+    partition with its bucket-base offset (fused kernel and scanned jnp), and
+    merge — bit-exact with the unsharded oracle; out-of-partition lanes are
+    inert.  This is the single-device half of the sharded distributed path
+    (routing/all_to_all is covered by tests/test_distributed_sharded.py)."""
+    from repro.core.hashing import h3_hash as h3
+    cfg = HashTableConfig(p=4, k=2, buckets=64, slots=4,
+                          replicate_reads=False, stagger_slots=True)
+    scfg = dataclasses.replace(cfg, shards=4)
+    op, keys, vals = _random_trace(rng, 64, 1)
+    ops, kk, vv = schedule_queries(op, keys, vals, cfg)
+    tab = init_table(cfg, jax.random.key(0))
+    otab, ores = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv),
+                            backend="jnp", fused=False)
+    T, N = ops.shape
+    bucket = h3(jnp.array(kk).reshape(T * N, 1), tab.q_masks).reshape(T, N)
+    pe = jnp.arange(N, dtype=jnp.int32) % cfg.p     # == the oracle's lane map
+    Bl = scfg.local_buckets
+    for fused in (False, True):
+        parts = {"store_keys": [], "store_vals": [], "store_valid": []}
+        got_f = np.zeros((T, N), bool)
+        got_ok = np.zeros((T, N), bool)
+        got_v = np.zeros((T, N, 1), np.uint32)
+        for s in range(scfg.shards):
+            lo = s * Bl
+            sk, sv, sb, f, ok, val = engine.run_stream_local(
+                scfg, tab.store_keys[:, :, lo:lo + Bl],
+                tab.store_vals[:, :, lo:lo + Bl],
+                tab.store_valid[:, :, lo:lo + Bl],
+                pe, bucket, jnp.array(ops), jnp.array(kk), jnp.array(vv),
+                bucket_base=lo, fused=fused)
+            parts["store_keys"].append(np.asarray(sk))
+            parts["store_vals"].append(np.asarray(sv))
+            parts["store_valid"].append(np.asarray(sb))
+            # exactly one partition owns each lane; the rest stay False/0
+            assert not (got_f & np.asarray(f)).any()
+            got_f |= np.asarray(f)
+            got_ok |= np.asarray(ok)
+            got_v = np.maximum(got_v, np.asarray(val))
+        assert (got_f == np.asarray(ores.found)).all(), f"fused={fused}"
+        assert (got_ok == np.asarray(ores.ok)).all(), f"fused={fused}"
+        assert (got_v == np.asarray(ores.value)).all(), f"fused={fused}"
+        for nm, chunks in parts.items():
+            merged = np.concatenate(chunks, axis=2)
+            assert (merged == np.asarray(getattr(otab, nm))).all(), \
+                f"fused={fused}: {nm} diverged"
+
+
+def test_shards_config_validation():
+    cfg = HashTableConfig(buckets=64, shards=4)
+    assert cfg.local_buckets == 16 and cfg.global_buckets == 64
+    assert cfg.local_index_bits == 4 and cfg.index_bits == 6
+    with pytest.raises(ValueError):
+        HashTableConfig(buckets=64, shards=3)       # power of two
+    with pytest.raises(ValueError):
+        HashTableConfig(buckets=16, shards=32)      # shards <= buckets
+
+
 def test_scatter_records_supersession_still_last_wins(rng):
     """The O(N log N) segment-max supersession mask must keep XLA-scatter
     duplicate resolution bit-identical to sequential last-wins, including
