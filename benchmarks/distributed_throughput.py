@@ -18,6 +18,14 @@ scanned jnp path on both sides (interpret-mode Pallas is a correctness
 harness, not a fast path — same policy as BENCH_stream.json); the comparison
 stays apples-to-apples.
 
+Each sharded row also records **routed-lane occupancy**: the router reserves
+the skew-proof capacity ``n_local`` per (origin, owner) pair — ``D*n_local``
+routed slots per owner per step — while the actual per-owner load under the
+uniform stimulus is ~``N/D = n_local``.  The recorded mean/max owner load vs
+capacity sizes the ROADMAP "two-pass / carry-over router" item with data:
+``capacity / max_load`` is the routed-width shrink a load-aware router could
+take without dropping queries on this trace.
+
 Emits ``BENCH_distributed.json`` (full mode; ``--smoke`` is the CI harness
 check).  The measurement re-execs in a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the conftest
@@ -37,6 +45,32 @@ T_FULL, NL_FULL, BUCKETS_FULL, ITERS = 16, 8, 1 << 13, 9
 T_SMOKE, NL_SMOKE, BUCKETS_SMOKE = 2, 2, 1 << 8
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _routed_occupancy(cfg, q_masks, keys_j):
+    """Per-owner routed-lane load vs the skew-proof capacity, from the
+    stimulus alone (deterministic, no timing)."""
+    import numpy as np
+
+    from repro.core.engine import shard_owner
+    from repro.core.hashing import h3_hash
+
+    T, N = keys_j.shape[:2]
+    bucket = h3_hash(keys_j.reshape(T * N, cfg.key_words), q_masks)
+    owner = np.asarray(shard_owner(cfg, bucket)).reshape(T, N)
+    D = cfg.shards
+    loads = np.zeros((T, D), np.int64)          # real lanes routed per owner
+    for t in range(T):
+        loads[t] = np.bincount(owner[t], minlength=D)
+    capacity = N                                # n_local per origin x D origins
+    return {
+        "capacity_per_owner": int(capacity),
+        "mean_owner_load": float(loads.mean()),
+        "max_owner_load": int(loads.max()),
+        "mean_occupancy": float(loads.mean() / capacity),
+        "max_occupancy": float(loads.max() / capacity),
+        "router_shrink_potential": float(capacity / max(loads.max(), 1)),
+    }
 
 
 def _sweep(smoke: bool) -> None:
@@ -82,18 +116,22 @@ def _sweep(smoke: bool) -> None:
         us = bench_group({"sharded_stream": run_sharded,
                           "replicated_step": run_replicated}, iters=iters)
         mops = {name: T * N / t for name, t in us.items()}
+        occ = _routed_occupancy(cfg, tab_sh.q_masks, keys_j)
         results["rows"].append({
             "shards": D,
             "mops_sharded_stream": mops["sharded_stream"],
             "mops_replicated_step": mops["replicated_step"],
             "sharded_over_replicated": (mops["sharded_stream"]
                                         / mops["replicated_step"]),
+            "routed_occupancy": occ,
         })
         row(f"distributed_throughput_D{D}", 0.0,
             f"sharded_MOPS={mops['sharded_stream']:.3f};"
             f"replicated_MOPS={mops['replicated_step']:.3f};"
             f"sharded_over_replicated="
-            f"{mops['sharded_stream'] / mops['replicated_step']:.3f}")
+            f"{mops['sharded_stream'] / mops['replicated_step']:.3f};"
+            f"max_occupancy={occ['max_occupancy']:.3f};"
+            f"router_shrink={occ['router_shrink_potential']:.1f}x")
     if smoke:
         print("smoke OK")
         return

@@ -11,6 +11,14 @@ analytic MODEL_FLOPS (6·N_active·D for train, 2·N_active·D prefill/decode,
 plus quadratic attention / recurrent-state terms).  The compute term uses
 max(hlo x chips, model); the ratio model/hlo is reported per cell.
 
+Also reports measured-vs-modeled for the fused stream kernel: every
+BENCH_stream.json row is re-derived from ``perfmodel.stream_modeled_mops``
+(commit-cost + blocked-regime terms) at the benchmark's config, for each
+measured column (scanned ~ serial commit, fused, blocked binned/unbinned).
+Off-TPU the measurement is interpret-mode CPU, so the interesting number is
+the RELATIVE shape (fused/blocked/binned ratios), not the absolute gap —
+both are printed.
+
 Writes experiments/roofline.csv and prints the table.
 """
 from __future__ import annotations
@@ -117,6 +125,42 @@ def analyze(dryrun_dir: str = "experiments/dryrun",
     return rows
 
 
+def stream_measured_vs_modeled(path: str = "BENCH_stream.json") -> list:
+    """measured-vs-modeled rows for the fused stream kernel
+    (BENCH_stream.json x perfmodel.stream_modeled_mops)."""
+    from repro.core.config import HashTableConfig
+    from repro.core.perfmodel import stream_modeled_mops
+    if not os.path.exists(path):
+        return []
+    bench = json.load(open(path))
+    # the bench records its table geometry so the model can't desync from it
+    table = bench.get("table", dict(buckets=1 << 12, slots=4,
+                                    replicate_reads=False,
+                                    stagger_slots=True))
+    cfg = HashTableConfig(p=bench["p"], k=bench["p"],
+                          queries_per_pe=bench["qpp"], **table)
+    # column -> the model regime it measures (stream_throughput.py shapes);
+    # scanned = per-step dispatch (full table round trip every step) with
+    # the serial commit
+    regimes = {
+        "mops_scanned": dict(bucket_tiles=1, vectorized_commit=False,
+                             fused=False),
+        "mops_fused": dict(bucket_tiles=1),
+        "mops_fused_blocked8": dict(bucket_tiles=8, binned=True),
+        "mops_fused_blocked8_nobinned": dict(bucket_tiles=8, binned=False),
+    }
+    rows = []
+    for r in bench["rows"]:
+        for col, kw in regimes.items():
+            if col not in r:
+                continue
+            modeled = stream_modeled_mops(cfg, steps=r["steps"], **kw)
+            rows.append(dict(steps=r["steps"], column=col,
+                             measured_mops=r[col], modeled_mops=modeled,
+                             measured_over_modeled=r[col] / modeled))
+    return rows
+
+
 def main() -> None:
     rows = analyze()
     os.makedirs("experiments", exist_ok=True)
@@ -137,6 +181,11 @@ def main() -> None:
               f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
               f"collective_s={r['collective_s']:.3e};dom={r['dominant']};"
               f"frac={r['roofline_frac']:.3f}")
+    for r in stream_measured_vs_modeled():
+        print(f"roofline_stream_T{r['steps']}__{r['column']},0.0,"
+              f"measured_MOPS={r['measured_mops']:.3f};"
+              f"modeled_MOPS={r['modeled_mops']:.1f};"
+              f"measured_over_modeled={r['measured_over_modeled']:.2e}")
 
 
 if __name__ == "__main__":

@@ -5,10 +5,15 @@ The fused xor_stream kernel amortizes one kernel launch over the whole
 ``[T, N]`` stream while the scanned path dispatches probe+commit per step —
 so the fused/scanned ratio should GROW with T (the FPGA pipeline analogy:
 longer bursts keep the PE array full).  The ``blocked`` rows pin
-``bucket_tiles=8`` so the same table runs the bucket-axis-blocked kernel,
-exercising the HBM-resident code path that previously fell back to jnp
-gathers.  Emits ``BENCH_stream.json`` (full mode only; ``--smoke`` is the CI
-harness check).
+``bucket_tiles=8`` so the same table runs the bucket-blocked kernel,
+exercising the HBM-resident code path — in BOTH dispatch layouts
+(DESIGN.md §3.1): ``blocked8`` is the tile-binned dispatch (sorted lanes,
+windowed sweep, the default), ``blocked8_nobinned`` the mask-all-N baseline
+it replaced.  ``--binned`` / ``--no-binned`` restrict the A/B to one side
+(CI runs both); the default measures all columns in ONE paired round-robin
+group, so the binned-over-unbinned ratio is drift-immune.  Emits
+``BENCH_stream.json`` (full mode only; ``--smoke`` is the CI harness
+check).
 """
 from __future__ import annotations
 
@@ -28,31 +33,38 @@ TS = (2, 8, 32)
 ITERS = 9          # paired best-of-N rounds (bench_group): drift-immune
 
 
+# table geometry, recorded in BENCH_stream.json so roofline.py models the
+# config that was actually measured
+TABLE = dict(buckets=1 << 12, slots=4, replicate_reads=False,
+             stagger_slots=True)
+
+
 def run_t(steps: int, qpp: int = QPP, iters: int = ITERS,
-          blocked_tiles: int = 8):
-    """scanned vs fused vs bucket-blocked-fused on identical stimulus,
-    timed round-robin (drift-immune paired comparison)."""
-    cfg = HashTableConfig(p=P, k=P, buckets=1 << 12, slots=4,
-                          replicate_reads=False, stagger_slots=True,
-                          queries_per_pe=qpp, backend="pallas")
+          blocked_tiles: int = 8, binned_variants=(True, False)):
+    """scanned vs fused vs bucket-blocked-fused (binned and/or unbinned) on
+    identical stimulus, timed round-robin (drift-immune paired comparison)."""
+    cfg = HashTableConfig(p=P, k=P, queries_per_pe=qpp, backend="pallas",
+                          **TABLE)
     tab = init_table(cfg, jax.random.key(0))
     N = cfg.queries_per_step
     ops_j, keys_j, vals_j = mixed_stream(cfg, steps)
-    jfn = jax.jit(run_stream,
-                  static_argnames=("backend", "fused", "bucket_tiles"))
+    jfn = jax.jit(run_stream, static_argnames=("backend", "fused",
+                                               "bucket_tiles", "binned"))
 
     fns = {
         "scanned": functools.partial(jfn, tab, ops_j, keys_j, vals_j,
                                      fused=False),
         "fused": functools.partial(jfn, tab, ops_j, keys_j, vals_j,
                                    fused=True),
-        # pinned bucket_tiles exercises the >VMEM blocked regime without
-        # allocating a table beyond the budget (the knob is jit-static, so
-        # the cache keeps this distinct from the auto-tiled fused variant)
-        f"blocked{blocked_tiles}": functools.partial(
-            jfn, tab, ops_j, keys_j, vals_j, fused=True,
-            bucket_tiles=blocked_tiles),
     }
+    # pinned bucket_tiles exercises the >VMEM blocked regime without
+    # allocating a table beyond the budget (the knob is jit-static, so the
+    # cache keeps these distinct from the auto-tiled fused variant)
+    for binned in binned_variants:
+        name = f"blocked{blocked_tiles}" + ("" if binned else "_nobinned")
+        fns[name] = functools.partial(jfn, tab, ops_j, keys_j, vals_j,
+                                      fused=True, bucket_tiles=blocked_tiles,
+                                      binned=binned)
     us = bench_group(fns, iters=iters, warmup=2)
     return {name: steps * N / t for name, t in us.items()}   # MOPS
 
@@ -61,27 +73,46 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, 1 iter, no JSON — CI harness check")
+    ap.add_argument("--binned", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="A/B: restrict the blocked rows to the tile-binned "
+                         "dispatch (--binned) or the mask-all-N baseline "
+                         "(--no-binned); default measures both")
     args = ap.parse_args()
     ts, qpp, iters = ((2,), 2, 1) if args.smoke else (TS, QPP, ITERS)
+    variants = (True, False) if args.binned is None else (args.binned,)
 
     results = {"host_backend": jax.default_backend(),
                "interpret_mode": jax.default_backend() != "tpu",
-               "p": P, "qpp": qpp, "iters": iters,
+               "p": P, "qpp": qpp, "iters": iters, "table": TABLE,
                "stat": "paired best-of-N (bench_group round-robin)",
+               "notes": "blocked8 pays ONE full-replica sweep (tile in+out) "
+                        "per stream regardless of T (perfmodel "
+                        "stream_modeled_mops sweep term), so short streams "
+                        "(T=2) are sweep-dominated; the unblocked kernel's "
+                        "aliased in-place tiles pay no sweep.",
                "rows": []}
     for steps in ts:
-        mops = run_t(steps, qpp=qpp, iters=iters)
-        scanned, fused, blocked = (mops["scanned"], mops["fused"],
-                                   mops["blocked8"])
-        results["rows"].append({
-            "steps": steps, "mops_scanned": scanned, "mops_fused": fused,
-            "mops_fused_blocked8": blocked,
-            "fused_over_scanned": fused / scanned,
-        })
-        row(f"stream_throughput_T{steps}", 0.0,
-            f"scanned_MOPS={scanned:.2f};fused_MOPS={fused:.2f};"
-            f"fused_blocked8_MOPS={blocked:.2f};"
-            f"fused_over_scanned={fused / scanned:.3f}")
+        mops = run_t(steps, qpp=qpp, iters=iters, binned_variants=variants)
+        scanned, fused = mops["scanned"], mops["fused"]
+        rec = {"steps": steps, "mops_scanned": scanned, "mops_fused": fused,
+               "fused_over_scanned": fused / scanned}
+        derived = (f"scanned_MOPS={scanned:.2f};fused_MOPS={fused:.2f};"
+                   f"fused_over_scanned={fused / scanned:.3f}")
+        if "blocked8" in mops:
+            rec["mops_fused_blocked8"] = mops["blocked8"]
+            rec["blocked8_over_fused"] = mops["blocked8"] / fused
+            derived += f";fused_blocked8_MOPS={mops['blocked8']:.2f}"
+        if "blocked8_nobinned" in mops:
+            rec["mops_fused_blocked8_nobinned"] = mops["blocked8_nobinned"]
+            derived += (f";fused_blocked8_nobinned_MOPS="
+                        f"{mops['blocked8_nobinned']:.2f}")
+        if "blocked8" in mops and "blocked8_nobinned" in mops:
+            rec["binned_over_nobinned"] = (mops["blocked8"]
+                                           / mops["blocked8_nobinned"])
+            derived += f";binned_over_nobinned={rec['binned_over_nobinned']:.2f}"
+        results["rows"].append(rec)
+        row(f"stream_throughput_T{steps}", 0.0, derived)
     if args.smoke:
         print("smoke OK")
         return

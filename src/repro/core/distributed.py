@@ -109,15 +109,16 @@ def init_distributed_table(cfg: HashTableConfig, rng: jax.Array,
 def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
                             axis: str = "ht",
                             fused: bool | None = None,
-                            bucket_tiles: int | None = None):
+                            bucket_tiles: int | None = None,
+                            binned: bool | None = None):
     """Build the jitted multi-device stream.
 
     Returns ``f(table, ops, keys, vals) -> (table, results)`` over ``[T, N]``
     step tensors, queries sharded over ``axis`` (``N = n_dev * n_local``).
     ``cfg.shards`` selects the mapping (module docstring): ``n_dev`` =
     bucket-sharded route+stream+return, ``1`` = the replicated per-step
-    all-gather oracle scanned over T.  ``fused``/``bucket_tiles`` pin the
-    sharded local-stream regime exactly as in ``engine.run_stream``.
+    all-gather oracle scanned over T.  ``fused``/``bucket_tiles``/``binned``
+    pin the sharded local-stream regime exactly as in ``engine.run_stream``.
     """
     from jax.experimental.shard_map import shard_map
     n_dev = mesh.shape[axis]
@@ -160,7 +161,7 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
                 cfg, table.store_keys, table.store_vals, table.store_valid,
                 pe, r_bkt, r_op, r_key, r_val,
                 bucket_base=d * cfg.local_buckets,
-                fused=fused, bucket_tiles=bucket_tiles)
+                fused=fused, bucket_tiles=bucket_tiles, binned=binned)
             f_l, ok_l, v_l = _engine.inverse_route(axis, tgt, found, ok, value)
             table = XorHashTable(table.q_masks, sk, sv, sb, cfg)
             return table, StepResults(found=f_l, value=v_l, ok=ok_l,

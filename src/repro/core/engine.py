@@ -367,9 +367,10 @@ class JnpBackend:
 
     def run_stream(self, table: XorHashTable, ops: jnp.ndarray,
                    keys: jnp.ndarray, vals: jnp.ndarray,
-                   bucket_tiles: Optional[int] = None
+                   bucket_tiles: Optional[int] = None,
+                   binned: Optional[bool] = None
                    ) -> Tuple[XorHashTable, StepResults]:
-        # bucket_tiles is a fused-kernel knob; the scan has no tiling
+        # bucket_tiles/binned are fused-kernel knobs; the scan has no tiling
         return _scan_stream(table, ops, keys, vals, backend=self.name)
 
 
@@ -414,7 +415,8 @@ class PallasBackend:
 
     def run_stream(self, table: XorHashTable, ops: jnp.ndarray,
                    keys: jnp.ndarray, vals: jnp.ndarray,
-                   bucket_tiles: Optional[int] = None
+                   bucket_tiles: Optional[int] = None,
+                   binned: Optional[bool] = None
                    ) -> Tuple[XorHashTable, StepResults]:
         """The fused stream kernel: one pallas_call for the whole [T, N]
         stream, table VMEM-persistent across steps.  Unlike the per-step
@@ -424,6 +426,10 @@ class PallasBackend:
         explicitly to pin the regime — NB the budget is read at trace time,
         so callers that re-jit this function must pass ``bucket_tiles``
         rather than vary the budget, or the jit cache will conflate them).
+        ``binned`` picks the blocked regime's dispatch (DESIGN.md §3.1):
+        None defaults per backend (tile-binned off-TPU, block-pipelined on
+        TPU — kernels.ops.xor_stream), False pins the mask-all-N baseline,
+        True pins the binned dispatch.
 
         Replicas are byte-identical at step boundaries (commit writes all of
         them), so the kernel streams over replica 0 and the result is
@@ -444,7 +450,7 @@ class PallasBackend:
         sk, sv, sb, found, ok, value = kops.xor_stream(
             bucket, port, legal, ops, keys, vals, table.store_keys[0],
             table.store_vals[0], table.store_valid[0], bucket_tiles=tiles,
-            stagger=cfg.stagger_slots)
+            stagger=cfg.stagger_slots, binned=binned)
         R = table.store_keys.shape[0]
         new_table = XorHashTable(
             table.q_masks,
@@ -541,7 +547,8 @@ def step(table: XorHashTable, batch: QueryBatch,
 def run_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,
                vals: jnp.ndarray, backend: Optional[str] = None,
                fused: Optional[bool] = None,
-               bucket_tiles: Optional[int] = None
+               bucket_tiles: Optional[int] = None,
+               binned: Optional[bool] = None
                ) -> Tuple[XorHashTable, StepResults]:
     """Stream a whole ``[T, N]`` query trace through the engine seam.
 
@@ -556,6 +563,9 @@ def run_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,
     Note the fused path does not use :func:`resolve_backend`'s VMEM fallback:
     tables beyond the budget run compiled Pallas with bucket-axis blocking —
     auto-sized from the VMEM budget, or pinned via ``bucket_tiles``.
+    ``binned`` picks the blocked regime's dispatch: None defaults per
+    backend (tile-binned off-TPU — kernels.ops.xor_stream), ``False`` is
+    the mask-all-N A/B baseline, ``True`` pins the binned dispatch.
     """
     cfg = table.cfg
     if ops.ndim != 2 or ops.shape[1] != cfg.queries_per_step:
@@ -564,11 +574,13 @@ def run_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,
     name = _resolve_name(cfg, backend)
     if fused is True:
         return get_backend("pallas").run_stream(table, ops, keys, vals,
-                                                bucket_tiles=bucket_tiles)
+                                                bucket_tiles=bucket_tiles,
+                                                binned=binned)
     if fused is False:
         return _scan_stream(table, ops, keys, vals, backend=name)
     return get_backend(name).run_stream(table, ops, keys, vals,
-                                        bucket_tiles=bucket_tiles)
+                                        bucket_tiles=bucket_tiles,
+                                        binned=binned)
 
 
 # ---------------------------------------------------------------------------
@@ -667,7 +679,8 @@ def run_stream_local(cfg: HashTableConfig, store_keys: jnp.ndarray,
                      keys: jnp.ndarray, vals: jnp.ndarray, *,
                      bucket_base, backend: Optional[str] = None,
                      fused: Optional[bool] = None,
-                     bucket_tiles: Optional[int] = None):
+                     bucket_tiles: Optional[int] = None,
+                     binned: Optional[bool] = None):
     """Stream ``[T, Nr]`` routed queries through ONE bucket-shard partition.
 
     ``store_*`` ``[R, k, local_buckets, S, W]`` hold the global bucket range
@@ -675,7 +688,8 @@ def run_stream_local(cfg: HashTableConfig, store_keys: jnp.ndarray,
     precomputed GLOBAL indices.  Lanes outside the partition (router padding
     or foreign shards) are inert: no writes, found/ok False, value 0.  On the
     pallas backend this is the fused ``xor_stream`` kernel with the
-    bucket-base offset (the bucket-tiling path reused unchanged); elsewhere
+    bucket-base offset (the bucket-tiling and tile-binned dispatch paths
+    reused unchanged — ``binned`` as in :func:`run_stream`); elsewhere
     the scanned jnp oracle with the same partition masking.  Returns
     ``(store_keys', store_vals', store_valid', found, ok, value)``.
     """
@@ -693,7 +707,7 @@ def run_stream_local(cfg: HashTableConfig, store_keys: jnp.ndarray,
         sk, sv, sb, found, ok, value = kops.xor_stream(
             bucket, port, legal, ops, keys, vals, store_keys[0],
             store_vals[0], store_valid[0], bucket_tiles=tiles,
-            stagger=cfg.stagger_slots, bucket_base=base)
+            stagger=cfg.stagger_slots, bucket_base=base, binned=binned)
         bc = lambda x: jnp.broadcast_to(x[None], (R,) + x.shape)
         return bc(sk), bc(sv), bc(sb), found, ok, value
 

@@ -164,7 +164,8 @@ def apply_step(table: XorHashTable,
 
 def run_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,
                vals: jnp.ndarray, backend: str | None = None,
-               fused: bool | None = None, bucket_tiles: int | None = None
+               fused: bool | None = None, bucket_tiles: int | None = None,
+               binned: bool | None = None
                ) -> Tuple[XorHashTable, StepResults]:
     """Stream a [T, N]-shaped query trace through the engine seam.
 
@@ -173,10 +174,12 @@ def run_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,
     VMEM-persistent across steps, bucket-blocked past the VMEM budget) on
     the pallas backend, the scanned per-step oracle on jnp.  ``fused=True`` /
     ``False`` force one side; ``bucket_tiles`` pins the fused kernel's
-    bucket-axis blocking (DESIGN.md §3.1)."""
+    bucket-axis blocking and ``binned`` its tile-binned dispatch
+    (DESIGN.md §3.1)."""
     from repro.core.engine import run_stream as _engine_run_stream
     return _engine_run_stream(table, ops, keys, vals, backend=backend,
-                              fused=fused, bucket_tiles=bucket_tiles)
+                              fused=fused, bucket_tiles=bucket_tiles,
+                              binned=binned)
 
 
 # ---------------------------------------------------------------------------

@@ -14,6 +14,12 @@ TPU model (v5e constants, used by benchmarks/roofline):
   The hash-table step is integer/VPU + gather dominated -> memory-bound.
   bytes/step = N * (k*S*entry_bytes [gather reads] + entry_bytes [scatter])
   steady-state MOPS ≈ N / (bytes_per_step / BW_effective).
+
+Fused-stream model (:func:`stream_modeled_mops`): adds a commit-cost term
+(serial scalar chain vs the supersession-masked vectorized commit) and the
+blocked-regime terms (per-tile redundant lane work when unbinned, the
+per-stream table sweep over HBM) so benchmarks/roofline.py can report
+measured-vs-modeled for every BENCH_stream.json column.
 """
 from __future__ import annotations
 
@@ -24,7 +30,7 @@ from repro.core.config import HashTableConfig, memory_bytes
 __all__ = [
     "TPUSpec", "V5E", "FPGA_U250", "FpgaSpec",
     "fpga_latency_ns", "fpga_throughput_mops", "table_step_bytes",
-    "tpu_modeled_mops",
+    "tpu_modeled_mops", "stream_commit_seconds", "stream_modeled_mops",
 ]
 
 
@@ -84,3 +90,73 @@ def tpu_modeled_mops(cfg: HashTableConfig, spec: TPUSpec = V5E,
     bw = spec.vmem_gbps if fits_vmem else spec.hbm_gbps
     bytes_per_query = table_step_bytes(cfg, nsq_fraction) / cfg.queries_per_step
     return bw * 1e9 / bytes_per_query / 1e6
+
+
+# ---------------------------------------------------------------------------
+# Fused-stream model: commit cost + the blocked (bucket-tiled) regime
+# (DESIGN.md §3.1).  benchmarks/roofline.py reports measured-vs-modeled for
+# BENCH_stream.json rows from these terms.
+# ---------------------------------------------------------------------------
+
+SCALAR_STORE_NS = 8.0       # one serialized (port, bucket, slot) store
+VECTOR_LANE_NS = 0.25       # one lane's share of a data-parallel pass
+
+
+def stream_commit_seconds(cfg: HashTableConfig,
+                          vectorized: bool = True) -> float:
+    """Commit time for one step of N lanes.
+
+    serial      the pre-supersession design: N scalar stores in lane order,
+                the chain IS the last-wins semantics -> N * t_store.
+    vectorized  the supersession-mask design: an [N, N] triangular
+                same-target pass (data-parallel, N lanes wide) plus one
+                conflict-free store burst -> ~2 vector passes.
+    """
+    n = cfg.queries_per_step
+    if not vectorized:
+        return n * SCALAR_STORE_NS * 1e-9
+    return (n + n) * VECTOR_LANE_NS * 1e-9      # supersession + store burst
+
+
+def stream_modeled_mops(cfg: HashTableConfig, steps: int,
+                        bucket_tiles: int = 1, binned: bool = True,
+                        vectorized_commit: bool = True, fused: bool = True,
+                        nsq_fraction: float = 0.5,
+                        spec: TPUSpec = V5E) -> float:
+    """Roofline MOPS for a ``[T, N]`` stream through the stream seam.
+
+    Three terms per stream (DESIGN.md §3.1):
+
+      lane work     per-query probe gather + encode bytes at VMEM bandwidth,
+                    run once per step — times the per-tile redundancy factor
+                    ``bucket_tiles`` when the blocked kernel is NOT binned
+                    (every tile re-runs the full N-wide dataflow and emits
+                    [BT, T, N] results), 1 when binned (each pass touches
+                    only its own lane window).
+      commit        :func:`stream_commit_seconds` per step (serial scalar
+                    chain vs supersession + burst).
+      table traffic ``fused=False`` (the scanned per-step path): a full
+                    table round trip over HBM EVERY step — each probe/commit
+                    dispatch re-streams the table, the cost the fused kernel
+                    exists to remove.  Fused blocked regime: ONE full-replica
+                    round trip per stream (pass DMA in + out), amortized
+                    over the T steps that share the sweep.  Fused unblocked:
+                    none (aliased VMEM-resident tiles).
+    """
+    n = cfg.queries_per_step
+    entry_bytes = 4 * cfg.entry_words
+    gather = cfg.k * cfg.slots * entry_bytes
+    scatter = nsq_fraction * entry_bytes
+    lane_bytes = n * (gather + scatter)
+    redundancy = 1 if (binned or bucket_tiles == 1) else bucket_tiles
+    lane_s = redundancy * lane_bytes / (spec.vmem_gbps * 1e9)
+    commit_s = stream_commit_seconds(cfg, vectorized=vectorized_commit)
+    replica = memory_bytes(cfg) / cfg.replicas
+    if not fused:
+        sweep_s = 2.0 * replica / (spec.hbm_gbps * 1e9)
+    elif bucket_tiles > 1:
+        sweep_s = 2.0 * replica / (spec.hbm_gbps * 1e9) / max(steps, 1)
+    else:
+        sweep_s = 0.0
+    step_s = lane_s + commit_s + sweep_s
+    return n / step_s / 1e6

@@ -114,18 +114,38 @@ def xor_stream(bucket: jnp.ndarray, port: jnp.ndarray, legal: jnp.ndarray,
                ops: jnp.ndarray, qkeys: jnp.ndarray, qvals: jnp.ndarray,
                store_keys: jnp.ndarray, store_vals: jnp.ndarray,
                store_valid: jnp.ndarray, bucket_tiles: int = 1,
-               stagger: bool = False, bucket_base=0):
+               stagger: bool = False, bucket_base=0,
+               binned: bool | None = None):
     """Fused in-kernel query streaming over one replica: probe + plan +
-    non-search XOR encode + last-wins commit for a whole ``[T, N]`` stream in
-    a single Pallas kernel, table VMEM-resident across steps (bucket-tiled
-    when one replica exceeds the VMEM budget — pick ``bucket_tiles`` with
-    :func:`stream_bucket_tiles`).  ``bucket_base`` (traced scalar) offsets a
-    shard-local partition into the global bucket space; lanes outside the
-    partition are inert.  See xor_stream_pallas.  Interpret mode on CPU; the
+    non-search XOR encode + supersession-masked last-wins commit for a whole
+    ``[T, N]`` stream in a single Pallas kernel, table VMEM-resident across
+    steps (bucket-tiled when one replica exceeds the VMEM budget — pick
+    ``bucket_tiles`` with :func:`stream_bucket_tiles`).  ``bucket_base``
+    (traced scalar) offsets a shard-local partition into the global bucket
+    space; lanes outside the partition are inert.  ``binned`` selects the
+    tile-binned dispatch when ``bucket_tiles > 1``: lanes stable-sorted by
+    tile, lane windows via scalar-prefetch offsets, the HBM-resident table
+    swept in residency-sized passes with an in-kernel step scan per pass;
+    ``binned=False`` keeps the mask-all-N baseline.  ``binned=None``
+    defaults per backend: True off-TPU (interpret mode), False on TPU —
+    the binned kernel's ANY-ref span load/store still needs the
+    ``make_async_copy`` substitution to lower under Mosaic (see the
+    xor_stream_pallas module docstring), so TPU keeps the block-pipelined
+    layout until that lands.  The sweep pass count is sized here from the
+    VMEM budget — ``min(bucket_tiles, stream_bucket_tiles(...))`` — so a
+    genuinely over-budget table sweeps every tile while a budget-fitting
+    table pinned to a larger ``bucket_tiles`` coalesces adjacent tiles into
+    fewer passes (binning granularity and residency are separate knobs;
+    DESIGN.md §3.1).  See xor_stream_pallas.  Interpret mode on CPU; the
     scanned per-step engine path is the semantic oracle.
     """
+    if binned is None:
+        binned = not _on_tpu()
+    passes = min(bucket_tiles,
+                 stream_bucket_tiles(store_keys, store_vals, store_valid))
     return xor_stream_pallas(bucket, port, legal, ops, qkeys, qvals,
                              store_keys, store_vals, store_valid,
                              bucket_tiles=bucket_tiles,
                              interpret=not _on_tpu(), stagger=stagger,
-                             bucket_base=bucket_base)
+                             bucket_base=bucket_base, binned=binned,
+                             bin_passes=passes)

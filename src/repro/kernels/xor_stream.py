@@ -5,53 +5,101 @@ The scanned path pays a full table HBM round-trip per step: every
 ``MutationPlan`` through jnp elementwise stages, then launches ``xor_commit``.
 This kernel is the paper's PE pipeline proper — the table never leaves
 on-chip memory between cycles.  One ``pallas_call`` processes the whole
-``[T, N]`` query stream:
-
-  grid = (bucket_tiles, T)   # T minor: all T steps run back-to-back
-                             # while one bucket tile is VMEM-resident
-
-Per grid step ``(bt, t)`` the kernel fuses, for the lanes of step ``t``
-whose bucket lands in tile ``bt``:
+``[T, N]`` query stream.  Per step the kernel fuses:
 
   probe    k-store read (vector gather over the tile's bucket axis)
            + search XOR tree + slot resolution (match/open/stagger)
   plan     op decode (insert/delete acceptance, slot choice)
   encode   non-search XOR tree against the *pre-step* tile state
-  commit   masked sequential scatter, lane order == program order
+  commit   supersession mask + stores of the surviving encodings
 
-VMEM persistence: the table tile is an ``input_output_aliases`` pair whose
-block index depends only on ``bt`` — at ``t == 0`` the input tile is latched
-into the (aliased) output block, which then stays VMEM-resident for all T
-consecutive steps (Pallas guarantees output-block preservation across
-consecutive iterations with the same block index).  Probes read the output
-refs, so step t sees the state after steps 0..t-1 with zero HBM traffic
-in between.
+Last-wins commit (the supersession-mask argument).  Same-step duplicate
+``(port, bucket, slot)`` write targets must resolve last-in-program-order,
+matching the jnp oracle's ``_scatter_records``.  Instead of making the
+store order carry the semantics, an ``[N, N]`` triangular same-target
+comparison marks every write lane that a LATER lane in the same step
+supersedes; surviving lanes then target pairwise-distinct cells, so the
+stores carry **no ordering constraint** — they can issue in any order or
+all at once.  The paper's PE array commits p writes per cycle for exactly
+this reason: conflict resolution happens before the write port, not at it.
+(The store phase itself stays a masked per-lane loop: XLA's gather/scatter
+on CPU costs ~6x a short store loop at these lane counts, and the loop is
+now order-free and, on the binned layout, work-proportional — it walks only
+the tile's own lane window.)
 
-Double buffering: the per-step query blocks (``bucket/op/key/val``) are
-indexed by ``t``, so the standard Pallas pipeline prefetches step t+1's
-queries into the revolving input buffers while step t computes and commits —
-the kernel-level expression of the FPGA's query FIFO.
+Two layouts share that dataflow:
 
-Bucket-axis blocking (the HBM-resident regime): when one replica exceeds
-``VMEM_TABLE_BUDGET_BYTES`` the bucket axis is split into ``bucket_tiles``
-power-of-two tiles.  A lane's bucket determines both where it probes and
-where it commits, so mutations in tile bt never touch any other tile —
-sweeping tiles in the outer grid axis is semantically identical to the
-unblocked kernel, and duplicate same-step write targets always share a tile,
-where the sequential commit loop preserves stable lane order; last-wins
-semantics therefore survive blocking (the ordering argument in DESIGN.md
-§3.1).  Per-lane results are emitted per tile (masked to the tile's lanes)
-and gathered by tile index outside the kernel.
+**VMEM-resident / unbinned** (``bucket_tiles == 1``, or ``binned=False`` as
+the A/B baseline for ``bucket_tiles > 1``), ``grid = (bucket_tiles, T)``
+with T minor.  The table tile is an ``input_output_aliases`` pair whose
+block index depends only on ``bt``: at ``t == 0`` the input tile is latched
+into the aliased output block, which stays VMEM-resident for all T
+consecutive steps (Pallas preserves output blocks across consecutive
+iterations with the same block index).  Every grid step masks the full
+N-lane row to its tile (``in_tile``) and emits per-tile results into
+``[BT, T, N]``, gathered by tile index outside the kernel.  Per-step query
+blocks are indexed by ``t``, so the standard Pallas pipeline double-buffers
+step t+1's queries while step t computes — the kernel-level expression of
+the FPGA's query FIFO.
+
+**Tile-binned** (``binned=True`` and ``bucket_tiles > 1`` — the HBM-resident
+regime, the HashGraph bin-then-process move), ``grid = (bin_passes,)``.
+An XLA-side pre-pass stable-sorts each step's lanes by bucket tile (stable
+⇒ sorted order within a tile == program order, so last-wins survives) and
+hands the kernel a ``[BT+1, T]`` table of per-(tile, step) lane offsets as
+a scalar-prefetch operand.
+
+Bin granularity vs sweep passes: ``bucket_tiles`` fixes the BINNING (sort
+key, offsets table); ``bin_passes`` (a power-of-two divisor of it, sized by
+the caller from the VMEM budget — ``kernels.ops.xor_stream`` uses
+``min(bucket_tiles, stream_bucket_tiles(...))``) fixes how many
+residency-sized spans the kernel actually sweeps.  A tile sweep should
+coalesce adjacent tiles until the span fills on-chip memory — a genuinely
+HBM-oversized table sweeps every tile, while a budget-fitting table pinned
+to ``bucket_tiles=8`` runs one pass.  Because lanes are sorted by tile and
+tiles are contiguous in the bucket axis, a pass's lanes are one contiguous
+window ``[offs[p*W, t], offs[(p+1)*W, t])`` (``W = BT/bin_passes``), read
+straight from the same offsets table.  Grid step ``p`` then:
+
+  * loads its packed span ``[k, B/passes, S, Wk+Wv+1]`` from the ``ANY``/
+    HBM-resident table refs ONCE, runs all T steps as an in-kernel
+    ``lax.scan`` with the span as carry, and writes it back once — one
+    full-table round trip per stream, not per step;
+  * touches only its own lane window per step: the commit loop walks just
+    those lanes, so total commit work across passes equals the live lane
+    count (no BT-fold redundancy), and the probe/plan/encode dataflow runs
+    ``bin_passes * T`` times, not ``bucket_tiles * T``;
+  * reads queries from ONE packed ``[T, N, 2+Wk+Wv]`` operand (relative
+    bucket, op|port|legal word, key, value);
+  * merges results once per pass into a packed ``[T, N, 1+Wv]`` resident
+    output in routed (sorted) order — the ``[BT, T, N(,Wv)]`` output
+    inflation and the post-kernel tile-index gather disappear; the caller
+    inverse-permutes back to program order.
+
+Correctness of the sweep is unchanged: a lane's bucket determines both
+where it probes and where it commits, so mutations in one pass's span never
+touch another span; duplicate same-step write targets share a bucket, hence
+a tile, hence a pass, and within a tile the stable sort preserves program
+order (lanes of *different* tiles inside one pass can interleave, but they
+can never share a write target).
+
+TPU-lowering caveat (binned layout): the span load/store reads and writes
+the ``ANY``-space table refs with plain indexing; Mosaic requires explicit
+``pltpu.make_async_copy`` for HBM-resident refs, so compiling the binned
+kernel on a real TPU needs that (mechanical) substitution at the three
+load/store sites — untestable from this CPU container, where all kernels
+run under ``interpret=True`` (the repo-wide convention).  The unbinned
+layout uses only block-pipelined VMEM refs and has no such caveat.
 
 Bucket-base offset (the sharded regime, DESIGN.md §2): ``bucket_base`` is a
 *traced* scalar — under ``shard_map`` it is ``axis_index * local_buckets`` —
 marking the global bucket range ``[base, base + B)`` this table partition
 owns.  Lane buckets stay GLOBAL; the kernel probes/commits at ``bucket -
 base`` and lanes outside the partition are inert for every tile (no writes,
-found/ok False, value 0), which is what makes the router's NOP padding and
-the tile sweep safe without any extra masking.  ``base == 0`` with a full
-table recovers the single-domain kernel bit-exactly, so the bucket-tiling
-path is reused unchanged by shard-local tables.
+found/ok False, value 0): the unbinned kernel masks them per tile, the
+binned pre-pass sorts them behind every real tile window (sentinel tile id
+BT) so no window ever covers them.  ``base == 0`` with a full table recovers
+the single-domain kernel bit-exactly.
 """
 from __future__ import annotations
 
@@ -60,9 +108,49 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.hash_table import OP_DELETE, OP_INSERT, OP_SEARCH
 
+
+def _plan_lanes(op, legal, found, hopen, mslot, oslot, qk, qv, in_tile):
+    """Mutation plan for one step's lanes (op decode + slot choice + new
+    record words + per-lane ok) — pure elementwise, shared by both kernel
+    layouts so op-acceptance semantics cannot drift between them.  Mirrors
+    ``engine.mutation_plan`` exactly."""
+    is_ins = op == OP_INSERT
+    is_del = op == OP_DELETE
+    ins_ok = is_ins & (found | hopen) & legal
+    del_ok = is_del & found & legal
+    do_write = (ins_ok | del_ok) & in_tile
+    slot = jnp.where(is_del | found, mslot, oslot)
+    new_key = jnp.where(is_del[:, None], jnp.uint32(0), qk)
+    new_val = jnp.where(is_del[:, None], jnp.uint32(0), qv)
+    new_valid = jnp.where(is_del, jnp.uint32(0), jnp.uint32(1))
+    lane_ok = jnp.where(is_ins, ins_ok,
+                        jnp.where(is_del, del_ok, op == OP_SEARCH))
+    return do_write, slot, new_key, new_val, new_valid, lane_ok
+
+
+def _last_wins_survivors(do_write, port, local, slot, *,
+                         tile_buckets: int, slots: int):
+    """The vectorized last-wins pass: a write survives iff no LATER lane in
+    the same step targets the same ``(port, bucket, slot)`` cell — the same
+    key the jnp oracle's ``_scatter_records`` supersedes on.  ``[N, N]``
+    triangular comparison (N is small); survivors target pairwise-distinct
+    cells, so their stores need no ordering."""
+    n = do_write.shape[0]
+    tgt = (port * tile_buckets + local) * slots + slot     # [N] cell id
+    li = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)    # lane i (rows)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)    # lane j (cols)
+    later_same = (tgt[:, None] == tgt[None, :]) & do_write[None, :] & (lj > li)
+    return do_write & ~jnp.any(later_same, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Unbinned kernel: VMEM-resident pipelined tiles, full-N masking (and the
+# A/B baseline for the binned dispatch when bucket_tiles > 1)
+# ---------------------------------------------------------------------------
 
 def _xor_stream_kernel(bucket_ref, op_ref, port_ref, legal_ref, base_ref,
                        qkey_ref, qval_ref, skeys_ref, svals_ref, svalid_ref,
@@ -98,6 +186,7 @@ def _xor_stream_kernel(bucket_ref, op_ref, port_ref, legal_ref, base_ref,
     sv = ovals_ref[...]
     sb = ovalid_ref[...]
     key_words = sk.shape[-1]
+    slots = sk.shape[2]
 
     # --- probe: parallel partial-store read + search XOR trees --------------
     rows_k = jnp.take(sk, local, axis=1)                   # [k, N, S, Wk]
@@ -142,17 +231,8 @@ def _xor_stream_kernel(bucket_ref, op_ref, port_ref, legal_ref, base_ref,
     rem_b = dec_b ^ own_b
 
     # --- plan: op decode + slot choice (mutation_plan, in-kernel) -----------
-    is_ins = op == OP_INSERT
-    is_del = op == OP_DELETE
-    ins_ok = is_ins & (found | hopen) & legal
-    del_ok = is_del & found & legal
-    do_write = (ins_ok | del_ok) & in_tile
-    slot = jnp.where(is_del | found, mslot, oslot)
-    new_key = jnp.where(is_del[:, None], jnp.uint32(0), qk)
-    new_val = jnp.where(is_del[:, None], jnp.uint32(0), qv)
-    new_valid = jnp.where(is_del, jnp.uint32(0), jnp.uint32(1))
-    lane_ok = jnp.where(is_ins, ins_ok,
-                        jnp.where(is_del, del_ok, op == OP_SEARCH))
+    do_write, slot, new_key, new_val, new_valid, lane_ok = _plan_lanes(
+        op, legal, found, hopen, mslot, oslot, qk, qv, in_tile)
 
     # --- encode: non-search XOR tree output for the chosen slot -------------
     enc_k = new_key ^ jnp.take_along_axis(rem_k, slot[:, None, None],
@@ -167,11 +247,12 @@ def _xor_stream_kernel(bucket_ref, op_ref, port_ref, legal_ref, base_ref,
     value_ref[0, 0] = jnp.where((found & in_tile)[:, None], value,
                                 jnp.uint32(0))
 
-    # --- masked sequential commit (encodings already snapshotted) -----------
-    dw = do_write.astype(jnp.int32)
+    # --- commit: supersession mask, then order-free masked stores -----------
+    surv = _last_wins_survivors(do_write, port, local, slot,
+                                tile_buckets=tile_buckets, slots=slots)
 
     def body(i, carry):
-        @pl.when(dw[i] != 0)
+        @pl.when(surv[i])
         def _():
             pt, bk, sl = port[i], local[i], slot[i]
             okeys_ref[pt, bk, sl, :] = jax.lax.dynamic_index_in_dim(
@@ -184,15 +265,136 @@ def _xor_stream_kernel(bucket_ref, op_ref, port_ref, legal_ref, base_ref,
     jax.lax.fori_loop(0, n, body, 0)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("bucket_tiles", "interpret", "stagger"))
+# ---------------------------------------------------------------------------
+# Binned kernel: HBM-resident table, one tile sweep per grid step, the T-step
+# loop fused as an in-kernel scan over the packed tile
+# ---------------------------------------------------------------------------
+
+def _xor_stream_binned_kernel(offs_ref, q_ref,
+                              skeys_ref, svals_ref, svalid_ref,
+                              okeys_ref, ovals_ref, ovalid_ref, out_ref,
+                              *, k: int, span_buckets: int,
+                              tiles_per_pass: int, n: int,
+                              key_words: int, val_words: int,
+                              slots: int, stagger: bool):
+    p = pl.program_id(0)
+    Bs = span_buckets
+    Wk, Wv, S = key_words, val_words, slots
+    wtot = Wk + Wv + 1
+
+    # span DMA: HBM -> packed on-chip value once per pass, back once — the
+    # stream's only full-table traffic
+    tile0 = jnp.concatenate([
+        skeys_ref[:, pl.ds(p * Bs, Bs)],
+        svals_ref[:, pl.ds(p * Bs, Bs)],
+        svalid_ref[:, pl.ds(p * Bs, Bs)][..., None],
+    ], axis=-1)                                            # [k, Bs, S, Wtot]
+
+    # this pass's per-step lane windows: sorted-by-tile lanes make a pass's
+    # tiles one contiguous range in the offsets table (scalar prefetch)
+    off_t = offs_ref[p * tiles_per_pass]                   # [T]
+    end_t = offs_ref[(p + 1) * tiles_per_pass]             # [T]
+    q_all = q_ref[...]                                     # [T, N, 2+Wk+Wv]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)[:, 0]
+
+    def step(tile, xs):
+        q, off, end = xs
+        active = (pos >= off) & (pos < end)
+        rel = q[:, 0].astype(jnp.int32)                    # partition-relative
+        opw = q[:, 1].astype(jnp.int32)
+        op = opw & 0xFF
+        port = (opw >> 8) & 0xFF
+        legal = ((opw >> 16) & 1) != 0
+        qk = q[:, 2:2 + Wk]
+        qv = q[:, 2 + Wk:]
+        local = jnp.clip(rel - p * Bs, 0, Bs - 1)
+
+        # probe: ONE packed gather + XOR trees (decode componentwise)
+        rows = jnp.take(tile, local, axis=1)               # [k, N, S, Wtot]
+        dec = rows[0]
+        for i in range(1, k):
+            dec = dec ^ rows[i]
+        dec_k = dec[..., :Wk]
+        dec_v = dec[..., Wk:Wk + Wv]
+        dec_b = dec[..., -1]
+        key_eq = jnp.ones(dec_b.shape, dtype=jnp.bool_)
+        for w in range(Wk):
+            key_eq = key_eq & (dec_k[..., w] == qk[:, None, w])
+        occ = (dec_b & 1).astype(jnp.bool_)
+        match = key_eq & occ
+        found = jnp.any(match, axis=-1)
+        mslot = jnp.argmax(match, axis=-1).astype(jnp.int32)
+        open_mask = ~occ
+        hopen = jnp.any(open_mask, axis=-1)
+        if stagger:
+            from repro.core.engine import staggered_open_slot
+            oslot = staggered_open_slot(open_mask, port)
+        else:
+            oslot = jnp.argmax(open_mask, axis=-1).astype(jnp.int32)
+        value = jnp.take_along_axis(dec_v, mslot[:, None, None], axis=1)[:, 0]
+        value = jnp.where(found[:, None], value, jnp.uint32(0))
+
+        own = jnp.take_along_axis(rows, port[None, :, None, None], axis=0)[0]
+        rem = dec ^ own                                    # [N, S, Wtot]
+
+        # plan (shared with the unbinned kernel; in_tile := active window)
+        do_write, slot, new_key, new_val, new_valid, lane_ok = _plan_lanes(
+            op, legal, found, hopen, mslot, oslot, qk, qv, active)
+
+        # encode: packed non-search XOR output for the chosen slot
+        new = jnp.concatenate([new_key, new_val, new_valid[:, None]], axis=-1)
+        enc = new ^ jnp.take_along_axis(rem, slot[:, None, None], axis=1)[:, 0]
+
+        # commit: supersession mask, then a work-proportional store loop over
+        # ONLY this pass's lane window (order-free: survivors are distinct)
+        surv = _last_wins_survivors(do_write, port, local, slot,
+                                    tile_buckets=Bs, slots=S)
+
+        def commit(i, tile):
+            cur = jax.lax.dynamic_slice(
+                tile, (port[i], local[i], slot[i], 0), (1, 1, 1, wtot))
+            row = jnp.where(surv[i], enc[i].reshape(1, 1, 1, wtot), cur)
+            return jax.lax.dynamic_update_slice(
+                tile, row, (port[i], local[i], slot[i], 0))
+
+        tile = jax.lax.fori_loop(off, end, commit, tile)
+
+        res = jnp.concatenate(
+            [(found.astype(jnp.uint32) | (lane_ok.astype(jnp.uint32) << 1)
+              )[:, None], value], axis=-1)
+        return tile, jnp.where(active[:, None], res, jnp.uint32(0))
+
+    tile, res = jax.lax.scan(step, tile0, (q_all, off_t, end_t))
+
+    # merge this pass's lane windows into the resident packed result buffer:
+    # every (step, lane) cell belongs to exactly one pass, sentinel-binned
+    # (out-of-partition) lanes to none — zero == inert
+    mask = (pos[None, :] >= off_t[:, None]) & (pos[None, :] < end_t[:, None])
+
+    @pl.when(p == 0)
+    def _():
+        out_ref[...] = res
+
+    @pl.when(p > 0)
+    def _():
+        out_ref[...] = jnp.where(mask[..., None], res, out_ref[...])
+
+    okeys_ref[:, pl.ds(p * Bs, Bs)] = tile[..., :Wk]
+    ovals_ref[:, pl.ds(p * Bs, Bs)] = tile[..., Wk:Wk + Wv]
+    ovalid_ref[:, pl.ds(p * Bs, Bs)] = tile[..., wtot - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("bucket_tiles", "interpret",
+                                             "stagger", "binned",
+                                             "bin_passes"))
 def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
                       legal: jnp.ndarray, ops: jnp.ndarray,
                       qkeys: jnp.ndarray, qvals: jnp.ndarray,
                       store_keys: jnp.ndarray, store_vals: jnp.ndarray,
                       store_valid: jnp.ndarray, bucket_tiles: int = 1,
                       interpret: bool = True, stagger: bool = False,
-                      bucket_base=0):
+                      bucket_base=0, binned: bool = True,
+                      bin_passes: int = 1):
     """Stream T steps of N queries through one fused kernel.
 
     bucket/ops ``[T, N]``; port/legal ``[N]``; qkeys ``[T, N, Wk]``;
@@ -202,6 +404,12 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
     power-of-two divisor of B (1 == fully VMEM-resident table).
     ``bucket_base`` (traced scalar) marks the global bucket range this
     table partition owns; lanes outside ``[base, base + B)`` are inert.
+    ``binned`` selects the tile-binned dispatch for ``bucket_tiles > 1``
+    (sorted lanes, windowed sweep, in-kernel step scan — the fast
+    HBM-resident layout); ``binned=False`` keeps the mask-all-N baseline.
+    ``bin_passes`` (binned only) is the number of residency-sized sweep
+    passes — a power-of-two divisor of ``bucket_tiles``, sized from the
+    VMEM budget by ``kernels.ops.xor_stream`` (module docstring).
     """
     T, N = ops.shape
     k, B, S, Wk = store_keys.shape
@@ -209,10 +417,80 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
     BT = bucket_tiles
     if BT < 1 or B % BT:
         raise ValueError(f"bucket_tiles={BT} must divide buckets={B}")
+    if bin_passes < 1 or BT % bin_passes:
+        raise ValueError(f"bin_passes={bin_passes} must divide "
+                         f"bucket_tiles={BT}")
     Bt = B // BT
-    grid = (BT, T)
     base = jnp.reshape(jnp.asarray(bucket_base).astype(jnp.int32), (1,))
+    if T == 0:
+        return (store_keys, store_vals, store_valid,
+                jnp.zeros((0, N), jnp.bool_), jnp.zeros((0, N), jnp.bool_),
+                jnp.zeros((0, N, Wv), jnp.uint32))
 
+    if binned and BT > 1:
+        # ---- XLA-side pre-pass: stable-sort each step's lanes by tile ----
+        rel = bucket.astype(jnp.int32) - base[0]
+        in_part = (rel >= 0) & (rel < B)
+        tile_id = jnp.where(in_part, jnp.clip(rel, 0, B - 1) // Bt, BT)
+        perm = jnp.argsort(tile_id, axis=1, stable=True)        # [T, N]
+        # offs[j, t] == #lanes of step t with tile id < j (so tile bt's
+        # window is [offs[bt, t], offs[bt+1, t]) and sentinel lanes fall
+        # past every window)
+        offs = jnp.sum(tile_id[:, :, None] <
+                       jnp.arange(1, BT + 1, dtype=jnp.int32)[None, None, :],
+                       axis=1, dtype=jnp.int32)
+        offs = jnp.concatenate([jnp.zeros((T, 1), jnp.int32), offs],
+                               axis=1).T                        # [BT+1, T]
+        opw = (ops.astype(jnp.uint32) & 0xFF) \
+            | (port.astype(jnp.uint32)[None, :] << 8) \
+            | (legal.astype(jnp.uint32)[None, :] << 16)
+        q = jnp.concatenate([
+            jnp.where(in_part, rel, 0).astype(jnp.uint32)[..., None],
+            jnp.broadcast_to(opw, (T, N))[..., None],
+            qkeys.astype(jnp.uint32), qvals.astype(jnp.uint32)], axis=-1)
+        q_s = jnp.take_along_axis(q, perm[..., None], axis=1)
+
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(bin_passes,),
+            in_specs=[
+                pl.BlockSpec((T, N, 2 + Wk + Wv), lambda p, offs: (0, 0, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),      # HBM-resident
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=(
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec((T, N, 1 + Wv), lambda p, offs: (0, 0, 0)),
+            ),
+        )
+        out_shapes = (
+            jax.ShapeDtypeStruct(store_keys.shape, store_keys.dtype),
+            jax.ShapeDtypeStruct(store_vals.shape, store_vals.dtype),
+            jax.ShapeDtypeStruct(store_valid.shape, store_valid.dtype),
+            jax.ShapeDtypeStruct((T, N, 1 + Wv), jnp.uint32),
+        )
+        sk, sv, sb, out = pl.pallas_call(
+            functools.partial(_xor_stream_binned_kernel, k=k,
+                              span_buckets=B // bin_passes,
+                              tiles_per_pass=BT // bin_passes,
+                              n=N, key_words=Wk, val_words=Wv,
+                              slots=S, stagger=stagger),
+            grid_spec=grid_spec, out_shape=out_shapes,
+            # the table updates in place — fresh HBM buffers would double
+            # the stream's only full-table traffic
+            input_output_aliases={2: 0, 3: 1, 4: 2},
+            interpret=interpret,
+        )(offs, q_s, store_keys, store_vals, store_valid)
+
+        inv = jnp.argsort(perm, axis=1)                    # sorted -> program
+        out = jnp.take_along_axis(out, inv[..., None], axis=1)
+        found = (out[..., 0] & 1) != 0
+        ok = (out[..., 0] >> 1) != 0
+        return sk, sv, sb, found, ok, out[..., 1:]
+
+    grid = (BT, T)
     qspec2 = pl.BlockSpec((1, N), lambda bt, t: (t, 0))
     lane1 = pl.BlockSpec((N,), lambda bt, t: (0,))
     base1 = pl.BlockSpec((1,), lambda bt, t: (0,))

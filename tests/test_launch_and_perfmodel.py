@@ -7,7 +7,8 @@ import jax.numpy as jnp
 from repro.configs import ARCHS, get_config
 from repro.core import HashTableConfig
 from repro.core.perfmodel import (FPGA_U250, fpga_latency_ns,
-                                  fpga_throughput_mops, table_step_bytes,
+                                  fpga_throughput_mops, stream_commit_seconds,
+                                  stream_modeled_mops, table_step_bytes,
                                   tpu_modeled_mops)
 from repro.launch.shapes import LONG_OK, SHAPES, cells, input_specs
 
@@ -60,3 +61,23 @@ def test_step_bytes_scales():
     c1 = HashTableConfig(p=8, k=2, buckets=256, slots=2)
     c2 = HashTableConfig(p=8, k=8, buckets=256, slots=2)
     assert table_step_bytes(c2) > table_step_bytes(c1)
+
+
+def test_stream_model_regime_ordering():
+    """The stream model's terms order the regimes the way the kernels do
+    (DESIGN.md §3.1): vectorized commit beats serial, fused beats the
+    scanned per-step dispatch, binned beats unbinned in the blocked regime,
+    and the blocked sweep amortizes with T."""
+    cfg = HashTableConfig(p=8, k=8, buckets=1 << 12, slots=4,
+                          replicate_reads=False, queries_per_pe=8)
+    assert stream_commit_seconds(cfg, vectorized=True) < \
+        stream_commit_seconds(cfg, vectorized=False)
+    assert stream_modeled_mops(cfg, steps=32) > \
+        stream_modeled_mops(cfg, steps=32, vectorized_commit=False)
+    assert stream_modeled_mops(cfg, steps=32) > \
+        stream_modeled_mops(cfg, steps=32, vectorized_commit=False,
+                            fused=False)
+    assert stream_modeled_mops(cfg, steps=32, bucket_tiles=8, binned=True) > \
+        stream_modeled_mops(cfg, steps=32, bucket_tiles=8, binned=False)
+    assert stream_modeled_mops(cfg, steps=32, bucket_tiles=8) > \
+        stream_modeled_mops(cfg, steps=2, bucket_tiles=8)

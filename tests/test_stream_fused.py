@@ -38,12 +38,12 @@ def _assert_same(tab_a, res_a, tab_b, res_b, what=""):
             f"{what}: table.{name} diverged ({(a != b).sum()} words)"
 
 
-def _oracle_and_fused(cfg, ops, kk, vv, seed=0):
+def _oracle_and_fused(cfg, ops, kk, vv, seed=0, binned=None):
     tab = init_table(cfg, jax.random.key(seed))
     oj = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv),
                     backend="jnp", fused=False)
     of = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv),
-                    fused=True)
+                    fused=True, binned=binned)
     return oj, of
 
 
@@ -61,10 +61,14 @@ def test_fused_stream_bit_exact_on_random_trace(replicate, stagger, kw, rng):
                  f"replicate={replicate} stagger={stagger} kw={kw}")
 
 
+@pytest.mark.parametrize("binned", [True, False])
 @pytest.mark.parametrize("stagger", [False, True])
-def test_fused_stream_bucket_blocked_bit_exact(stagger, rng, monkeypatch):
-    """Tables above the VMEM budget run the bucket-axis-blocked kernel and
-    stay bit-exact (the stable-order-within-a-tile last-wins argument)."""
+def test_fused_stream_bucket_blocked_bit_exact(stagger, binned, rng,
+                                               monkeypatch):
+    """Tables above the VMEM budget run the bucket-blocked kernel — the
+    tile-binned dispatch (multi-pass sweep: the shrunken budget makes
+    bin_passes == bucket_tiles) and the mask-all-N baseline — and stay
+    bit-exact (the supersession-mask last-wins argument)."""
     cfg = HashTableConfig(p=4, k=2, buckets=128, slots=4,
                           replicate_reads=False, stagger_slots=stagger)
     op, keys, vals = _random_trace(rng, 128, 1)
@@ -74,8 +78,10 @@ def test_fused_stream_bucket_blocked_bit_exact(stagger, rng, monkeypatch):
     monkeypatch.setattr(kops, "VMEM_TABLE_BUDGET_BYTES", rb // 7)
     assert kops.stream_bucket_tiles(tab.store_keys, tab.store_vals,
                                     tab.store_valid) == 8
-    (tab_j, res_j), (tab_f, res_f) = _oracle_and_fused(cfg, ops, kk, vv)
-    _assert_same(tab_j, res_j, tab_f, res_f, f"blocked stagger={stagger}")
+    (tab_j, res_j), (tab_f, res_f) = _oracle_and_fused(cfg, ops, kk, vv,
+                                                       binned=binned)
+    _assert_same(tab_j, res_j, tab_f, res_f,
+                 f"blocked stagger={stagger} binned={binned}")
 
 
 def test_fused_stream_explicit_bucket_tiles(rng):
@@ -129,6 +135,83 @@ def test_fused_stream_duplicate_write_targets_last_wins():
     tab_j, res_j = run_stream(tab, jnp.array(ops), jnp.array(keys),
                               jnp.array(vals), backend="jnp", fused=False)
     _assert_same(tab_j, res_j, tab_f, res_f, "duplicate targets")
+
+
+def _layout_kwargs(layout, tab, monkeypatch):
+    """fused-path layout under test: unblocked, blocked-binned (single-pass
+    and multi-pass — the latter via a shrunken VMEM budget), blocked
+    mask-all-N baseline."""
+    if layout == "unblocked":
+        return dict(bucket_tiles=1)
+    if layout == "blocked_binned_multipass":
+        rb = kops.replica_bytes(tab.store_keys, tab.store_vals,
+                                tab.store_valid)
+        monkeypatch.setattr(kops, "VMEM_TABLE_BUDGET_BYTES", max(rb // 3, 1))
+        return dict(bucket_tiles=4, binned=True)
+    if layout == "blocked_binned":
+        return dict(bucket_tiles=4, binned=True)
+    return dict(bucket_tiles=4, binned=False)
+
+
+_LAYOUTS = ["unblocked", "blocked_binned", "blocked_binned_multipass",
+            "blocked_nobinned"]
+
+
+@pytest.mark.parametrize("layout", _LAYOUTS)
+def test_fused_stream_cross_port_duplicate_bucket_slot(layout, monkeypatch):
+    """Same-step writes from DIFFERENT ports to one (bucket, slot) must both
+    land — the supersession key is (port, bucket, slot), matching the
+    oracle's _scatter_records, NOT (bucket, slot) — bit-exact on every
+    layout including the XOR-scrambled decode the collision produces."""
+    cfg = HashTableConfig(p=2, k=2, buckets=32, slots=2)     # stagger OFF
+    tab = init_table(cfg, jax.random.key(0))
+    # step 0: PE 0 and PE 1 insert the same fresh key -> same bucket, same
+    # argmax open slot, different write ports; step 1: search it.
+    ops = np.array([[OP_INSERT, OP_INSERT], [OP_SEARCH, 0]], np.int32)
+    keys = np.array([[[9], [9]], [[9], [0]]], np.uint32)
+    vals = np.array([[[111], [222]], [[0], [0]]], np.uint32)
+    tab_j, res_j = run_stream(tab, jnp.array(ops), jnp.array(keys),
+                              jnp.array(vals), backend="jnp", fused=False)
+    tab_f, res_f = run_stream(tab, jnp.array(ops), jnp.array(keys),
+                              jnp.array(vals), fused=True,
+                              **_layout_kwargs(layout, tab, monkeypatch))
+    _assert_same(tab_j, res_j, tab_f, res_f, f"cross-port dup {layout}")
+
+
+@pytest.mark.parametrize("layout", _LAYOUTS)
+def test_fused_stream_insert_delete_race(layout, monkeypatch):
+    """Inserts racing deletes on one key in one step: cross-port (both
+    encodings land in distinct partial stores) and same-port (the later
+    lane supersedes the earlier), bit-exact with the oracle on every
+    layout; the same-port race must resolve insert-wins in program order."""
+    cfg = HashTableConfig(p=2, k=2, buckets=32, slots=2, queries_per_pe=2)
+    tab = init_table(cfg, jax.random.key(0))                 # N=4, PE=lane%2
+    ops = np.array([
+        [OP_INSERT, 0, 0, 0],                  # key 7 in (port 0)
+        [OP_DELETE, OP_INSERT, 0, 0],          # del 7 (port 0) || upd 7 (port 1)
+        [OP_SEARCH, 0, 0, 0],                  # what does the oracle say?
+        [OP_INSERT, 0, 0, 0],                  # key 8 in (port 0)
+        [OP_DELETE, 0, OP_INSERT, 0],          # del 8 || ins 8: SAME port+slot
+        [OP_SEARCH, 0, 0, 0],                  # insert (later lane) must win
+    ], np.int32)
+    keys = np.array([
+        [[7], [0], [0], [0]], [[7], [7], [0], [0]], [[7], [0], [0], [0]],
+        [[8], [0], [0], [0]], [[8], [0], [8], [0]], [[8], [0], [0], [0]],
+    ], np.uint32)
+    vals = np.array([
+        [[50], [0], [0], [0]], [[0], [60], [0], [0]], [[0], [0], [0], [0]],
+        [[70], [0], [0], [0]], [[0], [0], [999], [0]], [[0], [0], [0], [0]],
+    ], np.uint32)
+    tab_j, res_j = run_stream(tab, jnp.array(ops), jnp.array(keys),
+                              jnp.array(vals), backend="jnp", fused=False)
+    tab_f, res_f = run_stream(tab, jnp.array(ops), jnp.array(keys),
+                              jnp.array(vals), fused=True,
+                              **_layout_kwargs(layout, tab, monkeypatch))
+    _assert_same(tab_j, res_j, tab_f, res_f, f"ins/del race {layout}")
+    # same-port same-slot race (step 4): the later insert supersedes the
+    # delete, so step 5 must find key 8 with the raced value
+    assert bool(np.asarray(res_f.found)[5, 0])
+    assert int(np.asarray(res_f.value)[5, 0, 0]) == 999
 
 
 def test_stream_backend_dispatch(rng):
@@ -202,12 +285,14 @@ def test_stream_bucket_tiles_power_of_two(monkeypatch):
     assert kops.stream_bucket_tiles(*args) == cfg.buckets
 
 
-def test_run_stream_local_partitions_merge_to_oracle(rng):
+def test_run_stream_local_partitions_merge_to_oracle(rng, monkeypatch):
     """The shard-local stream (engine.run_stream_local): manually partition a
     table's bucket axis, run the SAME global-bucket stream against every
-    partition with its bucket-base offset (fused kernel and scanned jnp), and
+    partition with its bucket-base offset (fused kernel — unblocked, binned
+    single- and multi-pass blocked, unbinned blocked — and scanned jnp), and
     merge — bit-exact with the unsharded oracle; out-of-partition lanes are
-    inert.  This is the single-device half of the sharded distributed path
+    inert (the binned pre-pass sentinel-sorts them past every window).  This
+    is the single-device half of the sharded distributed path
     (routing/all_to_all is covered by tests/test_distributed_sharded.py)."""
     from repro.core.hashing import h3_hash as h3
     cfg = HashTableConfig(p=4, k=2, buckets=64, slots=4,
@@ -222,19 +307,32 @@ def test_run_stream_local_partitions_merge_to_oracle(rng):
     bucket = h3(jnp.array(kk).reshape(T * N, 1), tab.q_masks).reshape(T, N)
     pe = jnp.arange(N, dtype=jnp.int32) % cfg.p     # == the oracle's lane map
     Bl = scfg.local_buckets
-    for fused in (False, True):
+    # (fused, bucket_tiles, binned, shrink_budget): scanned jnp, unblocked
+    # fused, binned blocked single-pass, binned blocked multi-pass, unbinned
+    combos = [(False, None, None, False), (True, None, None, False),
+              (True, 4, True, False), (True, 4, True, True),
+              (True, 4, False, False)]
+    for fused, tiles, binned, shrink in combos:
+        label = f"fused={fused} tiles={tiles} binned={binned} shrink={shrink}"
         parts = {"store_keys": [], "store_vals": [], "store_valid": []}
         got_f = np.zeros((T, N), bool)
         got_ok = np.zeros((T, N), bool)
         got_v = np.zeros((T, N, 1), np.uint32)
         for s in range(scfg.shards):
             lo = s * Bl
-            sk, sv, sb, f, ok, val = engine.run_stream_local(
-                scfg, tab.store_keys[:, :, lo:lo + Bl],
-                tab.store_vals[:, :, lo:lo + Bl],
-                tab.store_valid[:, :, lo:lo + Bl],
-                pe, bucket, jnp.array(ops), jnp.array(kk), jnp.array(vv),
-                bucket_base=lo, fused=fused)
+            part = (tab.store_keys[:, :, lo:lo + Bl],
+                    tab.store_vals[:, :, lo:lo + Bl],
+                    tab.store_valid[:, :, lo:lo + Bl])
+            with monkeypatch.context() as m:
+                if shrink:     # multi-pass: bin_passes == bucket_tiles == 4
+                    rb = kops.replica_bytes(*part)
+                    m.setattr(kops, "VMEM_TABLE_BUDGET_BYTES",
+                              max(rb // 3, 1))
+                sk, sv, sb, f, ok, val = engine.run_stream_local(
+                    scfg, *part,
+                    pe, bucket, jnp.array(ops), jnp.array(kk), jnp.array(vv),
+                    bucket_base=lo, fused=fused, bucket_tiles=tiles,
+                    binned=binned)
             parts["store_keys"].append(np.asarray(sk))
             parts["store_vals"].append(np.asarray(sv))
             parts["store_valid"].append(np.asarray(sb))
@@ -243,13 +341,13 @@ def test_run_stream_local_partitions_merge_to_oracle(rng):
             got_f |= np.asarray(f)
             got_ok |= np.asarray(ok)
             got_v = np.maximum(got_v, np.asarray(val))
-        assert (got_f == np.asarray(ores.found)).all(), f"fused={fused}"
-        assert (got_ok == np.asarray(ores.ok)).all(), f"fused={fused}"
-        assert (got_v == np.asarray(ores.value)).all(), f"fused={fused}"
+        assert (got_f == np.asarray(ores.found)).all(), label
+        assert (got_ok == np.asarray(ores.ok)).all(), label
+        assert (got_v == np.asarray(ores.value)).all(), label
         for nm, chunks in parts.items():
             merged = np.concatenate(chunks, axis=2)
             assert (merged == np.asarray(getattr(otab, nm))).all(), \
-                f"fused={fused}: {nm} diverged"
+                f"{label}: {nm} diverged"
 
 
 def test_shards_config_validation():

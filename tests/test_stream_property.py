@@ -1,0 +1,68 @@
+"""Hypothesis property test for the fused stream kernel's commit conflicts:
+on arbitrary S/I/U/D traces over a TINY key space (heavy same-step duplicate
+(bucket, slot) write targets, same-port and cross-port, inserts racing
+deletes), the fused kernel stays bit-exact with the scanned jnp oracle on
+the unblocked, binned-blocked (single- and multi-pass) and unbinned-blocked
+layouts.  Guarded on hypothesis like tests/test_hash_table_property.py."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import repro.kernels.ops as kops  # noqa: E402
+from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT,  # noqa: E402
+                        OP_SEARCH, init_table, run_stream, schedule_queries)
+from test_stream_fused import _assert_same  # noqa: E402
+
+N_QUERIES = 48          # fixed -> one trace shape, one compile per layout
+KEYS = st.integers(1, 10)     # tiny space -> same-step duplicate targets
+
+
+@st.composite
+def traces(draw):
+    ops, keys, vals = [], [], []
+    for _ in range(N_QUERIES):
+        ops.append(draw(st.sampled_from([OP_SEARCH, OP_INSERT, OP_INSERT,
+                                         OP_DELETE])))
+        keys.append(draw(KEYS))
+        vals.append(draw(st.integers(1, 2 ** 31)))
+    return ops, keys, vals
+
+
+@settings(max_examples=12, deadline=None)
+@given(trace=traces(), stagger=st.booleans())
+def test_fused_layouts_match_oracle_on_duplicate_heavy_traces(trace, stagger):
+    # qpp=2 puts two lanes on every port per step: same-port duplicates;
+    # stagger=False lets distinct ports pick the same open slot: cross-port
+    # duplicates.  10 keys over 16 buckets also collides buckets directly.
+    cfg = HashTableConfig(p=2, k=2, buckets=16, slots=2, queries_per_pe=2,
+                          stagger_slots=stagger)
+    op, key, val = trace
+    keys = np.zeros((N_QUERIES, 1), np.uint32)
+    keys[:, 0] = key
+    vals = np.asarray(val, np.uint32).reshape(-1, 1)
+    ops, kk, vv = schedule_queries(np.asarray(op, np.int32), keys, vals, cfg)
+    tab = init_table(cfg, jax.random.key(0))
+    args = (tab, jnp.array(ops), jnp.array(kk), jnp.array(vv))
+    tab_j, res_j = run_stream(*args, backend="jnp", fused=False)
+    layouts = {
+        "unblocked": dict(bucket_tiles=1),
+        "binned_1pass": dict(bucket_tiles=4, binned=True),
+        "nobinned": dict(bucket_tiles=4, binned=False),
+    }
+    for name, kwargs in layouts.items():
+        tab_f, res_f = run_stream(*args, fused=True, **kwargs)
+        _assert_same(tab_j, res_j, tab_f, res_f, f"{name} stagger={stagger}")
+    # multi-pass binned sweep: shrink the budget so bin_passes == 4
+    saved = kops.VMEM_TABLE_BUDGET_BYTES
+    rb = kops.replica_bytes(tab.store_keys, tab.store_vals, tab.store_valid)
+    kops.VMEM_TABLE_BUDGET_BYTES = max(rb // 3, 1)
+    try:
+        tab_f, res_f = run_stream(*args, fused=True, bucket_tiles=4,
+                                  binned=True)
+    finally:
+        kops.VMEM_TABLE_BUDGET_BYTES = saved
+    _assert_same(tab_j, res_j, tab_f, res_f, f"binned_4pass stagger={stagger}")
