@@ -1,33 +1,33 @@
-"""Distributed scaling: bucket-sharded stream vs replicated per-step MOPS.
+"""Distributed scaling: bucket-sharded stream (bounded vs skew-proof router)
+vs replicated per-step MOPS.
 
 Sweeps shard count D over a fake-device mesh and times, on identical
 stimulus (``bench_group`` paired round-robin, drift-immune):
 
-  sharded_stream    make_distributed_stream with cfg.shards == D — ONE jitted
-                    call routes all T steps to owner shards (all_to_all) and
-                    streams each device's ``buckets/D``-bucket partition
-                    locally
+  sharded_bounded   make_distributed_stream with cfg.shards == D and the
+                    capacity-bounded two-pass router (DESIGN.md §2.2): the
+                    host load pass shrinks the routed width to the measured
+                    max per-(step, owner) load, so each owner streams
+                    ``[T', Nr]`` lanes instead of ``[T, D*n_local]``
+  sharded_skewproof the PR 3 router: fixed ``D*n_local`` routed lanes per
+                    owner per step (data-agnostic worst case) — the A/B
+                    baseline the ROADMAP item was sized against
   replicated_step   make_distributed_step with cfg.shards == 1 — the
                     superseded design: T dispatches, each probing the FULL
                     replicated table and all-gathering mutation records
 
-The sharded side wins on both axes the refactor targets: per-device memory
-traffic shrinks with the partition (``buckets/D`` vs ``buckets``) and the
-stream amortizes one launch over T steps.  Off-TPU the local streams run the
-scanned jnp path on both sides (interpret-mode Pallas is a correctness
-harness, not a fast path — same policy as BENCH_stream.json); the comparison
-stays apples-to-apples.
-
-Each sharded row also records **routed-lane occupancy**: the router reserves
-the skew-proof capacity ``n_local`` per (origin, owner) pair — ``D*n_local``
-routed slots per owner per step — while the actual per-owner load under the
-uniform stimulus is ~``N/D = n_local``.  The recorded mean/max owner load vs
-capacity sizes the ROADMAP "two-pass / carry-over router" item with data:
-``capacity / max_load`` is the routed-width shrink a load-aware router could
-take without dropping queries on this trace.
+Each sharded row records **routed-lane occupancy** (the skew-proof
+capacity's utilisation, which sized the router item) and the **achieved
+bounded-router shapes**: routed width vs the skew-proof ``D*n_local``,
+owner rows ``T'``, and the overflow/carry rate (always 0 in auto mode —
+carry only fires under a static ``routed_slack`` cap).  Off-TPU the local
+streams run the scanned jnp path on all sides (interpret-mode Pallas is a
+correctness harness, not a fast path — same policy as BENCH_stream.json);
+the comparison stays apples-to-apples.
 
 Emits ``BENCH_distributed.json`` (full mode; ``--smoke`` is the CI harness
-check).  The measurement re-execs in a subprocess with
+check; ``--bounded`` / ``--skewproof`` pin a single sharded column — CI runs
+the pair as an A/B).  The measurement re-execs in a subprocess with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the conftest
 convention) so the driver process keeps its single-device view.
 """
@@ -63,7 +63,7 @@ def _routed_occupancy(cfg, q_masks, keys_j):
     for t in range(T):
         loads[t] = np.bincount(owner[t], minlength=D)
     capacity = N                                # n_local per origin x D origins
-    return {
+    return owner, {
         "capacity_per_owner": int(capacity),
         "mean_owner_load": float(loads.mean()),
         "max_owner_load": int(loads.max()),
@@ -73,7 +73,7 @@ def _routed_occupancy(cfg, q_masks, keys_j):
     }
 
 
-def _sweep(smoke: bool) -> None:
+def _sweep(smoke: bool, routers) -> None:
     import jax
 
     from benchmarks.common import bench_group, mixed_stream, row
@@ -81,6 +81,7 @@ def _sweep(smoke: bool) -> None:
     from repro.core.distributed import (init_distributed_table,
                                         make_distributed_step,
                                         make_distributed_stream, make_ht_mesh)
+    from repro.core.engine import plan_bounded_route
 
     shards = SHARDS[:1] if smoke else SHARDS
     T, nl, buckets, iters = ((T_SMOKE, NL_SMOKE, BUCKETS_SMOKE, 1) if smoke
@@ -88,7 +89,16 @@ def _sweep(smoke: bool) -> None:
     results = {"host_backend": jax.default_backend(),
                "interpret_mode": jax.default_backend() != "tpu",
                "steps": T, "n_local": nl, "buckets": buckets, "iters": iters,
+               "routers": list(routers),
                "stat": "paired best-of-N (bench_group round-robin)",
+               "notes": "bounded rows include the per-call two-pass "
+                        "measurement (~0.3ms host pass + sync); it pays "
+                        "once the measured width shrink beats that — at "
+                        "D=2 the uniform max load already fills the "
+                        "skew-proof width (width_ratio 1.0, the wrapper "
+                        "falls back to the skew-proof exchange), so the "
+                        "bounded column there is pure measurement "
+                        "overhead, while the shrink grows with D",
                "rows": []}
     for D in shards:
         cfg = HashTableConfig(p=D, k=D, buckets=buckets, slots=2,
@@ -98,14 +108,19 @@ def _sweep(smoke: bool) -> None:
         mesh = make_ht_mesh(D)
         tab_sh = init_distributed_table(cfg, jax.random.key(0), mesh)
         tab_rep = init_distributed_table(cfg_rep, jax.random.key(0))
-        stream = make_distributed_stream(mesh, cfg)
         step = make_distributed_step(mesh, cfg_rep)
         N = D * nl
         ops_j, keys_j, vals_j = mixed_stream(cfg, T)
 
-        def run_sharded():
-            _, res = stream(tab_sh, ops_j, keys_j, vals_j)
-            return res.found
+        fns = {}
+        for router in routers:
+            stream = make_distributed_stream(mesh, cfg, router=router)
+
+            def run_sharded(stream=stream):
+                _, res = stream(tab_sh, ops_j, keys_j, vals_j)
+                return res.found
+
+            fns[f"sharded_{router}"] = run_sharded
 
         def run_replicated():
             tab, res = tab_rep, None
@@ -113,23 +128,40 @@ def _sweep(smoke: bool) -> None:
                 tab, res = step(tab, ops_j[t], keys_j[t], vals_j[t])
             return res.found          # chains through every step's table
 
-        us = bench_group({"sharded_stream": run_sharded,
-                          "replicated_step": run_replicated}, iters=iters)
+        fns["replicated_step"] = run_replicated
+        us = bench_group(fns, iters=iters)
         mops = {name: T * N / t for name, t in us.items()}
-        occ = _routed_occupancy(cfg, tab_sh.q_masks, keys_j)
-        results["rows"].append({
+        owner, occ = _routed_occupancy(cfg, tab_sh.q_masks, keys_j)
+        plan = plan_bounded_route(cfg, owner)
+        out_row = {
             "shards": D,
-            "mops_sharded_stream": mops["sharded_stream"],
             "mops_replicated_step": mops["replicated_step"],
-            "sharded_over_replicated": (mops["sharded_stream"]
-                                        / mops["replicated_step"]),
             "routed_occupancy": occ,
-        })
+            "bounded_router": {
+                "routed_width": plan.routed_width,
+                "skewproof_width": plan.skewproof_width,
+                "width_ratio": plan.width_ratio,
+                "routed_steps": plan.routed_steps,
+                "pair_capacity": plan.pair_capacity,
+                "carried_lanes": plan.carried_lanes,
+                "carry_rate": plan.carry_rate,
+            },
+        }
+        for router in routers:
+            out_row[f"mops_sharded_{router}"] = mops[f"sharded_{router}"]
+            out_row[f"sharded_{router}_over_replicated"] = (
+                mops[f"sharded_{router}"] / mops["replicated_step"])
+        if len(routers) == 2:
+            out_row["bounded_over_skewproof"] = (
+                mops["sharded_bounded"] / mops["sharded_skewproof"])
+        results["rows"].append(out_row)
+        sharded_cols = ";".join(
+            f"{r}_MOPS={mops[f'sharded_{r}']:.3f}" for r in routers)
         row(f"distributed_throughput_D{D}", 0.0,
-            f"sharded_MOPS={mops['sharded_stream']:.3f};"
+            f"{sharded_cols};"
             f"replicated_MOPS={mops['replicated_step']:.3f};"
-            f"sharded_over_replicated="
-            f"{mops['sharded_stream'] / mops['replicated_step']:.3f};"
+            f"routed_width={plan.routed_width}/{plan.skewproof_width};"
+            f"carry_rate={plan.carry_rate:.3f};"
             f"max_occupancy={occ['max_occupancy']:.3f};"
             f"router_shrink={occ['router_shrink_potential']:.1f}x")
     if smoke:
@@ -145,10 +177,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes, 1 iter, no JSON — CI harness check")
+    ap.add_argument("--bounded", action="store_true",
+                    help="pin the sharded column to the bounded router only")
+    ap.add_argument("--skewproof", action="store_true",
+                    help="pin the sharded column to the skew-proof router "
+                         "only")
     ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.bounded and args.skewproof:
+        ap.error("--bounded and --skewproof are mutually exclusive "
+                 "(omit both for the A/B pair)")
+    routers = (("bounded",) if args.bounded else
+               ("skewproof",) if args.skewproof else
+               ("bounded", "skewproof"))
     if args.child:
-        _sweep(args.smoke)
+        _sweep(args.smoke, routers)
         return
     # a device mesh needs >1 device; fork with forced fake devices so the
     # driver (benchmarks/run.py) keeps its real single-device view
@@ -158,8 +201,9 @@ def main() -> None:
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(_ROOT, "src"), _ROOT, env.get("PYTHONPATH", "")])
     cmd = [sys.executable, os.path.abspath(__file__), "--child"]
-    if args.smoke:
-        cmd.append("--smoke")
+    for flag in ("smoke", "bounded", "skewproof"):
+        if getattr(args, flag):
+            cmd.append(f"--{flag}")
     r = subprocess.run(cmd, env=env, cwd=_ROOT)
     if r.returncode:
         raise RuntimeError(f"distributed_throughput child failed "

@@ -23,9 +23,15 @@ Terminology maps 1:1 onto the paper:
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
-__all__ = ["HashTableConfig", "sram_blocks_ours", "sram_blocks_laforest", "memory_bytes"]
+__all__ = ["HashTableConfig", "sram_blocks_ours", "sram_blocks_laforest",
+           "memory_bytes", "round_up_lanes"]
+
+
+def round_up_lanes(x: int, tile: int) -> int:
+    """Round a lane count up to the routed lane tile (>= 1 lane)."""
+    return -(-max(x, 1) // tile) * tile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +60,31 @@ class HashTableConfig:
                                     # high bits of the H3 bucket index select
                                     # the owner shard.  1 == single memory
                                     # domain (replicated when distributed).
+    router: str = "skewproof"       # sharded-stream routing policy
+                                    # (DESIGN.md §2.2):
+                                    # "skewproof" — fixed D*n_local routed
+                                    #   lanes per owner per step (worst-case
+                                    #   capacity, fully jit-internal);
+                                    # "bounded"  — capacity-bounded two-pass
+                                    #   router: a load pass measures the trace
+                                    #   and the routed width shrinks to the
+                                    #   actual max per-(step, owner) load
+                                    #   (rounded to routed_lane_tile), with a
+                                    #   FIFO carry-over absorbing anything a
+                                    #   static routed_slack cap cuts off.
+    routed_slack: Optional[int] = None
+                                    # bounded router only: static cap on the
+                                    # routed width (lanes per owner per step)
+                                    # for jit-stable shapes across streams;
+                                    # loads above the cap carry over to later
+                                    # routed rows in program order.  None ==
+                                    # auto (width == measured max load; no
+                                    # carry ever, bit-exact always).
+    routed_lane_tile: int = 8       # rounding granularity for the bounded
+                                    # router's measured widths/capacities —
+                                    # coarser tiles mean fewer jit
+                                    # specializations (and TPU-friendly lane
+                                    # alignment), finer tiles a tighter fit
 
     def __post_init__(self):
         if self.k < 1 or self.k > self.p:
@@ -71,6 +102,15 @@ class HashTableConfig:
         if self.shards > self.buckets:
             raise ValueError(f"need shards <= buckets, got shards={self.shards}"
                              f" buckets={self.buckets}")
+        if self.router not in ("skewproof", "bounded"):
+            raise ValueError(f"router must be skewproof|bounded, "
+                             f"got {self.router!r}")
+        if self.routed_slack is not None and self.routed_slack < 1:
+            raise ValueError(f"routed_slack must be >= 1 lane, "
+                             f"got {self.routed_slack}")
+        if self.routed_lane_tile < 1:
+            raise ValueError(f"routed_lane_tile must be >= 1, "
+                             f"got {self.routed_lane_tile}")
 
     @property
     def index_bits(self) -> int:
@@ -110,6 +150,22 @@ class HashTableConfig:
     def entry_words(self) -> int:
         # key + value + 1 packed valid word per slot (valid is XOR-encoded too)
         return self.key_words + self.val_words + 1
+
+    def bounded_routed_width(self, max_owner_load: int, n_local: int,
+                             slack=None, tile=None) -> int:
+        """The bounded router's routed width (DESIGN.md §2.2): the measured
+        max per-(step, owner) load rounded up to the lane tile, clamped by
+        ``routed_slack`` and the skew-proof ceiling ``shards * n_local``.
+        The single source of this arithmetic — ``engine.plan_bounded_route``
+        picks the real exchange shape with it and
+        ``perfmodel.routed_width_lanes`` models it, so the two cannot
+        drift."""
+        slack = self.routed_slack if slack is None else slack
+        tile = self.routed_lane_tile if tile is None else tile
+        nr = round_up_lanes(max_owner_load, tile)
+        if slack is not None:
+            nr = max(1, min(nr, slack))
+        return min(nr, self.shards * n_local)
 
     def tree_flatten(self):  # static-only dataclass; handy for jit static args
         return (), self

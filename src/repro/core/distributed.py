@@ -20,6 +20,15 @@ Per stream:
   return   results ride the inverse ``all_to_all`` and land on their origin
            lanes via the saved send permutation (engine.inverse_route)
 
+``cfg.router == "bounded"`` swaps the route/return stages for the
+capacity-bounded two-pass router (DESIGN.md §2.2): a host-side load pass
+(engine.plan_bounded_route) measures the trace and the exchange runs at the
+measured widths — routed rows shrink from ``[T, D*n]`` to ``[T', Nr]`` with
+``Nr`` = max per-(step, owner) load rounded to ``cfg.routed_lane_tile`` —
+with a FIFO carry-over absorbing anything a static ``cfg.routed_slack`` cap
+cuts off.  The returned callable is then a thin host wrapper (pass 1 +
+dispatch to a jit specialized per measured width), not itself jit-traceable.
+
 Capacity grows with the mesh (each device holds ``buckets/shards`` of the
 table) and the per-stream collective payload is ``2 * T * n_dev * shards *
 n * query_bytes`` (the ``shards`` factor is the skew-proof per-owner
@@ -45,6 +54,8 @@ visibility window is exactly one step — in both mappings, since a bucket's
 whole history lives on one owner processed in step order.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -110,21 +121,28 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
                             axis: str = "ht",
                             fused: bool | None = None,
                             bucket_tiles: int | None = None,
-                            binned: bool | None = None):
-    """Build the jitted multi-device stream.
+                            binned: bool | None = None,
+                            router: str | None = None,
+                            routed_slack: int | None = None):
+    """Build the multi-device stream.
 
     Returns ``f(table, ops, keys, vals) -> (table, results)`` over ``[T, N]``
     step tensors, queries sharded over ``axis`` (``N = n_dev * n_local``).
     ``cfg.shards`` selects the mapping (module docstring): ``n_dev`` =
     bucket-sharded route+stream+return, ``1`` = the replicated per-step
     all-gather oracle scanned over T.  ``fused``/``bucket_tiles``/``binned``
-    pin the sharded local-stream regime exactly as in ``engine.run_stream``.
+    pin the sharded local-stream regime exactly as in ``engine.run_stream``;
+    ``router``/``routed_slack`` override ``cfg.router``/``cfg.routed_slack``
+    for the sharded mapping.  The skew-proof/replicated callables are jitted
+    end to end; the bounded callable is a host wrapper (measurement pass +
+    dispatch to a jit specialized on the measured routed widths).
     """
     from jax.experimental.shard_map import shard_map
     n_dev = mesh.shape[axis]
     if cfg.shards not in (1, n_dev):
         raise ValueError(f"cfg.shards must be 1 (replicated) or the mesh "
                          f"axis size {n_dev}, got {cfg.shards}")
+    router = cfg.router if router is None else router
 
     if cfg.shards == 1:
         def local_stream(table, ops, keys, vals):
@@ -147,7 +165,27 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
             return jax.lax.scan(body, table, (ops, keys, vals))
 
         table_spec = XorHashTable(P(), P(), P(), P(), cfg)
-    else:
+
+        fn = shard_map(
+            local_stream, mesh=mesh,
+            in_specs=(table_spec, P(None, axis), P(None, axis),
+                      P(None, axis)),
+            out_specs=(table_spec, P(None, axis)),
+            check_rep=False,
+        )
+        return jax.jit(fn)
+
+    table_spec = XorHashTable(P(), P(None, None, axis),
+                              P(None, None, axis), P(None, None, axis), cfg)
+    shmap = lambda body: jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(table_spec, P(None, axis), P(None, axis), P(None, axis)),
+        out_specs=(table_spec, P(None, axis)),
+        check_rep=False,
+    ))
+
+    @functools.lru_cache(maxsize=None)
+    def _skewproof_stream():
         def local_stream(table, ops, keys, vals):
             d = jax.lax.axis_index(axis)
             T, n = ops.shape
@@ -167,17 +205,93 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
             return table, StepResults(found=f_l, value=v_l, ok=ok_l,
                                       bucket=bucket)
 
-        table_spec = XorHashTable(P(), P(None, None, axis),
-                                  P(None, None, axis), P(None, None, axis),
-                                  cfg)
+        return shmap(local_stream)
 
-    fn = shard_map(
-        local_stream, mesh=mesh,
-        in_specs=(table_spec, P(None, axis), P(None, axis), P(None, axis)),
-        out_specs=(table_spec, P(None, axis)),
-        check_rep=False,
-    )
-    return jax.jit(fn)
+    if router == "skewproof":
+        return _skewproof_stream()
+
+    # bounded two-pass router (module docstring; DESIGN.md §2.2): the
+    # returned callable measures each trace on the host (pass 1) and
+    # dispatches to a jitted exchange specialized on the measured widths —
+    # rounding to cfg.routed_lane_tile keeps the specialization count low.
+    slack = cfg.routed_slack if routed_slack is None else routed_slack
+
+    @jax.jit
+    def _measure(keys, q_masks):
+        T, N = keys.shape[:2]
+        bucket = _h3(keys.reshape(T * N, cfg.key_words),
+                     q_masks).reshape(T, N)
+        return _engine.route_load_pass(cfg, _engine.shard_owner(cfg, bucket))
+
+    # pass 1 should not run as an n_dev-way SPMD program just because
+    # q_masks is mesh-replicated (per-call dispatch over the mesh costs more
+    # than the whole measurement): when the query tensors live on ONE
+    # device, measure there with a single-device copy of the LAST table's
+    # q_masks (one slot — chained streaming mints a fresh q_masks object per
+    # call, so an id-keyed dict would never hit and only grow; the strong
+    # ref in the slot pins the id so it cannot be recycled while cached).
+    # Mesh-committed query tensors (the sharded layout the stream itself
+    # advertises) keep the native q_masks — mixing them with a pinned copy
+    # is an incompatible-devices error.
+    _qm_slot: list = [None, None, None]     # [source array, device, copy]
+
+    def _measure_loads(keys, q_masks):
+        devs = keys.devices() if isinstance(keys, jax.Array) else None
+        if devs is None or len(devs) != 1:
+            return _measure(keys, q_masks)      # sharded queries: SPMD pass
+        dev = next(iter(devs))
+        if _qm_slot[0] is not q_masks or _qm_slot[1] != dev:
+            _qm_slot[0] = q_masks
+            _qm_slot[1] = dev
+            _qm_slot[2] = jax.device_put(jax.device_get(q_masks), dev)
+        return _measure(keys, _qm_slot[2])
+
+    @functools.lru_cache(maxsize=None)
+    def _bounded_inner(q_cap: int, nr: int, tr: int):
+        def local_stream(table, ops, keys, vals):
+            d = jax.lax.axis_index(axis)
+            T, n = ops.shape
+            bucket = _h3(keys.reshape(T * n, cfg.key_words),
+                         table.q_masks).reshape(T, n)
+            routed, pe, carry = _engine.route_stream_bounded(
+                cfg, axis, bucket, ops, keys, vals, bucket,
+                pair_capacity=q_cap, routed_width=nr, routed_steps=tr)
+            r_op, r_key, r_val, r_bkt = routed
+            sk, sv, sb, found, ok, value = _engine.run_stream_local(
+                cfg, table.store_keys, table.store_vals, table.store_valid,
+                pe, r_bkt, r_op, r_key, r_val,
+                bucket_base=d * cfg.local_buckets,
+                fused=fused, bucket_tiles=bucket_tiles, binned=binned)
+            f_l, ok_l, v_l = _engine.inverse_route_bounded(
+                axis, carry, found, ok, value)
+            table = XorHashTable(table.q_masks, sk, sv, sb, cfg)
+            return table, StepResults(found=f_l, value=v_l, ok=ok_l,
+                                      bucket=bucket)
+
+        return shmap(local_stream)
+
+    def bounded_stream(table, ops, keys, vals):
+        T, N = ops.shape
+        if T == 0:
+            return table, StepResults(
+                found=jnp.zeros((0, N), jnp.bool_),
+                value=jnp.zeros((0, N, cfg.val_words), jnp.uint32),
+                ok=jnp.zeros((0, N), jnp.bool_),
+                bucket=jnp.zeros((0, N), jnp.uint32))
+        loads, pair = jax.device_get(_measure_loads(keys, table.q_masks))
+        plan = _engine.plan_bounded_route(cfg, slack=slack, loads=loads,
+                                          pair=pair)
+        # nothing to shrink: the measured width IS the worst case (and the
+        # bounded no-carry exchange is the skew-proof one minus padding), so
+        # skip the re-binning and take the jit-internal skew-proof path
+        if (plan.routed_width >= plan.skewproof_width
+                and plan.carried_lanes == 0):
+            return _skewproof_stream()(table, ops, keys, vals)
+        inner = _bounded_inner(plan.pair_capacity, plan.routed_width,
+                               plan.routed_steps)
+        return inner(table, ops, keys, vals)
+
+    return bounded_stream
 
 
 def make_distributed_step(mesh: Mesh, cfg: HashTableConfig, axis: str = "ht"):

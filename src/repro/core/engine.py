@@ -58,7 +58,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.config import HashTableConfig
+from repro.core.config import HashTableConfig, round_up_lanes as _round_up_lanes
 from repro.core.hash_table import (OP_DELETE, OP_INSERT, OP_SEARCH,
                                    QueryBatch, StepResults, XorHashTable)
 from repro.core.hashing import h3_hash as _h3_jnp
@@ -70,6 +70,9 @@ __all__ = [
     "probe_jnp", "commit_jnp", "mutation_plan", "encode_records",
     "commit_records", "staggered_open_slot",
     "shard_owner", "route_stream", "inverse_route", "run_stream_local",
+    "BoundedRoutePlan", "plan_bounded_route", "route_load_pass",
+    "route_stream_bounded",
+    "inverse_route_bounded",
     "register_backend", "get_backend", "resolve_backend", "available_backends",
 ]
 
@@ -686,12 +689,15 @@ def run_stream_local(cfg: HashTableConfig, store_keys: jnp.ndarray,
     ``store_*`` ``[R, k, local_buckets, S, W]`` hold the global bucket range
     ``[bucket_base, bucket_base + local_buckets)``; ``bucket`` carries the
     precomputed GLOBAL indices.  Lanes outside the partition (router padding
-    or foreign shards) are inert: no writes, found/ok False, value 0.  On the
-    pallas backend this is the fused ``xor_stream`` kernel with the
-    bucket-base offset (the bucket-tiling and tile-binned dispatch paths
-    reused unchanged — ``binned`` as in :func:`run_stream`); elsewhere
-    the scanned jnp oracle with the same partition masking.  Returns
-    ``(store_keys', store_vals', store_valid', found, ok, value)``.
+    or foreign shards) are inert: no writes, found/ok False, value 0.  ``pe``
+    is per routed lane — ``[Nr]`` (skew-proof routing: lane -> origin is
+    step-invariant) or ``[T, Nr]`` (bounded routing: rows are re-binned
+    mixtures, so the origin varies per step).  On the pallas backend this is
+    the fused ``xor_stream`` kernel with the bucket-base offset (the
+    bucket-tiling and tile-binned dispatch paths reused unchanged —
+    ``binned`` as in :func:`run_stream`); elsewhere the scanned jnp oracle
+    with the same partition masking.  Returns ``(store_keys', store_vals',
+    store_valid', found, ok, value)``.
     """
     name = _resolve_name(cfg, backend)
     use_fused = fused if fused is not None else (name == "pallas")
@@ -712,15 +718,17 @@ def run_stream_local(cfg: HashTableConfig, store_keys: jnp.ndarray,
         return bc(sk), bc(sv), bc(sb), found, ok, value
 
     Bl = store_keys.shape[2]
+    pe_t = jnp.broadcast_to(pe, ops.shape) if pe.ndim == 1 else pe
+    port_t = jnp.broadcast_to(port, ops.shape) if port.ndim == 1 else port
 
     def body(carry, xs):
         sk, sv, sb = carry
-        op, key, val, bkt = xs
+        op, key, val, bkt, pe_s, port_s = xs
         rel = bkt.astype(jnp.int32) - base
         in_part = (rel >= 0) & (rel < Bl)
         idx = jnp.clip(rel, 0, Bl - 1)
         (found, mslot, oslot, hopen, value,
-         remk, remv, remb) = probe_jnp(idx, port, key, sk, sv, sb,
+         remk, remv, remb) = probe_jnp(idx, port_s, key, sk, sv, sb,
                                        stagger=cfg.stagger_slots)
         # mask the probe to the partition, then reuse the single-domain
         # mutation semantics verbatim (one source of truth): out-of-partition
@@ -730,7 +738,7 @@ def run_stream_local(cfg: HashTableConfig, store_keys: jnp.ndarray,
         # observable effect).
         found = found & in_part
         value = jnp.where(found[:, None], value, jnp.uint32(0))
-        pr = ProbeResult(bucket=idx, pe=pe, found=found, match_slot=mslot,
+        pr = ProbeResult(bucket=idx, pe=pe_s, found=found, match_slot=mslot,
                          open_slot=oslot, has_open=hopen & in_part,
                          value=value, rem_keys=remk, rem_vals=remv,
                          rem_valid=remb)
@@ -741,5 +749,302 @@ def run_stream_local(cfg: HashTableConfig, store_keys: jnp.ndarray,
 
     (sk, sv, sb), (found, ok, value) = jax.lax.scan(
         body, (store_keys, store_vals, store_valid),
-        (ops, keys, vals, bucket))
+        (ops, keys, vals, bucket, pe_t, port_t))
     return sk, sv, sb, found, ok, value
+
+
+# ---------------------------------------------------------------------------
+# Stage four, bounded: the capacity-bounded two-pass router (DESIGN.md §2.2)
+#
+# The skew-proof router above reserves ``n_local`` send lanes per (origin,
+# owner) pair — routed width ``D * n_local`` per owner per step — while the
+# mean per-owner load is exactly ``n_local`` (BENCH_distributed.json
+# ``routed_occupancy``).  The bounded router shrinks both dimensions to the
+# *measured* trace:
+#
+#   pass 1  :func:`plan_bounded_route` (host side, cheap) histograms the
+#           trace's (step, owner) loads and (origin, owner) totals and picks
+#           the static shapes: routed width ``Nr`` = max per-(step, owner)
+#           load rounded to ``cfg.routed_lane_tile`` (optionally capped by the
+#           static ``cfg.routed_slack`` for jit-stable shapes), send-queue
+#           capacity ``Q`` per pair = max pair total, and the owner-row count
+#           ``T' >= T`` needed to drain every FIFO.
+#   pass 2  :func:`route_stream_bounded` (shard_map side) packs each
+#           (origin -> owner) pair's lanes into a flat FIFO of ``Q`` slots in
+#           program order — step boundaries ride along as a tag word — does
+#           ONE ``all_to_all``, and the owner re-bins arrivals back into
+#           ``[T', Nr]`` step rows by tag, serving each owner-FIFO at ``Nr``
+#           lanes per row.
+#
+# Ordering: an owner's service order is its arrival order, which is
+# (step, origin, lane) == global program order, so the sequential last-wins
+# commit is preserved verbatim.  When ``Nr`` >= the max (step, owner) load
+# (always, in auto mode) every lane is served at exactly its own step and the
+# routed stream is the skew-proof stream minus dead padding — bit-exact with
+# the replicated oracle.  When a static ``routed_slack`` cap binds, overflow
+# lanes carry over to the next routed row(s), still in program order: no
+# query is dropped (``T'`` adds drain rows) and last-wins still holds, but a
+# carried lane probes a *fresher* snapshot than the oracle's (its visibility
+# window narrows), so byte-exactness is guaranteed only while the buckets it
+# touches are quiescent over the rows it skips — the documented carry
+# contract (DESIGN.md §2.2).
+# ---------------------------------------------------------------------------
+
+
+def _round_up_pow2_lanes(x: int, tile: int) -> int:
+    """Round up to a power-of-two multiple of the lane tile — bounds the
+    number of distinct jit-specializing shapes to O(log) of the range."""
+    x = _round_up_lanes(x, tile)
+    return tile * (1 << (-(-x // tile) - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundedRoutePlan:
+    """Static shapes + load stats from the bounded router's measurement pass
+    (host-side values; the jitted exchange specializes on the three shape
+    fields, so equal-shaped plans share one compile)."""
+    pair_capacity: int        # Q: send-queue slots per (origin, owner) pair
+    routed_width: int         # Nr: routed lanes per owner per step row
+    routed_steps: int         # T': owner-side rows (T + drain rows)
+    steps: int                # T: stream steps measured
+    n_local: int              # lanes per origin device per step
+    shards: int               # D
+    max_owner_load: int       # max lanes routed to one owner in one step
+    mean_owner_load: float
+    carried_lanes: int        # lanes served after their arrival step
+    total_lanes: int
+
+    @property
+    def skewproof_width(self) -> int:
+        return self.shards * self.n_local
+
+    @property
+    def width_ratio(self) -> float:
+        return self.routed_width / max(self.skewproof_width, 1)
+
+    @property
+    def carry_rate(self) -> float:
+        return self.carried_lanes / max(self.total_lanes, 1)
+
+
+def route_load_pass(cfg: HashTableConfig, owner: jnp.ndarray):
+    """The in-graph half of the bounded router's pass 1: histogram the
+    ``[T, N]`` owner matrix into per-(step, owner) loads ``[T, D]`` and
+    whole-trace per-(origin, owner) totals ``[D, D]`` (lanes origin-major:
+    origin = lane // n_local).  jit-friendly — the host wrapper runs this
+    compiled and hands the two small arrays to :func:`plan_bounded_route`.
+    """
+    T, N = owner.shape
+    D = cfg.shards
+    onehot = (owner.astype(jnp.int32)[:, :, None]
+              == jnp.arange(D, dtype=jnp.int32)).astype(jnp.int32)
+    loads = onehot.sum(axis=1)                              # [T, D]
+    pair = onehot.reshape(T, D, N // D, D).sum(axis=(0, 2))  # [D, D]
+    return loads, pair
+
+
+def plan_bounded_route(cfg: HashTableConfig, owner=None,
+                       slack: Optional[int] = None,
+                       tile: Optional[int] = None,
+                       loads=None, pair=None) -> BoundedRoutePlan:
+    """Pass 1 of the bounded router: measure the trace, pick static shapes.
+
+    ``owner`` is the GLOBAL ``[T, N]`` owner-shard matrix (``shard_owner`` of
+    the H3 buckets; ``N = shards * n_local``, lanes origin-major) — or pass
+    the precomputed ``loads [T, D]`` / ``pair [D, D]`` histograms from a
+    jitted :func:`route_load_pass` (plus ``n_local`` inferred from pair use)
+    to keep the hot path off the eager interpreter.  Pure numpy on the host
+    from there — the caller reads the plan's static fields and dispatches
+    the jitted exchange specialized on them.  ``slack``/``tile`` default to
+    ``cfg.routed_slack`` / ``cfg.routed_lane_tile``.
+    """
+    import numpy as np
+
+    D = cfg.shards
+    slack = cfg.routed_slack if slack is None else slack
+    tile = cfg.routed_lane_tile if tile is None else tile
+    if loads is None or pair is None:
+        owner = np.asarray(owner)
+        T, N = owner.shape
+        n = N // D
+        if T == 0:
+            w = min(_round_up_lanes(1, tile), D * n)
+            return BoundedRoutePlan(pair_capacity=min(tile, n),
+                                    routed_width=w, routed_steps=0, steps=0,
+                                    n_local=n, shards=D, max_owner_load=0,
+                                    mean_owner_load=0.0, carried_lanes=0,
+                                    total_lanes=0)
+        loads = np.zeros((T, D), np.int64)      # lanes per (step, owner)
+        for t in range(T):
+            loads[t] = np.bincount(owner[t], minlength=D)
+        pair = np.zeros((D, D), np.int64)       # whole-trace (origin, owner)
+        for o in range(D):
+            pair[o] = np.bincount(owner[:, o * n:(o + 1) * n].ravel(),
+                                  minlength=D)
+    else:
+        loads, pair = np.asarray(loads), np.asarray(pair)
+        T = loads.shape[0]
+        n = int(pair.sum()) // max(T * D, 1) if T else 1
+        if T == 0:
+            w = min(_round_up_lanes(1, tile), D * n)
+            return BoundedRoutePlan(pair_capacity=min(tile, n),
+                                    routed_width=w, routed_steps=0, steps=0,
+                                    n_local=n, shards=D, max_owner_load=0,
+                                    mean_owner_load=0.0, carried_lanes=0,
+                                    total_lanes=0)
+    max_load = int(loads.max())
+    nr = cfg.bounded_routed_width(max_load, n, slack=slack, tile=tile)
+    # pair capacity quantizes to power-of-two tile multiples (vs exact tile
+    # rounding) so fluctuating traffic mints O(log(n*T/tile)) jit
+    # specializations, not one per distinct load — the same move the prefix
+    # cache makes on its step count; the overshoot is dead send padding
+    q = min(_round_up_pow2_lanes(int(pair.max()), tile), n * T)
+    # exact FIFO sim per owner: drain rows needed + carried-lane count under
+    # service rate nr per row — skipped entirely when the width covers the
+    # max load (the auto-mode hot path: nothing can ever queue)
+    carried, extra = 0, 0
+    for d in range(D if nr < max_load else 0):
+        tot = int(loads[:, d].sum())
+        if tot == 0:
+            continue
+        arr = np.repeat(np.arange(T), loads[:, d])
+        cum, backlog, t_row = [], 0, 0
+        while t_row < T or backlog > 0:
+            pending = backlog + (int(loads[t_row, d]) if t_row < T else 0)
+            served = min(pending, nr)
+            backlog = pending - served
+            cum.append((cum[-1] if cum else 0) + served)
+            t_row += 1
+        dep = np.searchsorted(np.asarray(cum), np.arange(tot), side="right")
+        carried += int((dep > arr).sum())
+        extra = max(extra, t_row - T)
+    if extra:       # drain rows quantize to powers of two too (shape churn)
+        extra = 1 << (extra - 1).bit_length()
+    return BoundedRoutePlan(pair_capacity=q, routed_width=nr,
+                            routed_steps=T + extra, steps=T, n_local=n,
+                            shards=D, max_owner_load=max_load,
+                            mean_owner_load=float(loads.mean()),
+                            carried_lanes=carried,
+                            total_lanes=int(loads.sum()))
+
+
+def _bounded_send_slots(owner: jnp.ndarray, shards: int, pair_capacity: int):
+    """Origin-side FIFO packing: each lane's slot in the ``[D * Q]`` send
+    buffer — pair queues are contiguous ``Q``-slot blocks, filled in program
+    order ((step, lane)-major).  Lanes past a full queue get the
+    out-of-range sentinel ``D * Q`` (never happens when ``Q`` comes from
+    :func:`plan_bounded_route`).  Pure; property-tested without collectives.
+    """
+    T, n = owner.shape
+    D, Q = shards, pair_capacity
+    ow = owner.reshape(T * n).astype(jnp.int32)
+    onehot = (ow[:, None] == jnp.arange(D, dtype=jnp.int32)).astype(jnp.int32)
+    csum = jnp.cumsum(onehot, axis=0)                       # [T*n, D]
+    q = jnp.take_along_axis(csum, ow[:, None], axis=1)[:, 0] - 1
+    slot = jnp.where(q < Q, ow * Q + q, D * Q)
+    return slot.reshape(T, n)
+
+
+def _bounded_recv_binning(tags: jnp.ndarray, shards: int, pair_capacity: int,
+                          steps: int, routed_steps: int, routed_width: int):
+    """Owner-side re-binning: map each received FIFO slot to its routed
+    ``(row, lane)`` cell.
+
+    ``tags`` ``[D * Q]``: step+1 of the lane in each slot (0 == empty); slot
+    ``o * Q + j`` is position ``j`` of origin ``o``'s queue, which is packed
+    in program order.  Arrival order per owner is (step, origin, lane) ==
+    program order; the owner FIFO serves ``Nr`` lanes per row, so a lane's
+    row is its own step whenever ``Nr`` covers that step's load, and later
+    rows (carry-over) otherwise.  Returns ``(idx, origin)``: ``idx`` is each
+    slot's flat index into the ``[T' * Nr]`` routed stream (``T' * Nr`` ==
+    dead/unserved sentinel), ``origin`` the slot's origin device.  Pure;
+    property-tested without collectives.
+    """
+    D, Q, T, Tr, Nr = (shards, pair_capacity, steps, routed_steps,
+                       routed_width)
+    tagw = tags.astype(jnp.int32)
+    live = tagw > 0
+    t_arr = jnp.clip(tagw - 1, 0, max(T - 1, 0))
+    slot_ids = jnp.arange(D * Q, dtype=jnp.int32)
+    o_arr, j_arr = slot_ids // Q, slot_ids % Q
+    onehot = (live[:, None]
+              & (t_arr[:, None] == jnp.arange(T, dtype=jnp.int32))
+              ).astype(jnp.int32)                           # [D*Q, T]
+    cnt = onehot.reshape(D, Q, T).sum(axis=1)               # [D, T]
+    start = jnp.cumsum(cnt, axis=1) - cnt      # origin's arrivals before t
+    rank = j_arr - start[o_arr, t_arr]
+    row_before = jnp.cumsum(cnt, axis=0) - cnt  # earlier origins' lanes at t
+    rowpos = row_before[o_arr, t_arr] + rank
+    arrivals = cnt.sum(axis=0)                              # [T]
+    g = (jnp.cumsum(arrivals) - arrivals)[t_arr] + rowpos   # FIFO queue index
+    a_pad = jnp.concatenate(
+        [arrivals, jnp.zeros((Tr - T,), arrivals.dtype)]) if Tr > T \
+        else arrivals[:Tr]
+
+    def serve(backlog, a):
+        pending = backlog + a
+        s = jnp.minimum(pending, Nr)
+        return pending - s, s
+
+    _, served = jax.lax.scan(serve, jnp.asarray(0, arrivals.dtype), a_pad)
+    cum = jnp.cumsum(served)                                # [Tr] inclusive
+    dep = jnp.sum(cum[None, :] <= g[:, None], axis=1)       # service row
+    pos = g - (cum - served)[jnp.clip(dep, 0, max(Tr - 1, 0))]
+    ok_slot = live & (dep < Tr)
+    idx = jnp.where(ok_slot, dep * Nr + pos, Tr * Nr)
+    return idx, o_arr
+
+
+def route_stream_bounded(cfg: HashTableConfig, axis: str, bucket: jnp.ndarray,
+                         *arrays: jnp.ndarray, pair_capacity: int,
+                         routed_width: int, routed_steps: int):
+    """Pass 2 of the bounded router (shard_map collective): exchange query
+    payloads with their owner shards through capacity-``Q`` pair FIFOs and
+    re-bin them into ``[T', Nr]`` owner step rows.
+
+    Same contract as :func:`route_stream` with the widths shrunk to the
+    measured trace (static args from :func:`plan_bounded_route`).  Returns
+    ``(routed_arrays, pe, carry)``: routed arrays ``[T', Nr(, W)]``, ``pe``
+    ``[T', Nr]`` — the ORIGIN device of every routed lane (``D`` on dead
+    padding, i.e. search-only, so padding can never write) — and the opaque
+    ``carry`` to hand :func:`inverse_route_bounded`.
+    """
+    D = jax.lax.psum(1, axis)
+    T, n = bucket.shape
+    Q, Nr, Tr = pair_capacity, routed_width, routed_steps
+    owner = shard_owner(cfg, bucket)                        # [T, n]
+    packed, meta = _pack_u32(arrays)                        # [T, n, W]
+    W = packed.shape[-1]
+    slot = _bounded_send_slots(owner, D, Q)                 # [T, n]
+    tag = jnp.broadcast_to(
+        (jnp.arange(T, dtype=jnp.int32) + 1)[:, None, None], (T, n, 1)
+    ).astype(jnp.uint32)
+    payload = jnp.concatenate([tag, packed], axis=-1).reshape(T * n, W + 1)
+    send = jnp.zeros((D * Q, W + 1), jnp.uint32)
+    send = send.at[slot.reshape(T * n)].set(payload, mode="drop")
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                              tiled=True)                   # chunk o = o's FIFO
+    idx, origin = _bounded_recv_binning(recv[:, 0], D, Q, T, Tr, Nr)
+    routed = jnp.zeros((Tr * Nr, W), jnp.uint32)
+    routed = routed.at[idx].set(recv[:, 1:], mode="drop").reshape(Tr, Nr, W)
+    pe = jnp.full((Tr * Nr,), D, jnp.int32)
+    pe = pe.at[idx].set(origin, mode="drop").reshape(Tr, Nr)
+    return _unpack_u32(routed, meta), pe, (slot, idx)
+
+
+def inverse_route_bounded(axis: str, carry, *arrays: jnp.ndarray):
+    """Return ``[T', Nr]`` routed results to their origin lanes: gather each
+    received FIFO slot's result from its routed cell, one ``all_to_all``
+    back, gather by send slot.  The inverse of :func:`route_stream_bounded`
+    (``carry`` is its third output)."""
+    slot, idx = carry
+    packed, meta = _pack_u32(arrays)                        # [T', Nr, W]
+    tr, nr, w = packed.shape
+    flat = jnp.concatenate(
+        [packed.reshape(tr * nr, w), jnp.zeros((1, w), jnp.uint32)])
+    per_slot = flat[jnp.clip(idx, 0, tr * nr)]              # [D*Q, W]
+    back = jax.lax.all_to_all(per_slot, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    backp = jnp.concatenate([back, jnp.zeros((1, w), jnp.uint32)])
+    res = backp[jnp.clip(slot.reshape(-1), 0, back.shape[0])]
+    return _unpack_u32(res.reshape(slot.shape + (w,)), meta)

@@ -31,6 +31,8 @@ __all__ = [
     "TPUSpec", "V5E", "FPGA_U250", "FpgaSpec",
     "fpga_latency_ns", "fpga_throughput_mops", "table_step_bytes",
     "tpu_modeled_mops", "stream_commit_seconds", "stream_modeled_mops",
+    "routed_width_lanes", "routed_exchange_bytes",
+    "sharded_stream_modeled_mops",
 ]
 
 
@@ -160,3 +162,73 @@ def stream_modeled_mops(cfg: HashTableConfig, steps: int,
         sweep_s = 0.0
     step_s = lane_s + commit_s + sweep_s
     return n / step_s / 1e6
+
+
+# ---------------------------------------------------------------------------
+# Routed-width terms for the sharded distributed stream (DESIGN.md §2.2).
+# The skew-proof router fixes the per-owner routed width at D * n_local; the
+# capacity-bounded two-pass router shrinks it to the measured max
+# per-(step, owner) load rounded to cfg.routed_lane_tile (optionally capped
+# by cfg.routed_slack).  Owner-side lane work AND the all_to_all payload both
+# scale with that width, which is what BENCH_distributed.json's
+# --bounded/--skewproof A/B measures.
+# ---------------------------------------------------------------------------
+
+
+def routed_width_lanes(cfg: HashTableConfig, n_local: int,
+                       max_owner_load: int | None = None) -> int:
+    """Routed lanes per owner per step row.
+
+    ``cfg.router == "skewproof"`` (or no measured load): the data-agnostic
+    worst case ``D * n_local``.  ``"bounded"``: the measured max per-(step,
+    owner) load, rounded/clamped by ``cfg.bounded_routed_width`` — the same
+    code path ``engine.plan_bounded_route`` uses, so model and router
+    cannot drift.
+    """
+    if cfg.router == "skewproof" or max_owner_load is None:
+        return cfg.shards * n_local
+    return cfg.bounded_routed_width(max_owner_load, n_local)
+
+
+def routed_exchange_bytes(cfg: HashTableConfig, steps: int, n_local: int,
+                          routed_width: int | None = None) -> int:
+    """Per-device all_to_all payload of one routed stream (queries out +
+    results back), in bytes.  Skew-proof query slots carry (bucket, op word,
+    key, value); the bounded router (``routed_width`` given) adds the
+    step-tag word its FIFO re-binning rides on.  Result slots carry
+    (found, ok, value) either way.  Both directions scale with the routed
+    width — the bounded router's shrink is payload savings exactly as much
+    as owner-compute savings."""
+    bounded = routed_width is not None
+    width = routed_width if bounded else cfg.shards * n_local
+    q_words = (3 if bounded else 2) + cfg.key_words + cfg.val_words
+    r_words = 2 + cfg.val_words
+    return 4 * steps * width * (q_words + r_words)
+
+
+def sharded_stream_modeled_mops(cfg: HashTableConfig, steps: int,
+                                n_local: int,
+                                routed_width: int | None = None,
+                                routed_steps: int | None = None,
+                                nsq_fraction: float = 0.5,
+                                spec: TPUSpec = V5E) -> float:
+    """Roofline MOPS for the routed distributed stream across the mesh.
+
+    Three per-device terms: owner-side lane work (probe gather + encode at
+    VMEM bandwidth) over ``routed_steps x routed_width`` lanes, the
+    supersession-masked commit per routed row, and the two all_to_all hops
+    over one ICI link.  Aggregate queries are ``steps * D * n_local``; a
+    narrower routed width cuts the first two terms AND the exchange, which
+    is why the bounded router's shrink shows up as throughput, not just
+    buffer bytes."""
+    d = cfg.shards
+    width = d * n_local if routed_width is None else routed_width
+    rows = steps if routed_steps is None else routed_steps
+    entry_bytes = 4 * cfg.entry_words
+    gather = cfg.k * cfg.slots * entry_bytes
+    scatter = nsq_fraction * entry_bytes
+    lane_s = rows * width * (gather + scatter) / (spec.vmem_gbps * 1e9)
+    commit_s = rows * 2 * width * VECTOR_LANE_NS * 1e-9
+    ici_s = routed_exchange_bytes(cfg, steps, n_local, width) \
+        / (spec.ici_link_gbps * 1e9)
+    return steps * d * n_local / (lane_s + commit_s + ici_s) / 1e6

@@ -120,7 +120,10 @@ def xor_stream(bucket: jnp.ndarray, port: jnp.ndarray, legal: jnp.ndarray,
     non-search XOR encode + supersession-masked last-wins commit for a whole
     ``[T, N]`` stream in a single Pallas kernel, table VMEM-resident across
     steps (bucket-tiled when one replica exceeds the VMEM budget — pick
-    ``bucket_tiles`` with :func:`stream_bucket_tiles`).  ``bucket_base``
+    ``bucket_tiles`` with :func:`stream_bucket_tiles`).  ``port``/``legal``
+    may be ``[N]`` lane vectors or ``[T, N]`` per-step rows (the bounded
+    router re-bins routed lanes, so a slot's origin varies by step —
+    engine.route_stream_bounded).  ``bucket_base``
     (traced scalar) offsets a shard-local partition into the global bucket
     space; lanes outside the partition are inert.  ``binned`` selects the
     tile-binned dispatch when ``bucket_tiles > 1``: lanes stable-sorted by

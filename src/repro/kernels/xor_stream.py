@@ -171,8 +171,8 @@ def _xor_stream_kernel(bucket_ref, op_ref, port_ref, legal_ref, base_ref,
 
     bucket = bucket_ref[0].astype(jnp.int32)               # [N] GLOBAL index
     op = op_ref[0]                                         # [N]
-    port = port_ref[:].astype(jnp.int32)                   # [N]
-    legal = legal_ref[:] != 0                              # [N]
+    port = port_ref[0].astype(jnp.int32)                   # [N] (step t's row)
+    legal = legal_ref[0] != 0                              # [N]
     # partition-relative bucket: lanes outside [base, base + buckets) never
     # claim a tile, so they are inert (router pads / foreign shards)
     rel = bucket - base_ref[0]
@@ -397,7 +397,9 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
                       bin_passes: int = 1):
     """Stream T steps of N queries through one fused kernel.
 
-    bucket/ops ``[T, N]``; port/legal ``[N]``; qkeys ``[T, N, Wk]``;
+    bucket/ops ``[T, N]``; port/legal ``[N]`` (step-invariant lanes) or
+    ``[T, N]`` (per-step lanes — the bounded router re-bins lanes so a
+    routed slot's origin varies by step); qkeys ``[T, N, Wk]``;
     qvals ``[T, N, Wv]``; store_* one replica ``[k, B, S, W*]``.  Returns
     ``(store_keys', store_vals', store_valid', found[T, N] bool,
     ok[T, N] bool, value[T, N, Wv])``.  ``bucket_tiles`` must be a
@@ -426,6 +428,10 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
         return (store_keys, store_vals, store_valid,
                 jnp.zeros((0, N), jnp.bool_), jnp.zeros((0, N), jnp.bool_),
                 jnp.zeros((0, N, Wv), jnp.uint32))
+    if port.ndim == 1:
+        port = jnp.broadcast_to(port[None], (T, N))
+    if legal.ndim == 1:
+        legal = jnp.broadcast_to(legal[None], (T, N))
 
     if binned and BT > 1:
         # ---- XLA-side pre-pass: stable-sort each step's lanes by tile ----
@@ -442,11 +448,11 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
         offs = jnp.concatenate([jnp.zeros((T, 1), jnp.int32), offs],
                                axis=1).T                        # [BT+1, T]
         opw = (ops.astype(jnp.uint32) & 0xFF) \
-            | (port.astype(jnp.uint32)[None, :] << 8) \
-            | (legal.astype(jnp.uint32)[None, :] << 16)
+            | (port.astype(jnp.uint32) << 8) \
+            | (legal.astype(jnp.uint32) << 16)
         q = jnp.concatenate([
             jnp.where(in_part, rel, 0).astype(jnp.uint32)[..., None],
-            jnp.broadcast_to(opw, (T, N))[..., None],
+            opw[..., None],
             qkeys.astype(jnp.uint32), qvals.astype(jnp.uint32)], axis=-1)
         q_s = jnp.take_along_axis(q, perm[..., None], axis=1)
 
@@ -492,7 +498,6 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
 
     grid = (BT, T)
     qspec2 = pl.BlockSpec((1, N), lambda bt, t: (t, 0))
-    lane1 = pl.BlockSpec((N,), lambda bt, t: (0,))
     base1 = pl.BlockSpec((1,), lambda bt, t: (0,))
     tile = lambda shape: pl.BlockSpec(
         (shape[0], Bt) + shape[2:],
@@ -519,8 +524,8 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
         in_specs=[
             qspec2,                                        # bucket
             qspec2,                                        # op
-            lane1,                                         # port
-            lane1,                                         # legal
+            qspec2,                                        # port (per-step row)
+            qspec2,                                        # legal
             base1,                                         # bucket_base
             pl.BlockSpec((1, N, Wk), lambda bt, t: (t, 0, 0)),
             pl.BlockSpec((1, N, Wv), lambda bt, t: (t, 0, 0)),

@@ -46,13 +46,18 @@ class ServeConfig:
     cache_shards: int = 1               # bucket-shard the prefix-cache page
                                         # table across this many devices
                                         # (PrefixCache(shards=); 1 == local)
+    cache_router: str = "bounded"       # sharded page-table exchange policy
+                                        # (PrefixCache(router=); DESIGN.md
+                                        # §2.2): "bounded" two-pass width or
+                                        # the "skewproof" worst-case width
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig):
         self.cfg, self.params, self.scfg = cfg, params, scfg
         self.prefix_cache = PrefixCache(block_tokens=scfg.block_tokens,
-                                        shards=scfg.cache_shards)
+                                        shards=scfg.cache_shards,
+                                        router=scfg.cache_router)
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * scfg.slots
         self.pos = np.zeros(scfg.slots, np.int32)

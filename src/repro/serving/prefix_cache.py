@@ -42,19 +42,24 @@ class PrefixCache:
     mesh (``core.distributed``): each device owns ``buckets/shards`` buckets
     and probes/commits ride the routed distributed stream, so the page table
     can exceed one device's memory.  Requires ``shards`` devices and
-    ``p % shards == 0`` (lanes split evenly over the mesh).
+    ``p % shards == 0`` (lanes split evenly over the mesh).  ``router``
+    picks the sharded exchange (DESIGN.md §2.2): the default ``"bounded"``
+    two-pass router shrinks the routed width to each batch's measured
+    per-owner load — admission/lookup batches are padded with NOP rows whose
+    zero keys all hash to one owner, exactly the mild skew the bounded
+    router absorbs without reserving skew-proof worst-case lanes.
     """
 
     def __init__(self, num_pages: int = 4096, block_tokens: int = 16,
                  p: int = 8, seed: int = 0, backend: str = "auto",
-                 shards: int = 1):
+                 shards: int = 1, router: str = "bounded"):
         buckets = 1 << max(int(np.ceil(np.log2(max(num_pages, 2) * 2))), 4)
         if p % shards:
             raise ValueError(f"need p % shards == 0, got p={p} shards={shards}")
         self.cfg = HashTableConfig(
             p=p, k=p, buckets=buckets, slots=4, key_words=2, val_words=2,
             replicate_reads=False, stagger_slots=True, backend=backend,
-            shards=shards)
+            shards=shards, router=router)
         # probe+commit through the pluggable query engine (DESIGN.md §3/§4);
         # multi-step batches ride the stream seam — the fused xor_stream
         # kernel on pallas-capable backends, the scanned oracle on jnp.

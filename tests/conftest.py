@@ -1,15 +1,117 @@
 """Shared test fixtures.  NOTE: no XLA_FLAGS here by design — smoke tests and
 benches must see the real single-CPU device; only launch/dryrun.py forces 512
-placeholder devices (and tests needing multiple devices spawn subprocesses)."""
+placeholder devices (and tests needing multiple devices spawn subprocesses).
+
+Also the shared TRACE GENERATORS (``TraceGen`` / the ``trace_gen`` fixture):
+uniform, zipf-skewed, all-keys-one-shard, duplicate-target-heavy and
+op-mix-parametrized S/I/U/D traces — formerly copy-pasted ad hoc across
+test_distributed_sharded / test_stream_fused / test_engine_backends.
+Subprocess-based multi-device tests import this module directly
+(``sys.path.insert(0, "tests"); from conftest import TraceGen``), so keep it
+importable outside a pytest session.
+"""
 import numpy as np
 import pytest
-import jax
+
+try:
+    import jax
+except ImportError:          # pragma: no cover - jax is a hard dep elsewhere
+    jax = None
+
+# Op codes mirrored here so TraceGen stays importable without PYTHONPATH=src
+# (subprocess scripts set it, but keep the single source of truth honest).
+OP_NOP, OP_SEARCH, OP_INSERT, OP_DELETE = 0, 1, 2, 3
+
+#: the repo-wide default S/I/U/D mix (search-heavy, updates == re-inserts)
+DEFAULT_MIX = (0.5, 0.35, 0.15)
+
+
+class TraceGen:
+    """Deterministic S/I/U/D query-trace factory over a seeded numpy rng.
+
+    Flat generators return ``(op [n], keys [n, Wk], vals [n, Wv])`` numpy
+    arrays ready for ``schedule_queries``; ``stream_*`` variants return
+    ``[T, N]`` / ``[T, N, W]`` step tensors ready for ``run_stream`` /
+    ``make_distributed_stream``.  All keys are drawn from ``[1, key_space)``
+    (0 is the dead-lane sentinel everywhere in the repo).
+    """
+
+    def __init__(self, rng):
+        self.rng = rng
+
+    # ------------------------------------------------------------- flat [n]
+    def mixed(self, n, key_words=1, key_space=60, mix=DEFAULT_MIX,
+              val_words=1):
+        """Collision-heavy uniform random trace with a parametrized op mix
+        (search, insert, delete) — the repo's default stimulus."""
+        op = self.rng.choice([OP_SEARCH, OP_INSERT, OP_DELETE], size=n,
+                             p=list(mix)).astype(np.int32)
+        keys = np.zeros((n, key_words), np.uint32)
+        keys[:, 0] = self.rng.integers(1, key_space, size=n)
+        vals = self.rng.integers(1, 2 ** 32, size=(n, val_words),
+                                 dtype=np.uint32)
+        return op, keys, vals
+
+    def zipf(self, n, key_words=1, key_space=1 << 14, a=1.3, mix=DEFAULT_MIX,
+             val_words=1):
+        """Zipf-skewed key popularity (a hot head of keys — the partitioned
+        baseline's bad case and the router's mild-skew regime)."""
+        op = self.rng.choice([OP_SEARCH, OP_INSERT, OP_DELETE], size=n,
+                             p=list(mix)).astype(np.int32)
+        keys = np.zeros((n, key_words), np.uint32)
+        keys[:, 0] = (self.rng.zipf(a, size=n) % (key_space - 1)) + 1
+        vals = self.rng.integers(1, 2 ** 32, size=(n, val_words),
+                                 dtype=np.uint32)
+        return op, keys, vals
+
+    def duplicate_heavy(self, n, key_words=1, key_space=10, mix=None,
+                        val_words=1):
+        """Tiny key space -> heavy same-step duplicate (bucket, slot) write
+        targets, same-port and cross-port, inserts racing deletes (the
+        commit-conflict stimulus; insert-leaning mix by default)."""
+        return self.mixed(n, key_words, key_space,
+                          mix=mix or (0.25, 0.5, 0.25), val_words=val_words)
+
+    # ------------------------------------------------------- stream [T, N]
+    def stream_mixed(self, T, N, key_words=1, key_space=60, mix=DEFAULT_MIX,
+                     val_words=1):
+        op, keys, vals = self.mixed(T * N, key_words, key_space, mix,
+                                    val_words)
+        return (op.reshape(T, N), keys.reshape(T, N, key_words),
+                vals.reshape(T, N, val_words))
+
+    def stream_zipf(self, T, N, key_words=1, key_space=1 << 14, a=1.3,
+                    mix=DEFAULT_MIX, val_words=1):
+        op, keys, vals = self.zipf(T * N, key_words, key_space, a, mix,
+                                   val_words)
+        return (op.reshape(T, N), keys.reshape(T, N, key_words),
+                vals.reshape(T, N, val_words))
+
+    def one_shard_keys(self, cfg, q_masks, shard, n, key_space=1 << 14):
+        """``n`` distinct keys all owned by ``shard`` — the adversarial
+        all-keys-one-shard stimulus for the routing capacity argument.
+        Needs the live H3 params (``table.q_masks``)."""
+        import jax.numpy as jnp
+        from repro.core.engine import shard_owner
+        from repro.core.hashing import h3_hash
+        cand = np.zeros((key_space - 1, cfg.key_words), np.uint32)
+        cand[:, 0] = np.arange(1, key_space, dtype=np.uint32)
+        owner = np.asarray(shard_owner(cfg, h3_hash(jnp.array(cand), q_masks)))
+        sel = cand[owner == shard]
+        assert len(sel) >= n, "shard must own enough candidate keys"
+        return sel[self.rng.permutation(len(sel))[:n]]
 
 
 @pytest.fixture()
 def rng():
     # function-scoped: every test sees the same deterministic stream
     return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def trace_gen(rng):
+    """The shared trace-generator factory, bound to the seeded rng."""
+    return TraceGen(rng)
 
 
 @pytest.fixture()

@@ -12,9 +12,12 @@ import pytest
 
 BITEXACT = textwrap.dedent("""
     import dataclasses
+    import sys
     import numpy as np, jax, jax.numpy as jnp
     from repro.core import *
     from repro.core.distributed import *
+    sys.path.insert(0, "tests")
+    from conftest import TraceGen
 
     for D in (4, 8):
         cfg = HashTableConfig(p=D, k=max(D // 2, 1), buckets=256, slots=4,
@@ -31,17 +34,12 @@ BITEXACT = textwrap.dedent("""
         tab_r = init_distributed_table(cfg_rep, jax.random.key(1))
         stream_s = make_distributed_stream(mesh, cfg)
         stream_r = make_distributed_stream(mesh, cfg_rep)
-        rng = np.random.default_rng(D)
         T, nl = 6, 4
         N = D * nl
         # randomized S/I/U/D trace in a small key space (collisions, updates
-        # and deletes of live keys all occur)
-        ops = jnp.array(rng.choice([OP_SEARCH, OP_INSERT, OP_DELETE],
-                                   size=(T, N),
-                                   p=[0.5, 0.35, 0.15]).astype(np.int32))
-        keys = jnp.array(rng.integers(1, 48, size=(T, N, 1), dtype=np.uint32))
-        vals = jnp.array(rng.integers(1, 2 ** 32, size=(T, N, 1),
-                                      dtype=np.uint32))
+        # and deletes of live keys all occur) — the shared conftest generator
+        gen = TraceGen(np.random.default_rng(D))
+        ops, keys, vals = map(jnp.array, gen.stream_mixed(T, N, key_space=48))
         ts, rs = stream_s(tab_s, ops, keys, vals)
         tr, rr = stream_r(tab_r, ops, keys, vals)
         for nm in ('found', 'value', 'ok', 'bucket'):
@@ -64,10 +62,12 @@ BITEXACT = textwrap.dedent("""
 
 SKEW = textwrap.dedent("""
     import dataclasses
+    import sys
     import numpy as np, jax, jax.numpy as jnp
     from repro.core import *
     from repro.core.distributed import *
-    from repro.core.engine import shard_owner
+    sys.path.insert(0, "tests")
+    from conftest import TraceGen
 
     D, nl = 8, 4
     N = D * nl
@@ -78,12 +78,8 @@ SKEW = textwrap.dedent("""
     stream = make_distributed_stream(mesh, cfg)
     # adversarial skew: every key owned by ONE shard (id 5) — the routing
     # capacity argument (n slots per destination per origin) must absorb it
-    cand = np.arange(1, 1 << 14, dtype=np.uint32).reshape(-1, 1)
-    owner = np.asarray(shard_owner(cfg, h3_hash(jnp.array(cand),
-                                                tab.q_masks)))
-    sel = cand[owner == 5]
-    assert len(sel) >= N, 'picked shard must own enough candidate keys'
-    all_keys = sel[:N].reshape(N, 1)
+    gen = TraceGen(np.random.default_rng(0))
+    all_keys = gen.one_shard_keys(cfg, tab.q_masks, 5, N)
     vals = (all_keys + 17).astype(np.uint32)
     # step 0: EVERY lane inserts — only NSQ-capable origins (device < k) may
     # land theirs; step 1: every origin device searches the landed keys

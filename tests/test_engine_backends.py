@@ -14,16 +14,6 @@ from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
                         run_stream, schedule_queries)
 
 
-def _random_trace(rng, n, key_words, key_space=60):
-    """Collision-heavy random S/I/U/D trace (updates == re-inserts)."""
-    op = rng.choice([OP_SEARCH, OP_INSERT, OP_DELETE], size=n,
-                    p=[0.5, 0.35, 0.15]).astype(np.int32)
-    keys = np.zeros((n, key_words), np.uint32)
-    keys[:, 0] = rng.integers(1, key_space, size=n)
-    vals = rng.integers(1, 2 ** 32, size=(n, 1), dtype=np.uint32)
-    return op, keys, vals
-
-
 def _run_backend(cfg, backend, ops, keys, vals, seed=0):
     cfg = dataclasses.replace(cfg, backend=backend)
     tab = init_table(cfg, jax.random.key(seed))
@@ -35,11 +25,12 @@ def _run_backend(cfg, backend, ops, keys, vals, seed=0):
 @pytest.mark.parametrize("replicate", [True, False])
 @pytest.mark.parametrize("stagger", [False, True])
 @pytest.mark.parametrize("kw", [1, 2])
-def test_backends_bit_exact_on_random_trace(replicate, stagger, kw, rng):
+def test_backends_bit_exact_on_random_trace(replicate, stagger, kw,
+                                            trace_gen):
     cfg = HashTableConfig(p=4, k=2, buckets=128, slots=4, key_words=kw,
                           val_words=1, replicate_reads=replicate,
                           stagger_slots=stagger)
-    op, keys, vals = _random_trace(rng, 96, kw)
+    op, keys, vals = trace_gen.mixed(96, kw)
     ops, kk, vv = schedule_queries(op, keys, vals, cfg)
     tab_j, res_j = _run_backend(cfg, "jnp", ops, kk, vv)
     tab_p, res_p = _run_backend(cfg, "pallas", ops, kk, vv)
@@ -54,10 +45,10 @@ def test_backends_bit_exact_on_random_trace(replicate, stagger, kw, rng):
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas"])
-def test_engine_step_matches_apply_step(backend, rng):
+def test_engine_step_matches_apply_step(backend, trace_gen):
     """apply_step routes through the engine — engine.step is the same thing."""
     cfg = HashTableConfig(p=4, k=4, buckets=64, slots=4, backend=backend)
-    op, keys, vals = _random_trace(rng, 16, 1)
+    op, keys, vals = trace_gen.mixed(16, 1)
     ops, kk, vv = schedule_queries(op, keys, vals, cfg)
     tab = init_table(cfg, jax.random.key(0))
     tab_a, tab_b = tab, tab

@@ -7,9 +7,11 @@ import jax.numpy as jnp
 from repro.configs import ARCHS, get_config
 from repro.core import HashTableConfig
 from repro.core.perfmodel import (FPGA_U250, fpga_latency_ns,
-                                  fpga_throughput_mops, stream_commit_seconds,
-                                  stream_modeled_mops, table_step_bytes,
-                                  tpu_modeled_mops)
+                                  fpga_throughput_mops, routed_exchange_bytes,
+                                  routed_width_lanes,
+                                  sharded_stream_modeled_mops,
+                                  stream_commit_seconds, stream_modeled_mops,
+                                  table_step_bytes, tpu_modeled_mops)
 from repro.launch.shapes import LONG_OK, SHAPES, cells, input_specs
 
 
@@ -81,3 +83,30 @@ def test_stream_model_regime_ordering():
         stream_modeled_mops(cfg, steps=32, bucket_tiles=8, binned=False)
     assert stream_modeled_mops(cfg, steps=32, bucket_tiles=8) > \
         stream_modeled_mops(cfg, steps=2, bucket_tiles=8)
+
+
+def test_routed_width_term_orders_routers():
+    """The routed-width term (DESIGN.md §2.2): the bounded router's width
+    follows the measured load (tile-rounded, slack-capped, never wider than
+    skew-proof), shrinks the exchange payload proportionally, and a narrower
+    width models as higher sharded throughput."""
+    d, nl = 8, 8
+    cfg = HashTableConfig(p=d, k=d, buckets=1 << 12, slots=2, shards=d,
+                          queries_per_pe=nl, replicate_reads=False,
+                          router="bounded", routed_lane_tile=8)
+    skew = HashTableConfig(p=d, k=d, buckets=1 << 12, slots=2, shards=d,
+                           queries_per_pe=nl, replicate_reads=False)
+    assert routed_width_lanes(skew, nl) == d * nl
+    assert routed_width_lanes(cfg, nl, max_owner_load=13) == 16
+    assert routed_width_lanes(cfg, nl, max_owner_load=d * nl + 5) == d * nl
+    capped = HashTableConfig(p=d, k=d, buckets=1 << 12, slots=2, shards=d,
+                             queries_per_pe=nl, replicate_reads=False,
+                             router="bounded", routed_slack=12)
+    assert routed_width_lanes(capped, nl, max_owner_load=40) == 12
+    # skew-proof slots: bucket+op+key+val out, found+ok+val back (7 words);
+    # bounded slots add the FIFO step-tag word (8) but ride 4x fewer lanes
+    assert routed_exchange_bytes(cfg, 16, nl) == 4 * 16 * 64 * 7
+    assert routed_exchange_bytes(cfg, 16, nl, routed_width=16) == \
+        4 * 16 * 16 * 8
+    assert sharded_stream_modeled_mops(cfg, 16, nl, routed_width=16) > \
+        sharded_stream_modeled_mops(cfg, 16, nl)    # and models as throughput

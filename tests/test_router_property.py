@@ -1,0 +1,154 @@
+"""Hypothesis property suite for the capacity-bounded two-pass router's pure
+index math (engine._bounded_send_slots / engine._bounded_recv_binning /
+engine.plan_bounded_route).  The owner matrix is drawn unconstrained, so
+uniform, zipf-like and all-keys-one-shard skew all arise; slack caps are
+drawn too, so the carry-over path is exercised.  Invariants:
+
+  * no query loss, no duplication: every lane lands in exactly one routed
+    cell under the measured plan, for ARBITRARY skew (the skew-proof
+    guarantee the bounded router must keep);
+  * routed order == program order: each owner's routed stream, read in
+    (row, lane) order, is the global (step, origin, lane) sequence — the
+    invariant the sequential last-wins commit rides on;
+  * carry discipline: a lane is never served before its own step, is served
+    AT its own step whenever the routed width covers the max (step, owner)
+    load (the no-carry regime == bit-exact vs the oracle), and auto plans
+    (no slack cap) never carry;
+  * round-trip: gathering routed cells back through the saved (send slot,
+    routed index) mapping returns each lane's own payload —
+    ``inverse_route_bounded ∘ route_stream_bounded == id`` (the collective
+    version is covered on a live mesh by tests/test_router_conformance.py).
+
+Guarded on hypothesis like tests/test_stream_property.py."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import HashTableConfig  # noqa: E402
+from repro.core.engine import (_bounded_recv_binning,  # noqa: E402
+                               _bounded_send_slots, plan_bounded_route)
+
+
+@st.composite
+def routing_cases(draw):
+    D = draw(st.sampled_from([2, 4, 8]))
+    T = draw(st.integers(1, 5))
+    n = draw(st.integers(1, 5))
+    owner = draw(st.lists(st.integers(0, D - 1), min_size=T * D * n,
+                          max_size=T * D * n))
+    slack = draw(st.one_of(st.none(), st.integers(1, D * n)))
+    tile = draw(st.sampled_from([1, 2, 4]))
+    return D, T, n, np.asarray(owner, np.int32).reshape(T, D * n), slack, tile
+
+
+def _route_cells(D, T, n, owner, plan):
+    """Origin packing + emulated all_to_all + owner re-binning, composed in
+    numpy: {(owner, row, pos): (step, origin, lane)} for every query lane."""
+    Q, Nr, Tr = plan.pair_capacity, plan.routed_width, plan.routed_steps
+    slots = {o: np.asarray(_bounded_send_slots(
+        jnp.asarray(owner[:, o * n:(o + 1) * n]), D, Q)) for o in range(D)}
+    cells = {}
+    for d in range(D):
+        tags = np.zeros(D * Q, np.int32)
+        lane_of_slot = {}
+        for o in range(D):
+            for t in range(T):
+                for i in range(n):
+                    s = int(slots[o][t, i])
+                    if d * Q <= s < (d + 1) * Q:       # sent to owner d
+                        j = s - d * Q
+                        tags[o * Q + j] = t + 1
+                        lane_of_slot[o * Q + j] = (t, o, i)
+        idx, origin = map(np.asarray, _bounded_recv_binning(
+            jnp.asarray(tags), D, Q, T, Tr, Nr))
+        for sidx, lane in lane_of_slot.items():
+            row, pos = divmod(int(idx[sidx]), Nr)
+            assert int(origin[sidx]) == lane[1], "routed pe must be origin"
+            cell = (d, row, pos)
+            assert cell not in cells, "two lanes in one routed cell"
+            cells[cell] = lane
+    return cells
+
+
+@settings(max_examples=25, deadline=None)
+@given(case=routing_cases())
+def test_bounded_router_no_loss_program_order_and_carry_discipline(case):
+    D, T, n, owner, slack, tile = case
+    cfg = HashTableConfig(p=D, k=D, buckets=64, shards=D,
+                          routed_slack=slack, routed_lane_tile=tile)
+    plan = plan_bounded_route(cfg, owner)
+    assert plan.routed_width <= D * n          # never wider than skew-proof
+    assert plan.routed_steps >= T
+    if slack is None:                          # auto == no carry, T' == T
+        assert plan.carried_lanes == 0 and plan.routed_steps == T
+        assert plan.routed_width >= plan.max_owner_load
+    cells = _route_cells(D, T, n, owner, plan)
+    # no loss, no duplication: a bijection lanes <-> routed cells
+    assert len(cells) == T * D * n
+    assert set(cells.values()) == {(t, o, i) for t in range(T)
+                                   for o in range(D) for i in range(n)}
+    carried = 0
+    for d in range(D):
+        seq = sorted((c, lane) for c, lane in cells.items() if c[0] == d)
+        lanes = [lane for _, lane in seq]
+        # routed order (row, pos) == global program order (step, origin, lane)
+        assert lanes == sorted(lanes)
+        for (_, row, pos), (t, _, _) in seq:
+            assert row >= t, "a lane must never be served before its step"
+            assert pos < plan.routed_width and row < plan.routed_steps
+            carried += row > t
+    assert carried == plan.carried_lanes       # the plan's carry accounting
+    if plan.routed_width >= plan.max_owner_load:
+        assert carried == 0                    # width covers load -> no carry
+
+
+@settings(max_examples=15, deadline=None)
+@given(case=routing_cases())
+def test_bounded_router_round_trip_identity(case):
+    """inverse ∘ route == id on the index level: pushing a unique payload per
+    lane through (send slot -> routed cell -> gather back) returns it."""
+    D, T, n, owner, slack, tile = case
+    cfg = HashTableConfig(p=D, k=D, buckets=64, shards=D,
+                          routed_slack=slack, routed_lane_tile=tile)
+    plan = plan_bounded_route(cfg, owner)
+    cells = _route_cells(D, T, n, owner, plan)
+    payload = {(t, o, i): t * D * n + o * n + i for t in range(T)
+               for o in range(D) for i in range(n)}
+    routed_payload = {c: payload[lane] for c, lane in cells.items()}
+    # the inverse gather: lane -> its cell -> the value stored there
+    inv = {lane: routed_payload[c] for c, lane in cells.items()}
+    assert inv == payload
+
+
+def test_plan_all_one_shard_recovers_skewproof_shapes():
+    """The adversarial all-keys-one-shard trace: the measured plan must grow
+    back to the skew-proof width/capacity (no shrink is safe)."""
+    D, T, n = 4, 3, 4
+    cfg = HashTableConfig(p=D, k=D, buckets=64, shards=D, routed_lane_tile=4)
+    owner = np.full((T, D * n), 2, np.int32)
+    plan = plan_bounded_route(cfg, owner)
+    assert plan.routed_width == D * n          # max load == every lane
+    assert plan.pair_capacity == n * T         # whole-trace pair queue
+    assert plan.carried_lanes == 0 and plan.routed_steps == T
+    assert plan.width_ratio == 1.0
+
+
+def test_plan_slack_cap_adds_drain_rows_not_drops():
+    """A binding static cap serves everything late rather than dropping it:
+    FIFO carry extends the routed rows until each owner drains."""
+    D, T, n = 2, 2, 4
+    cfg = HashTableConfig(p=D, k=D, buckets=64, shards=D, routed_lane_tile=1)
+    owner = np.zeros((T, D * n), np.int32)     # every lane -> owner 0
+    plan = plan_bounded_route(cfg, owner, slack=2)
+    assert plan.routed_width == 2
+    # 16 lanes at 2/row -> 8 rows; arrivals end at row 1 -> 6 drain rows,
+    # quantized up to the next power of two (jit-shape churn control)
+    assert plan.routed_steps == T + 8
+    # only the first Nr lanes of step 0 are on time; the backlog never clears
+    # before step 1 arrives, so every other lane is carried
+    assert plan.carried_lanes == (T * D * n) - 2
+    cells = _route_cells(D, T, n, owner, plan)
+    assert len(cells) == T * D * n             # nothing dropped

@@ -17,15 +17,6 @@ from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
                         run_stream, schedule_queries)
 
 
-def _random_trace(rng, n, key_words, key_space=60):
-    op = rng.choice([OP_SEARCH, OP_INSERT, OP_DELETE], size=n,
-                    p=[0.5, 0.35, 0.15]).astype(np.int32)
-    keys = np.zeros((n, key_words), np.uint32)
-    keys[:, 0] = rng.integers(1, key_space, size=n)
-    vals = rng.integers(1, 2 ** 32, size=(n, 1), dtype=np.uint32)
-    return op, keys, vals
-
-
 def _assert_same(tab_a, res_a, tab_b, res_b, what=""):
     for name in ("found", "value", "ok", "bucket"):
         a = np.asarray(getattr(res_a, name))
@@ -50,11 +41,12 @@ def _oracle_and_fused(cfg, ops, kk, vv, seed=0, binned=None):
 @pytest.mark.parametrize("replicate", [True, False])
 @pytest.mark.parametrize("stagger", [False, True])
 @pytest.mark.parametrize("kw", [1, 2])
-def test_fused_stream_bit_exact_on_random_trace(replicate, stagger, kw, rng):
+def test_fused_stream_bit_exact_on_random_trace(replicate, stagger, kw,
+                                                trace_gen):
     cfg = HashTableConfig(p=4, k=2, buckets=128, slots=4, key_words=kw,
                           val_words=1, replicate_reads=replicate,
                           stagger_slots=stagger)
-    op, keys, vals = _random_trace(rng, 128, kw)
+    op, keys, vals = trace_gen.mixed(128, kw)
     ops, kk, vv = schedule_queries(op, keys, vals, cfg)
     (tab_j, res_j), (tab_f, res_f) = _oracle_and_fused(cfg, ops, kk, vv)
     _assert_same(tab_j, res_j, tab_f, res_f,
@@ -63,7 +55,7 @@ def test_fused_stream_bit_exact_on_random_trace(replicate, stagger, kw, rng):
 
 @pytest.mark.parametrize("binned", [True, False])
 @pytest.mark.parametrize("stagger", [False, True])
-def test_fused_stream_bucket_blocked_bit_exact(stagger, binned, rng,
+def test_fused_stream_bucket_blocked_bit_exact(stagger, binned, trace_gen,
                                                monkeypatch):
     """Tables above the VMEM budget run the bucket-blocked kernel — the
     tile-binned dispatch (multi-pass sweep: the shrunken budget makes
@@ -71,7 +63,7 @@ def test_fused_stream_bucket_blocked_bit_exact(stagger, binned, rng,
     bit-exact (the supersession-mask last-wins argument)."""
     cfg = HashTableConfig(p=4, k=2, buckets=128, slots=4,
                           replicate_reads=False, stagger_slots=stagger)
-    op, keys, vals = _random_trace(rng, 128, 1)
+    op, keys, vals = trace_gen.mixed(128, 1)
     ops, kk, vv = schedule_queries(op, keys, vals, cfg)
     tab = init_table(cfg, jax.random.key(0))
     rb = kops.replica_bytes(tab.store_keys, tab.store_vals, tab.store_valid)
@@ -84,11 +76,11 @@ def test_fused_stream_bucket_blocked_bit_exact(stagger, binned, rng,
                  f"blocked stagger={stagger} binned={binned}")
 
 
-def test_fused_stream_explicit_bucket_tiles(rng):
+def test_fused_stream_explicit_bucket_tiles(trace_gen):
     """bucket_tiles pinned through the seam (the jit-static knob the
     benchmarks use) is bit-exact with auto tiling and with the oracle."""
     cfg = HashTableConfig(p=4, k=2, buckets=64, slots=4, stagger_slots=True)
-    op, keys, vals = _random_trace(rng, 64, 1)
+    op, keys, vals = trace_gen.mixed(64, 1)
     ops, kk, vv = schedule_queries(op, keys, vals, cfg)
     tab = init_table(cfg, jax.random.key(0))
     oj = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv),
@@ -102,11 +94,11 @@ def test_fused_stream_explicit_bucket_tiles(rng):
                    fused=True, bucket_tiles=3)       # must divide buckets
 
 
-def test_fused_stream_matches_scanned_pallas(rng):
+def test_fused_stream_matches_scanned_pallas(trace_gen):
     """Third seam stage vs second: fused stream == scanned Pallas kernels."""
     cfg = HashTableConfig(p=4, k=4, buckets=64, slots=4, stagger_slots=True,
                           backend="pallas")
-    op, keys, vals = _random_trace(rng, 64, 1)
+    op, keys, vals = trace_gen.mixed(64, 1)
     ops, kk, vv = schedule_queries(op, keys, vals, cfg)
     tab = init_table(cfg, jax.random.key(0))
     tab_s, res_s = run_stream(tab, jnp.array(ops), jnp.array(kk),
@@ -214,11 +206,11 @@ def test_fused_stream_insert_delete_race(layout, monkeypatch):
     assert int(np.asarray(res_f.value)[5, 0, 0]) == 999
 
 
-def test_stream_backend_dispatch(rng):
+def test_stream_backend_dispatch(trace_gen):
     """fused=None routes by backend: jnp -> scan, pallas -> fused kernel;
     all three entries agree with apply_step iterated by hand."""
     cfg = HashTableConfig(p=4, k=4, buckets=64, slots=4)
-    op, keys, vals = _random_trace(rng, 32, 1)
+    op, keys, vals = trace_gen.mixed(32, 1)
     ops, kk, vv = schedule_queries(op, keys, vals, cfg)
     tab = init_table(cfg, jax.random.key(0))
     outs = {}
@@ -285,7 +277,7 @@ def test_stream_bucket_tiles_power_of_two(monkeypatch):
     assert kops.stream_bucket_tiles(*args) == cfg.buckets
 
 
-def test_run_stream_local_partitions_merge_to_oracle(rng, monkeypatch):
+def test_run_stream_local_partitions_merge_to_oracle(trace_gen, monkeypatch):
     """The shard-local stream (engine.run_stream_local): manually partition a
     table's bucket axis, run the SAME global-bucket stream against every
     partition with its bucket-base offset (fused kernel — unblocked, binned
@@ -298,7 +290,7 @@ def test_run_stream_local_partitions_merge_to_oracle(rng, monkeypatch):
     cfg = HashTableConfig(p=4, k=2, buckets=64, slots=4,
                           replicate_reads=False, stagger_slots=True)
     scfg = dataclasses.replace(cfg, shards=4)
-    op, keys, vals = _random_trace(rng, 64, 1)
+    op, keys, vals = trace_gen.mixed(64, 1)
     ops, kk, vv = schedule_queries(op, keys, vals, cfg)
     tab = init_table(cfg, jax.random.key(0))
     otab, ores = run_stream(tab, jnp.array(ops), jnp.array(kk), jnp.array(vv),
