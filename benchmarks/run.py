@@ -13,7 +13,8 @@ def main() -> None:
     from benchmarks import (backend_compare, distributed_throughput,
                             fig4_memory, fig5_throughput, fig6_capacity,
                             fig7_nsq_ratio, fig10_latency, ht_hillclimb,
-                            stream_throughput, table12_resources, table3_sota)
+                            serve_latency, stream_throughput,
+                            table12_resources, table3_sota)
     from benchmarks import roofline
     mods = [("fig4", fig4_memory), ("fig5", fig5_throughput),
             ("fig6", fig6_capacity), ("fig7", fig7_nsq_ratio),
@@ -22,6 +23,7 @@ def main() -> None:
             ("backend_compare", backend_compare),
             ("stream_throughput", stream_throughput),
             ("distributed_throughput", distributed_throughput),
+            ("serve_latency", serve_latency),
             ("roofline", roofline)]
     failures = 0
     for name, mod in mods:

@@ -1,0 +1,267 @@
+"""Continuous-batching serve-loop latency/throughput (fig10-style, table as a
+service): multi-user zipf session trace through ``serving.TableServer`` over
+the bounded-router distributed stream.
+
+Three modes run the IDENTICAL request sequence against a fresh table each
+measured iteration (manual round-robin best-of-N — the ``bench_group``
+discipline, inlined because each run owns a stateful server):
+
+  oneshot        the pre-serve-loop baseline (PrefixCache._run's discipline
+                 before this PR): each request is padded to its OWN
+                 ``[Tr, N]`` batch (Tr = pow2-rounded steps) and one-shot
+                 through the stock bounded wrapper — a per-request jitted
+                 measure pass + blocking device_get + fresh
+                 ``plan_bounded_route``, plus per-request NOP padding and
+                 one dispatch per request no matter how small it is
+  cached_single  the TableServer admission loop: arrivals coalesce into
+                 full fixed-shape slabs (sub-slab requests share
+                 dispatches), the LRU plan cache turns per-slab planning
+                 into a host histogram + coverage probe; one slab in
+                 flight at a time
+  cached_double  plan cache + double-buffered dispatch: slab k+1 is packed,
+                 measured and planned on the host while slab k streams on
+                 the device (the two-deep in-flight window)
+
+The trace is a multi-user session mix: each user draws zipf-skewed keys
+(hot head shared across users -> steady plan-cache hits) with a mixed
+S/I/U/D op stream (re-inserting a live key is the paper's insert/update
+fusion).  Full mode draws from ``key_space = 1 << 21`` (millions of
+distinct keys, table spilling the smoke shapes); ``--smoke`` shrinks
+everything to the CI harness check.
+
+Per-mode results: best-of-N MOPS over live (non-padding) lanes, p50/p99
+submit->retire request latency from the best iteration, plan-cache stats
+and pad fraction.  Emits ``BENCH_serve.json`` (figure fig10_latency) with
+the cached/oneshot and double/single A/B ratios in ``derived``;
+``benchmarks/roofline.py`` re-derives every row from
+``perfmodel.serve_loop_modeled``.  Re-execs in a subprocess with forced
+fake devices (the distributed_throughput convention) so the driver keeps
+its single-device view.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+D_FULL, NL_FULL, BUCKETS_FULL, SLAB_FULL = 4, 8, 1 << 13, 8
+USERS_FULL, REQS_FULL, LANES_FULL, KEYS_FULL, ITERS_FULL = 8, 48, 96, 1 << 21, 5
+D_SMOKE, NL_SMOKE, BUCKETS_SMOKE, SLAB_SMOKE = 2, 2, 1 << 8, 4
+USERS_SMOKE, REQS_SMOKE, LANES_SMOKE, KEYS_SMOKE = 2, 24, 5, 1 << 10
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _session_trace(cfg, users, requests, lanes, key_space, seed=0):
+    """Multi-user zipf sessions: ``requests`` flat (op, keys, vals) request
+    tuples, round-robin over ``users`` seeded generators so each user's hot
+    head recurs across their session's requests."""
+    import numpy as np
+    sys.path.insert(0, os.path.join(_ROOT, "tests"))
+    from conftest import TraceGen
+    gens = [TraceGen(np.random.default_rng(seed + u)) for u in range(users)]
+    out = []
+    for i in range(requests):
+        g = gens[i % users]
+        op, keys, vals = g.zipf(lanes, key_words=cfg.key_words,
+                                key_space=key_space,
+                                val_words=cfg.val_words)
+        out.append((op, keys, vals))
+    return out
+
+
+def _oneshot_once(cfg, mesh, stream, trace):
+    """The pre-serve-loop baseline: one bounded-wrapper call per request,
+    each padded to its own pow2-rounded ``[Tr, N]`` batch (the
+    PrefixCache._run convention before the plan cache).  Returns
+    (elapsed_s, latencies_s, live_lanes, pad_lanes)."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.distributed import init_distributed_table
+
+    table = init_distributed_table(cfg, jax.random.key(0), mesh)
+    jax.block_until_ready(table.store_keys)
+    N = cfg.queries_per_step
+    live = pad = 0
+    lats = []
+    t0 = time.perf_counter()
+    for op, keys, vals in trace:
+        n = len(op)
+        Tr = -(-n // N)
+        Tr = 1 << (Tr - 1).bit_length()
+        op_t = np.zeros(Tr * N, np.int32); op_t[:n] = op
+        kk_t = np.zeros((Tr * N, cfg.key_words), np.uint32); kk_t[:n] = keys
+        vv_t = np.zeros((Tr * N, cfg.val_words), np.uint32); vv_t[:n] = vals
+        table, res = stream(table, jnp.asarray(op_t.reshape(Tr, N)),
+                            jnp.asarray(kk_t.reshape(Tr, N, -1)),
+                            jnp.asarray(vv_t.reshape(Tr, N, -1)))
+        jax.block_until_ready(res.found)
+        lats.append(time.perf_counter() - t0)
+        live += n
+        pad += Tr * N - n
+    return time.perf_counter() - t0, lats, live, pad
+
+
+def _serve_once(cfg, mesh, stream, scfg, trace):
+    """One fresh-table pass of the whole trace through a TableServer.
+    Returns (elapsed_s, latencies_s, server)."""
+    import jax
+
+    from repro.core.distributed import init_distributed_table
+    from repro.serving import TableServer
+
+    table = init_distributed_table(cfg, jax.random.key(0), mesh)
+    jax.block_until_ready(table.store_keys)
+    srv = TableServer(cfg, table, stream, scfg)
+    t0 = time.perf_counter()
+    reqs = [srv.submit(op, keys, vals) for op, keys, vals in trace]
+    srv.run()
+    elapsed = time.perf_counter() - t0
+    assert all(r.done for r in reqs)
+    return elapsed, [r.latency_s for r in reqs], srv
+
+
+def _sweep(smoke: bool) -> None:
+    import numpy as np
+    import jax
+
+    from benchmarks.common import row
+    from repro.core import HashTableConfig
+    from repro.core.distributed import make_distributed_stream, make_ht_mesh
+    from repro.serving import ServeConfig
+
+    D, nl, buckets, slab = ((D_SMOKE, NL_SMOKE, BUCKETS_SMOKE, SLAB_SMOKE)
+                            if smoke else
+                            (D_FULL, NL_FULL, BUCKETS_FULL, SLAB_FULL))
+    users, requests, lanes, key_space = (
+        (USERS_SMOKE, REQS_SMOKE, LANES_SMOKE, KEYS_SMOKE) if smoke
+        else (USERS_FULL, REQS_FULL, LANES_FULL, KEYS_FULL))
+    iters = 9 if smoke else ITERS_FULL
+    cfg = HashTableConfig(p=D, k=D, buckets=buckets, slots=2,
+                          queries_per_pe=nl, replicate_reads=False,
+                          stagger_slots=True, shards=D, router="bounded")
+    mesh = make_ht_mesh(D)
+    stream = make_distributed_stream(mesh, cfg)
+    trace = _session_trace(cfg, users, requests, lanes, key_space)
+
+    scfgs = {
+        "cached_single": ServeConfig(slab_steps=slab,
+                                     serve_double_buffer=False),
+        # auto: the two-deep window engages when the host has a spare
+        # hardware thread; on a 1-CPU host it degrades to synchronous
+        # dispatch (the row records the effective window)
+        "cached_double": ServeConfig(slab_steps=slab,
+                                     serve_double_buffer=None),
+    }
+
+    def run_mode(m):
+        if m == "oneshot":
+            elapsed, lats, live, pad = _oneshot_once(cfg, mesh, stream,
+                                                     trace)
+            return elapsed, lats, {
+                "slabs": len(trace), "pad_fraction": pad / (live + pad),
+                "hit_rate": 0.0, "double_buffer": False, "window": 1,
+                "plan_cache": None, "live": live}
+        elapsed, lats, srv = _serve_once(cfg, mesh, stream, scfgs[m], trace)
+        pc = srv.plan_cache.stats() if srv.plan_cache else None
+        return elapsed, lats, {
+            "slabs": srv.slabs, "pad_fraction": srv.pad_fraction,
+            "hit_rate": pc["hit_rate"] if pc else 0.0,
+            "double_buffer": srv.window > 1, "window": srv.window,
+            "plan_cache": pc, "live": srv.live_lanes}
+
+    modes = ("oneshot", "cached_single", "cached_double")
+    # warmup: compile every mode's kernels before any timed round
+    for m in modes:
+        run_mode(m)
+    # paired best-of-N: every round runs each mode once, fresh table each
+    # time, so host-load drift hits all modes equally (bench_group inlined)
+    best = {m: (float("inf"), None, None) for m in modes}
+    for _ in range(iters):
+        for m in modes:
+            elapsed, lats, extra = run_mode(m)
+            if elapsed < best[m][0]:
+                best[m] = (elapsed, lats, extra)
+
+    results = {"figure": "fig10_latency",
+               "host_backend": jax.default_backend(),
+               "interpret_mode": jax.default_backend() != "tpu",
+               "mode": "smoke" if smoke else "full",
+               "p": D, "qpp": nl, "shards": D, "slab_steps": slab,
+               "table": dict(buckets=buckets, slots=2,
+                             replicate_reads=False, stagger_slots=True),
+               "users": users, "requests": requests,
+               "lanes_per_request": lanes, "key_space": key_space,
+               "iters": iters,
+               "stat": "paired best-of-N, fresh table per run",
+               "rows": []}
+    for m in modes:
+        elapsed, lats, extra = best[m]
+        results["rows"].append({
+            "mode": m,
+            "mops": extra["live"] / elapsed / 1e6,
+            "p50_ms": float(np.percentile(lats, 50) * 1e3),
+            "p99_ms": float(np.percentile(lats, 99) * 1e3),
+            "elapsed_s": elapsed,
+            "slabs": extra["slabs"],
+            "pad_fraction": extra["pad_fraction"],
+            "hit_rate": extra["hit_rate"],
+            "double_buffer": extra["double_buffer"],
+            "window": extra["window"],
+            "plan_cache": extra["plan_cache"],
+        })
+    by = {r["mode"]: r for r in results["rows"]}
+    results["derived"] = {
+        "cached_over_oneshot": by["cached_single"]["mops"]
+        / by["oneshot"]["mops"],
+        "double_over_single": by["cached_double"]["mops"]
+        / by["cached_single"]["mops"],
+        "cached_double_over_oneshot": by["cached_double"]["mops"]
+        / by["oneshot"]["mops"],
+    }
+    for r in results["rows"]:
+        row(f"serve_latency_{r['mode']}", r["elapsed_s"] * 1e6,
+            f"MOPS={r['mops']:.3f};p50_ms={r['p50_ms']:.3f};"
+            f"p99_ms={r['p99_ms']:.3f};hit_rate={r['hit_rate']:.3f};"
+            f"pad={r['pad_fraction']:.3f}")
+    row("serve_latency_derived", 0.0,
+        f"cached_over_oneshot={results['derived']['cached_over_oneshot']:.2f}"
+        f";double_over_single={results['derived']['double_over_single']:.2f}")
+    out = os.path.join(_ROOT, "BENCH_serve.json")
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 timed iter — CI harness check "
+                         "(still writes BENCH_serve.json)")
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.child:
+        _sweep(args.smoke)
+        return
+    # the sharded mesh needs >1 device; fork with forced fake devices so the
+    # driver (benchmarks/run.py) keeps its real single-device view
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_ROOT, "src"), _ROOT, env.get("PYTHONPATH", "")])
+    cmd = [sys.executable, os.path.abspath(__file__), "--child"]
+    if args.smoke:
+        cmd.append("--smoke")
+    r = subprocess.run(cmd, env=env, cwd=_ROOT)
+    if r.returncode:
+        raise RuntimeError(f"serve_latency child failed (exit {r.returncode})")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,7 +4,12 @@ HBM-resident regime.
 The fused xor_stream kernel amortizes one kernel launch over the whole
 ``[T, N]`` stream while the scanned path dispatches probe+commit per step —
 so the fused/scanned ratio should GROW with T (the FPGA pipeline analogy:
-longer bursts keep the PE array full).  The ``blocked`` rows pin
+longer bursts keep the PE array full).  The default ``fused`` column is the
+single-pass in-kernel scan (off-TPU ``binned`` defaults True, so even the
+unblocked ``bucket_tiles == 1`` kernel runs its T steps inside ONE grid
+iteration); ``fused_stepgrid`` pins ``binned=False`` — the per-step
+``grid=(1, T)`` layout the scan collapsed — as its paired A/B baseline.
+The ``blocked`` rows pin
 ``bucket_tiles=8`` so the same table runs the bucket-blocked kernel,
 exercising the HBM-resident code path — in BOTH dispatch layouts
 (DESIGN.md §3.1): ``blocked8`` is the tile-binned dispatch (sorted lanes,
@@ -54,8 +59,14 @@ def run_t(steps: int, qpp: int = QPP, iters: int = ITERS,
     fns = {
         "scanned": functools.partial(jfn, tab, ops_j, keys_j, vals_j,
                                      fused=False),
+        # the default unblocked kernel: off-TPU this is the single-pass
+        # in-kernel scan (grid == ONE iteration for all T steps)
         "fused": functools.partial(jfn, tab, ops_j, keys_j, vals_j,
                                    fused=True),
+        # per-step-grid A/B baseline at bucket_tiles == 1: same VMEM-resident
+        # aliased tiles, but grid=(1, T) re-enters the kernel once per step
+        "fused_stepgrid": functools.partial(jfn, tab, ops_j, keys_j, vals_j,
+                                            fused=True, binned=False),
     }
     # pinned bucket_tiles exercises the >VMEM blocked regime without
     # allocating a table beyond the budget (the knob is jit-static, so the
@@ -95,10 +106,15 @@ def main() -> None:
     for steps in ts:
         mops = run_t(steps, qpp=qpp, iters=iters, binned_variants=variants)
         scanned, fused = mops["scanned"], mops["fused"]
+        stepgrid = mops["fused_stepgrid"]
         rec = {"steps": steps, "mops_scanned": scanned, "mops_fused": fused,
-               "fused_over_scanned": fused / scanned}
+               "fused_over_scanned": fused / scanned,
+               "mops_fused_stepgrid": stepgrid,
+               "scan_over_stepgrid": fused / stepgrid}
         derived = (f"scanned_MOPS={scanned:.2f};fused_MOPS={fused:.2f};"
-                   f"fused_over_scanned={fused / scanned:.3f}")
+                   f"fused_over_scanned={fused / scanned:.3f};"
+                   f"stepgrid_MOPS={stepgrid:.2f};"
+                   f"scan_over_stepgrid={fused / stepgrid:.2f}")
         if "blocked8" in mops:
             rec["mops_fused_blocked8"] = mops["blocked8"]
             rec["blocked8_over_fused"] = mops["blocked8"] / fused

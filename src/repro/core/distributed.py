@@ -135,7 +135,12 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
     ``router``/``routed_slack`` override ``cfg.router``/``cfg.routed_slack``
     for the sharded mapping.  The skew-proof/replicated callables are jitted
     end to end; the bounded callable is a host wrapper (measurement pass +
-    dispatch to a jit specialized on the measured routed widths).
+    dispatch to a jit specialized on the measured routed widths) that also
+    accepts an explicit ``plan=`` (a :class:`BoundedRoutePlan`, skipping the
+    per-call measurement) and carries the staged entry points a serve loop
+    caches plans through: ``.measure`` (async pass 1), ``.plan`` (blocking
+    pass 1), ``.dispatch`` (pass 2 under an explicit plan), plus
+    ``.router``/``.cfg``/``.slack`` for feature detection (DESIGN.md §4).
     """
     from jax.experimental.shard_map import shard_map
     n_dev = mesh.shape[axis]
@@ -270,17 +275,34 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
 
         return shmap(local_stream)
 
-    def bounded_stream(table, ops, keys, vals):
-        T, N = ops.shape
-        if T == 0:
-            return table, StepResults(
-                found=jnp.zeros((0, N), jnp.bool_),
-                value=jnp.zeros((0, N, cfg.val_words), jnp.uint32),
-                ok=jnp.zeros((0, N), jnp.bool_),
-                bucket=jnp.zeros((0, N), jnp.uint32))
-        loads, pair = jax.device_get(_measure_loads(keys, table.q_masks))
-        plan = _engine.plan_bounded_route(cfg, slack=slack, loads=loads,
+    # plan-as-value entry points (DESIGN.md §4): a serve loop measures,
+    # plans and dispatches as separate stages so it can cache the frozen
+    # (hashable) BoundedRoutePlan across same-shaped slabs instead of
+    # re-deriving it inside the wrapper on every call.
+    def measure(table, keys):
+        """Pass 1, async: enqueue the jitted load histogram for ``keys``
+        (``[T, N, Wk]``) and return the ``(loads [T, D], pair [D, D])``
+        device arrays WITHOUT syncing — callers overlap the transfer with
+        in-flight stream work and ``device_get`` when they need values."""
+        return _measure_loads(keys, table.q_masks)
+
+    def make_plan(table, keys):
+        """Pass 1, blocking: measure ``keys`` and return the frozen
+        :class:`~repro.core.engine.BoundedRoutePlan`."""
+        loads, pair = jax.device_get(measure(table, keys))
+        return _engine.plan_bounded_route(cfg, slack=slack, loads=loads,
                                           pair=pair)
+
+    def dispatch(table, ops, keys, vals, plan):
+        """Pass 2: run the stream under an explicit ``plan`` (this wrapper's
+        own, or a cached one whose ``plan.covers(...)`` check passed —
+        caller's responsibility; an under-sized plan drops lanes)."""
+        T, N = ops.shape
+        if plan.steps != T or plan.shards != cfg.shards:
+            raise ValueError(f"plan measured [T={plan.steps}, D="
+                             f"{plan.shards}] but batch is [T={T}, D="
+                             f"{cfg.shards}] — plans only transfer between "
+                             f"equal-shaped streams")
         # nothing to shrink: the measured width IS the worst case (and the
         # bounded no-carry exchange is the skew-proof one minus padding), so
         # skip the re-binning and take the jit-internal skew-proof path
@@ -291,6 +313,24 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
                                plan.routed_steps)
         return inner(table, ops, keys, vals)
 
+    def bounded_stream(table, ops, keys, vals, plan=None):
+        T, N = ops.shape
+        if T == 0:
+            return table, StepResults(
+                found=jnp.zeros((0, N), jnp.bool_),
+                value=jnp.zeros((0, N, cfg.val_words), jnp.uint32),
+                ok=jnp.zeros((0, N), jnp.bool_),
+                bucket=jnp.zeros((0, N), jnp.uint32))
+        if plan is None:
+            plan = make_plan(table, keys)
+        return dispatch(table, ops, keys, vals, plan)
+
+    bounded_stream.router = "bounded"
+    bounded_stream.cfg = cfg
+    bounded_stream.slack = slack
+    bounded_stream.measure = measure
+    bounded_stream.plan = make_plan
+    bounded_stream.dispatch = dispatch
     return bounded_stream
 
 

@@ -826,6 +826,24 @@ class BoundedRoutePlan:
     def carry_rate(self) -> float:
         return self.carried_lanes / max(self.total_lanes, 1)
 
+    def covers(self, max_owner_load: int, max_pair_total: int) -> bool:
+        """True when this plan's static shapes can serve a batch with the
+        given measured maxima *bit-exactly* — the plan-cache safety check
+        (DESIGN.md §4).  Three conditions, all load-bearing:
+
+        * the plan itself must be carry-free (a carry plan's ``routed_steps``
+          drain rows are specific to the trace it was measured on);
+        * ``routed_width >= max_owner_load`` — every lane is served at its
+          own step, so nothing queues and last-wins order is the oracle's;
+        * ``pair_capacity >= max_pair_total`` — the send-side FIFOs never
+          fill (``_bounded_send_slots`` silently parks past-capacity lanes
+          at the sentinel slot, i.e. DROPS them; a cached plan must never
+          let a batch reach that).
+        """
+        return (self.carried_lanes == 0
+                and self.routed_width >= max_owner_load
+                and self.pair_capacity >= max_pair_total)
+
 
 def route_load_pass(cfg: HashTableConfig, owner: jnp.ndarray):
     """The in-graph half of the bounded router's pass 1: histogram the

@@ -33,6 +33,7 @@ __all__ = [
     "tpu_modeled_mops", "stream_commit_seconds", "stream_modeled_mops",
     "routed_width_lanes", "routed_exchange_bytes",
     "sharded_stream_modeled_mops",
+    "serve_plan_seconds", "serve_loop_modeled",
 ]
 
 
@@ -232,3 +233,87 @@ def sharded_stream_modeled_mops(cfg: HashTableConfig, steps: int,
     ici_s = routed_exchange_bytes(cfg, steps, n_local, width) \
         / (spec.ici_link_gbps * 1e9)
     return steps * d * n_local / (lane_s + commit_s + ici_s) / 1e6
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching serve loop (DESIGN.md §4): the admission loop packs
+# arrivals into fixed [slab_steps, N] slabs, resolves each slab's bounded
+# route plan via a host-side measurement + LRU plan cache, and (when
+# double-buffered) overlaps the host work for slab k+1 with the device
+# stream of slab k.  benchmarks/roofline.py reports measured-vs-modeled for
+# BENCH_serve.json rows from these terms.
+# ---------------------------------------------------------------------------
+
+HOST_MEASURE_NS_PER_LANE = 20.0   # numpy H3 + bincount per slab lane
+HOST_PLAN_SECONDS = 5e-3          # plan_bounded_route on a cache miss
+
+
+def serve_plan_seconds(lanes: int, hit_rate: float,
+                       plan_seconds: float = HOST_PLAN_SECONDS,
+                       measure_ns_per_lane: float = HOST_MEASURE_NS_PER_LANE,
+                       ) -> float:
+    """Amortized host routing cost for one slab of ``lanes`` lanes.
+
+    The host measurement pass runs on EVERY slab (the plan cache's coverage
+    check needs the measured loads even on a hit); the full
+    ``plan_bounded_route`` replan only runs on the ``1 - hit_rate`` fraction
+    of slabs that miss.  At ``hit_rate -> 1`` the per-slab cost collapses to
+    the microsecond-scale measurement — the amortization the plan cache
+    exists for."""
+    measure_s = lanes * measure_ns_per_lane * 1e-9
+    return measure_s + (1.0 - hit_rate) * plan_seconds
+
+
+def serve_loop_modeled(cfg: HashTableConfig, slab_steps: int,
+                       hit_rate: float = 1.0, pad_fraction: float = 0.0,
+                       double_buffer: bool = True,
+                       overlap_efficiency: float = 0.9,
+                       plan_seconds: float = HOST_PLAN_SECONDS,
+                       measure_ns_per_lane: float = HOST_MEASURE_NS_PER_LANE,
+                       nsq_fraction: float = 0.5,
+                       spec: TPUSpec = V5E) -> dict:
+    """Model one steady-state slab of the continuous-batching serve loop.
+
+    Terms:
+
+      device      ``slab_steps x N`` lanes through the stream roofline —
+                  :func:`sharded_stream_modeled_mops` when the table is
+                  sharded (the serve loop rides the bounded distributed
+                  stream), :func:`stream_modeled_mops` otherwise.
+      host        :func:`serve_plan_seconds` — measurement every slab, a
+                  replan on the miss fraction.
+      overlap     double-buffered dispatch hides ``overlap_efficiency`` of
+                  the host term behind the in-flight slab's device time
+                  (1.0 = perfect pipelining; single-buffered dispatch hides
+                  nothing — host and device strictly alternate).
+
+    Returns ``{"slab_seconds", "host_seconds", "mops", "p50_seconds",
+    "p99_seconds"}``.  MOPS counts only live (non-NOP-padding) lanes, so
+    ``pad_fraction`` is pure throughput loss.  p50 is the steady-state
+    retire latency — a request rides its slab through the
+    ``window``-deep in-flight pipeline; p99 adds the cold-replan spike a
+    cache-miss slab eats on top."""
+    n = cfg.queries_per_step
+    lanes = slab_steps * n
+    if cfg.shards > 1:
+        dev_mops = sharded_stream_modeled_mops(
+            cfg, slab_steps, n // cfg.shards, nsq_fraction=nsq_fraction,
+            spec=spec)
+    else:
+        dev_mops = stream_modeled_mops(cfg, slab_steps,
+                                       nsq_fraction=nsq_fraction, spec=spec)
+    device_s = lanes / (dev_mops * 1e6)
+    host_s = serve_plan_seconds(lanes, hit_rate, plan_seconds,
+                                measure_ns_per_lane)
+    hidden = overlap_efficiency if double_buffer else 0.0
+    slab_s = device_s + (1.0 - hidden) * host_s
+    window = 2 if double_buffer else 1
+    live = (1.0 - pad_fraction) * lanes
+    p50 = window * slab_s
+    return {
+        "slab_seconds": slab_s,
+        "host_seconds": host_s,
+        "mops": live / slab_s / 1e6,
+        "p50_seconds": p50,
+        "p99_seconds": p50 + plan_seconds,
+    }

@@ -126,10 +126,13 @@ def xor_stream(bucket: jnp.ndarray, port: jnp.ndarray, legal: jnp.ndarray,
     engine.route_stream_bounded).  ``bucket_base``
     (traced scalar) offsets a shard-local partition into the global bucket
     space; lanes outside the partition are inert.  ``binned`` selects the
-    tile-binned dispatch when ``bucket_tiles > 1``: lanes stable-sorted by
-    tile, lane windows via scalar-prefetch offsets, the HBM-resident table
-    swept in residency-sized passes with an in-kernel step scan per pass;
-    ``binned=False`` keeps the mask-all-N baseline.  ``binned=None``
+    tile-binned dispatch: lanes stable-sorted by tile, lane windows via
+    scalar-prefetch offsets, the table swept in residency-sized passes with
+    an in-kernel step scan per pass — at ``bucket_tiles == 1`` the
+    degenerate single-pass form, whose grid collapses to ONE iteration
+    scanning all T steps of the VMEM-resident table (one kernel launch per
+    stream instead of T); ``binned=False`` keeps the per-step-grid
+    mask-all-N baseline.  ``binned=None``
     defaults per backend: True off-TPU (interpret mode), False on TPU —
     the binned kernel's ANY-ref span load/store still needs the
     ``make_async_copy`` substitution to lower under Mosaic (see the

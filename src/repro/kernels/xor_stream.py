@@ -29,9 +29,9 @@ the tile's own lane window.)
 
 Two layouts share that dataflow:
 
-**VMEM-resident / unbinned** (``bucket_tiles == 1``, or ``binned=False`` as
-the A/B baseline for ``bucket_tiles > 1``), ``grid = (bucket_tiles, T)``
-with T minor.  The table tile is an ``input_output_aliases`` pair whose
+**Per-step grid / unbinned** (``binned=False`` — the A/B baseline for both
+regimes, and the TPU default until the Mosaic caveat below lands),
+``grid = (bucket_tiles, T)`` with T minor.  The table tile is an ``input_output_aliases`` pair whose
 block index depends only on ``bt``: at ``t == 0`` the input tile is latched
 into the aliased output block, which stays VMEM-resident for all T
 consecutive steps (Pallas preserves output blocks across consecutive
@@ -42,12 +42,17 @@ blocks are indexed by ``t``, so the standard Pallas pipeline double-buffers
 step t+1's queries while step t computes — the kernel-level expression of
 the FPGA's query FIFO.
 
-**Tile-binned** (``binned=True`` and ``bucket_tiles > 1`` — the HBM-resident
-regime, the HashGraph bin-then-process move), ``grid = (bin_passes,)``.
-An XLA-side pre-pass stable-sorts each step's lanes by bucket tile (stable
-⇒ sorted order within a tile == program order, so last-wins survives) and
-hands the kernel a ``[BT+1, T]`` table of per-(tile, step) lane offsets as
-a scalar-prefetch operand.
+**Tile-binned** (``binned=True`` — the HashGraph bin-then-process move),
+``grid = (bin_passes,)``.  An XLA-side pre-pass stable-sorts each step's
+lanes by bucket tile (stable ⇒ sorted order within a tile == program order,
+so last-wins survives) and hands the kernel a ``[BT+1, T]`` table of
+per-(tile, step) lane offsets as a scalar-prefetch operand.  At
+``bucket_tiles == 1`` this degenerates to the single-pass in-kernel scan:
+the whole table is the span, the sort is the identity permutation, and the
+per-step grid dimension collapses to ONE grid iteration running all T steps
+as a ``lax.scan`` — the same collapse PR 4 applied to the blocked regime,
+now covering the VMEM-resident table too (one kernel launch per stream
+instead of T, which is also the fast path under ``interpret=True``).
 
 Bin granularity vs sweep passes: ``bucket_tiles`` fixes the BINNING (sort
 key, offsets table); ``bin_passes`` (a power-of-two divisor of it, sized by
@@ -406,9 +411,10 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
     power-of-two divisor of B (1 == fully VMEM-resident table).
     ``bucket_base`` (traced scalar) marks the global bucket range this
     table partition owns; lanes outside ``[base, base + B)`` are inert.
-    ``binned`` selects the tile-binned dispatch for ``bucket_tiles > 1``
-    (sorted lanes, windowed sweep, in-kernel step scan — the fast
-    HBM-resident layout); ``binned=False`` keeps the mask-all-N baseline.
+    ``binned`` selects the tile-binned dispatch (sorted lanes, windowed
+    sweep, in-kernel step scan; at ``bucket_tiles == 1`` the degenerate
+    single-pass form whose grid is ONE iteration scanning all T steps);
+    ``binned=False`` keeps the per-step-grid mask-all-N baseline.
     ``bin_passes`` (binned only) is the number of residency-sized sweep
     passes — a power-of-two divisor of ``bucket_tiles``, sized from the
     VMEM budget by ``kernels.ops.xor_stream`` (module docstring).
@@ -433,7 +439,7 @@ def xor_stream_pallas(bucket: jnp.ndarray, port: jnp.ndarray,
     if legal.ndim == 1:
         legal = jnp.broadcast_to(legal[None], (T, N))
 
-    if binned and BT > 1:
+    if binned:
         # ---- XLA-side pre-pass: stable-sort each step's lanes by tile ----
         rel = bucket.astype(jnp.int32) - base[0]
         in_part = (rel >= 0) & (rel < B)

@@ -1,5 +1,11 @@
-"""Serving: batched decode engine + hash-table prefix/KV-block cache."""
-from repro.serving.engine import Engine, Request, ServeConfig
+"""Serving: batched decode engine, continuous-batching table server, and
+hash-table prefix/KV-block cache."""
+from repro.serving.engine import (Engine, Request, ServeConfig, StepReport,
+                                  TableServer)
 from repro.serving.prefix_cache import PrefixCache, chain_key
+from repro.serving.serve_loop import (PlanCache, SlabQueue, SlabRequest,
+                                      measure_loads_host, op_mix_bucket)
 
-__all__ = ["Engine", "Request", "ServeConfig", "PrefixCache", "chain_key"]
+__all__ = ["Engine", "Request", "ServeConfig", "StepReport", "TableServer",
+           "PrefixCache", "chain_key", "PlanCache", "SlabQueue", "SlabRequest",
+           "measure_loads_host", "op_mix_bucket"]

@@ -1,10 +1,22 @@
-"""Batched decode engine with hash-table prefix caching.
+"""Batched decode engine with hash-table prefix caching, and the table's own
+continuous-batching serve loop (``TableServer``).
 
-Continuous-batching-lite: a fixed pool of decode slots; finished requests are
-replaced from the queue; every step runs ONE jitted decode for the whole pool.
-Prefix reuse: prompts are split into blocks; block keys chain-hash the prefix;
-cached blocks (hash-table hits) skip prefill recomputation — per-request
-prefill work is proportional to the *novel* suffix only.
+Continuous-batching-lite (``Engine``): a fixed pool of decode slots; finished
+requests are replaced from the queue; every step runs ONE jitted decode for
+the whole pool.  Prefix reuse: prompts are split into blocks; block keys
+chain-hash the prefix; cached blocks (hash-table hits) skip prefill
+recomputation — per-request prefill work is proportional to the *novel*
+suffix only.
+
+``TableServer`` is the steady-state admission loop for the hash table itself
+(DESIGN.md §4): arriving S/I/U/D requests are packed into fixed ``[T, N]``
+NOP-padded slabs (recompile-free by construction — serve_loop.SlabQueue), the
+bounded router's per-slab measurement pass is amortized through an LRU plan
+cache with a coverage-check fallback (serve_loop.PlanCache), and dispatch is
+double-buffered: slab *k+1* is packed, measured and planned on the host while
+slab *k*'s fused stream is still executing on the device — the host only
+``block_until_ready``s the slab leaving a two-deep in-flight window, so the
+device queue never drains between slabs.
 
 This is the serving-side integration of the paper (DESIGN.md §4); the engine
 itself stays deliberately simple (greedy sampling, single host) — the
@@ -12,8 +24,11 @@ interesting part is the table in the loop.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Dict, List, Optional
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 import jax
@@ -23,8 +38,10 @@ from repro.models.lm import init_cache, lm_decode_step, lm_prefill
 from repro.models.model_config import ModelConfig
 from repro.models.stack import cache_batch_slice, cache_batch_update
 from repro.serving.prefix_cache import PrefixCache, chain_key
+from repro.serving.serve_loop import (PlanCache, SlabQueue, SlabRequest,
+                                      measure_loads_host, op_mix_bucket)
 
-__all__ = ["Request", "ServeConfig", "Engine"]
+__all__ = ["Request", "ServeConfig", "StepReport", "Engine", "TableServer"]
 
 
 @dataclasses.dataclass
@@ -50,6 +67,43 @@ class ServeConfig:
                                         # (PrefixCache(router=); DESIGN.md
                                         # §2.2): "bounded" two-pass width or
                                         # the "skewproof" worst-case width
+    # ---- TableServer / steady-state admission loop (DESIGN.md §4) ----
+    slab_steps: int = 4                 # T: step rows per packed slab — every
+                                        # dispatch sees the same [T, N] shape
+    queue_requests: int = 0             # admission-queue depth bound
+                                        # (submit raises beyond; 0 = unbounded)
+    plan_cache_plans: int = 16          # LRU router-plan cache entries
+                                        # (PlanCache; 0 disables — every slab
+                                        # replans, the cold-plan A/B).  Only
+                                        # engages when the stream's router is
+                                        # "bounded" (cache_router interplay:
+                                        # "skewproof" has nothing to plan)
+    serve_double_buffer: Optional[bool] = None
+                                        # two-deep in-flight dispatch window:
+                                        # True forces it, False retires each
+                                        # slab before dispatching the next,
+                                        # None (auto) engages it only when
+                                        # the host has a spare hardware
+                                        # thread — on a 1-CPU host the
+                                        # "overlapped" host work just
+                                        # contends with the in-flight slab's
+                                        # compute for the same core, so the
+                                        # window degrades to synchronous
+                                        # dispatch
+
+
+@dataclasses.dataclass
+class StepReport:
+    """What one serve-loop step did: the requests it finished plus the
+    occupancy the caller's termination condition needs (``run()`` stops on
+    ``quiescent`` instead of sweeping once more to discover emptiness)."""
+    finished: List
+    queued: int                         # requests still waiting for admission
+    occupied: int                       # slots / in-flight slabs still live
+
+    @property
+    def quiescent(self) -> bool:
+        return self.queued == 0 and self.occupied == 0
 
 
 class Engine:
@@ -57,7 +111,9 @@ class Engine:
         self.cfg, self.params, self.scfg = cfg, params, scfg
         self.prefix_cache = PrefixCache(block_tokens=scfg.block_tokens,
                                         shards=scfg.cache_shards,
-                                        router=scfg.cache_router)
+                                        router=scfg.cache_router,
+                                        plan_cache_plans=scfg.plan_cache_plans)
+        self._closed = False
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * scfg.slots
         self.pos = np.zeros(scfg.slots, np.int32)
@@ -69,6 +125,10 @@ class Engine:
             lambda p, c, toks: lm_prefill(p, cfg, {"tokens": toks}, c))
 
     def submit(self, req: Request) -> None:
+        if self._closed:
+            raise RuntimeError("Engine.run() already drained this engine; a "
+                               "request submitted now would be silently "
+                               "stranded — submit before run()")
         self.queue.append(req)
 
     # ------------------------------------------------------------------ admit
@@ -102,17 +162,22 @@ class Engine:
         self.pos[slot] = len(prompt)
         self.slots[slot] = req
 
+    def _report(self, finished: List[Request]) -> StepReport:
+        return StepReport(finished=finished, queued=len(self.queue),
+                          occupied=sum(s is not None for s in self.slots))
+
     # ------------------------------------------------------------------- step
-    def step(self) -> List[Request]:
-        """Admit + one batched decode step.  Returns the requests that
-        finished (and freed their slot) this step."""
+    def step(self) -> StepReport:
+        """Admit + one batched decode step.  Returns a :class:`StepReport`
+        carrying the requests that finished (and freed their slot) this step
+        plus the queue/slot occupancy ``run()`` terminates on."""
         for i in range(len(self.slots)):
             if self.slots[i] is None and self.queue:
                 self._admit(i, self.queue.pop(0))
         active = [i for i, r in enumerate(self.slots) if r is not None]
         finished: List[Request] = []
         if not active:
-            return finished
+            return self._report(finished)
         toks = np.zeros((self.scfg.slots, 1), np.int32)
         for i in active:
             toks[i, 0] = self.slots[i].out_tokens[-1]
@@ -132,13 +197,200 @@ class Engine:
                 r.done = True
                 self.slots[i] = None
                 finished.append(r)
-        return finished
+        return self._report(finished)
 
     def run(self) -> List[Request]:
         """Drain the queue and every occupied slot; returns the requests that
         actually finished during this call — including ones already sitting
-        in slots when ``run()`` was invoked, which a queue snapshot misses."""
+        in slots when ``run()`` was invoked, which a queue snapshot misses.
+        Terminates on the :class:`StepReport` occupancy of the step that
+        drained the last request — no extra empty sweep — and closes the
+        engine: a later ``submit`` raises instead of stranding its request.
+        """
         finished: List[Request] = []
-        while self.queue or any(s is not None for s in self.slots):
-            finished.extend(self.step())
+        report = self._report([])
+        while not report.quiescent:
+            report = self.step()
+            finished.extend(report.finished)
+        self._closed = True
         return finished
+
+
+# ---------------------------------------------------------------------------
+# TableServer: the hash table's own continuous-batching serve loop
+# ---------------------------------------------------------------------------
+
+
+class TableServer:
+    """Steady-state admission loop over the hash-table stream seam.
+
+    ``stream`` is any ``f(table, ops, keys, vals) -> (table, results)`` over
+    ``[T, N]`` step tensors — the jitted ``engine.run_stream`` (single
+    domain) or a ``make_distributed_stream`` callable (sharded/replicated).
+    When the stream is the bounded-router host wrapper (feature-detected via
+    its ``.router``/``.dispatch`` attributes), the serve loop takes over its
+    measurement pass: slab loads are histogrammed on the HOST from the
+    still-host-resident query arrays (serve_loop.measure_loads_host — no
+    device sync, so it overlaps in-flight device work for free), resolved
+    through the LRU plan cache, and the frozen plan is handed to
+    ``stream.dispatch``.  On a cache hit the per-slab planning cost is a
+    numpy histogram plus a dict probe; ``plan.covers`` misses fall back to a
+    replan (DESIGN.md §4).
+
+    Dispatch is double-buffered (``scfg.serve_double_buffer``): ``step()``
+    dispatches slab *k* and then blocks only on slabs beyond a two-deep
+    in-flight window, so slab *k-1* streams on the device while slab *k* is
+    packed, measured and planned on the host.  The default (``None``) is
+    adaptive: the window engages only when the host has more than one
+    hardware thread — on a 1-CPU host the "overlapped" host work merely
+    contends with the in-flight slab's compute for the same core, so the
+    loop degrades to synchronous dispatch (``window`` reports the effective
+    depth).  Retirement order is dispatch order (``jax.block_until_ready``
+    on the oldest in-flight slab), so per-request results and completion
+    times are exact.
+
+    The loop never reorders lanes: slabs pack in arrival order and the
+    table state chains through dispatches, so the served results are
+    bit-exact with running the identical concatenated trace through the
+    one-shot path (tests/test_serve_loop.py).
+    """
+
+    def __init__(self, cfg, table, stream, scfg: Optional[ServeConfig] = None):
+        self.cfg = cfg
+        self.scfg = scfg or ServeConfig()
+        self.table = table
+        self._stream = stream
+        self._queue = SlabQueue(self.scfg.slab_steps, cfg.queries_per_step,
+                                cfg.key_words, cfg.val_words,
+                                max_requests=self.scfg.queue_requests)
+        self._bounded = getattr(stream, "router", None) == "bounded"
+        self.plan_cache = (
+            PlanCache(cfg, plans=self.scfg.plan_cache_plans,
+                      slack=stream.slack)
+            if self._bounded else None)
+        dbl = self.scfg.serve_double_buffer
+        if dbl is None:                 # auto: overlap needs a host core of
+            dbl = (os.cpu_count() or 1) > 1     # its own to be a win
+        self._window = 2 if dbl else 1
+        self._inflight = collections.deque()    # (slab, device results)
+        self._qm_host: Optional[np.ndarray] = None
+        self._next_rid = 0
+        self._closed = False
+        self.slabs = 0
+        self.live_lanes = 0
+        self.pad_lanes = 0
+
+    # ---------------------------------------------------------------- submit
+    def submit(self, ops, keys, vals=None) -> SlabRequest:
+        """Queue a flat request of ``n`` lanes (``ops [n]``, ``keys [n, Wk]``,
+        ``vals [n, Wv]`` — vals default to zeros for read-only traffic).
+        Returns the :class:`SlabRequest` whose result arrays fill as its
+        slabs retire."""
+        if self._closed:
+            raise RuntimeError("TableServer.run() already drained this "
+                               "server; a request submitted now would be "
+                               "silently stranded — submit before run()")
+        ops = np.ascontiguousarray(np.asarray(ops, np.int32).reshape(-1))
+        n = len(ops)
+        keys = np.ascontiguousarray(
+            np.asarray(keys, np.uint32).reshape(n, self.cfg.key_words))
+        if vals is None:
+            vals = np.zeros((n, self.cfg.val_words), np.uint32)
+        vals = np.ascontiguousarray(
+            np.asarray(vals, np.uint32).reshape(n, self.cfg.val_words))
+        req = SlabRequest(rid=self._next_rid, ops=ops, keys=keys, vals=vals,
+                          submit_s=time.perf_counter())
+        self._next_rid += 1
+        self._queue.submit(req)
+        return req
+
+    # -------------------------------------------------------------- dispatch
+    def _resolve_plan(self, slab):
+        if self.plan_cache is None:
+            return None
+        if self._qm_host is None:
+            self._qm_host = np.asarray(jax.device_get(self.table.q_masks))
+        loads, pair = measure_loads_host(self.cfg, self._qm_host, slab.keys)
+        plan, _ = self.plan_cache.lookup(loads, pair,
+                                         op_mix_bucket(slab.ops))
+        return plan
+
+    def _dispatch(self, slab) -> None:
+        args = (jnp.asarray(slab.ops), jnp.asarray(slab.keys),
+                jnp.asarray(slab.vals))
+        if self._bounded:
+            plan = self._resolve_plan(slab)
+            if plan is not None:
+                self.table, res = self._stream.dispatch(self.table, *args,
+                                                        plan)
+            else:        # plan cache disabled: the wrapper measures per call
+                self.table, res = self._stream(self.table, *args)
+        else:
+            self.table, res = self._stream(self.table, *args)
+        self._inflight.append((slab, res))
+        self.slabs += 1
+        self.live_lanes += slab.live
+        self.pad_lanes += slab.ops.size - slab.live
+
+    def _retire_one(self) -> List[SlabRequest]:
+        slab, res = self._inflight.popleft()
+        jax.block_until_ready(res)
+        T, N = slab.ops.shape
+        found = np.asarray(res.found).reshape(T * N)
+        ok = np.asarray(res.ok).reshape(T * N)
+        value = np.asarray(res.value).reshape(T * N, -1)
+        finished, now = [], time.perf_counter()
+        for req, r_off, f_off, cnt in slab.spans:
+            req.found[r_off:r_off + cnt] = found[f_off:f_off + cnt]
+            req.ok[r_off:r_off + cnt] = ok[f_off:f_off + cnt]
+            req.value[r_off:r_off + cnt] = value[f_off:f_off + cnt]
+            req.lanes_done += cnt
+            if req.done:
+                req.done_s = now
+                finished.append(req)
+        return finished
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> StepReport:
+        """Pack + dispatch at most one slab, then retire anything past the
+        in-flight window (all of it once the queue is quiescent).  Returns
+        the :class:`StepReport` ``run()`` terminates on."""
+        finished: List[SlabRequest] = []
+        if self._queue.pending_requests:
+            self._dispatch(self._queue.next_slab())
+        # double-buffer discipline: block only on slabs leaving the window,
+        # so the newest dispatch keeps executing while the host packs on
+        while len(self._inflight) >= self._window:
+            finished.extend(self._retire_one())
+        if not self._queue.pending_requests:
+            while self._inflight:               # quiescent queue: drain
+                finished.extend(self._retire_one())
+        return StepReport(finished=finished,
+                          queued=self._queue.pending_requests,
+                          occupied=len(self._inflight))
+
+    # ------------------------------------------------------------------- run
+    def run(self) -> List[SlabRequest]:
+        """Serve until quiescent (no queued requests, no in-flight slabs) —
+        the termination comes from ``step()``'s occupancy report, not an
+        extra empty sweep — then close the server (``submit`` raises after).
+        Returns every request finished during the call, in retire order."""
+        finished: List[SlabRequest] = []
+        report = StepReport(finished=[], queued=self._queue.pending_requests,
+                            occupied=len(self._inflight))
+        while not report.quiescent:
+            report = self.step()
+            finished.extend(report.finished)
+        self._closed = True
+        return finished
+
+    # ------------------------------------------------------------------ stats
+    @property
+    def window(self) -> int:
+        """Effective in-flight window depth (2 = double-buffered)."""
+        return self._window
+
+    @property
+    def pad_fraction(self) -> float:
+        tot = self.live_lanes + self.pad_lanes
+        return self.pad_lanes / tot if tot else 0.0

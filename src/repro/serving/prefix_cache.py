@@ -52,7 +52,8 @@ class PrefixCache:
 
     def __init__(self, num_pages: int = 4096, block_tokens: int = 16,
                  p: int = 8, seed: int = 0, backend: str = "auto",
-                 shards: int = 1, router: str = "bounded"):
+                 shards: int = 1, router: str = "bounded",
+                 plan_cache_plans: int = 16):
         buckets = 1 << max(int(np.ceil(np.log2(max(num_pages, 2) * 2))), 4)
         if p % shards:
             raise ValueError(f"need p % shards == 0, got p={p} shards={shards}")
@@ -65,6 +66,8 @@ class PrefixCache:
         # kernel on pallas-capable backends, the scanned oracle on jnp.
         # (retraces once per distinct step count T; admission/lookup batch
         # shapes repeat, so the cache stays warm)
+        self._plan_cache = None
+        self._qm_host = None
         if shards > 1:
             from repro.core.distributed import (init_distributed_table,
                                                 make_distributed_stream,
@@ -73,6 +76,18 @@ class PrefixCache:
             self.table = init_distributed_table(self.cfg, jax.random.key(seed),
                                                 self.mesh)
             self._stream = make_distributed_stream(self.mesh, self.cfg)
+            # amortize the bounded router's per-batch measurement pass across
+            # the steady stream of same-shaped admission/lookup batches: the
+            # load histograms run on the HOST (serve_loop.measure_loads_host,
+            # no device sync) and the frozen plan comes from the LRU
+            # PlanCache, falling back to a replan when the coverage check
+            # fails (DESIGN.md §4)
+            if (plan_cache_plans
+                    and getattr(self._stream, "router", None) == "bounded"):
+                from repro.serving.serve_loop import PlanCache
+                self._plan_cache = PlanCache(self.cfg,
+                                             plans=plan_cache_plans,
+                                             slack=self._stream.slack)
         else:
             self.table = init_table(self.cfg, jax.random.key(seed))
             self._stream = jax.jit(engine.run_stream,
@@ -107,9 +122,23 @@ class PrefixCache:
         op_t = np.zeros(T * N, np.int32); op_t[:n] = ops
         kk_t = np.zeros((T * N, 2), np.uint32); kk_t[:n] = keys
         vv_t = np.zeros((T * N, 2), np.uint32); vv_t[:n] = vals
+        extra = {}
+        if self._plan_cache is not None:
+            # host-side measurement (microseconds, no device sync) + LRU plan
+            # reuse: repeat shapes/mixes skip plan_bounded_route entirely
+            from repro.serving.serve_loop import (measure_loads_host,
+                                                  op_mix_bucket)
+            if self._qm_host is None:
+                self._qm_host = np.asarray(jax.device_get(self.table.q_masks))
+            loads, pair = measure_loads_host(self.cfg, self._qm_host,
+                                             kk_t.reshape(T, N, 2))
+            plan, _ = self._plan_cache.lookup(loads, pair,
+                                              op_mix_bucket(op_t))
+            extra["plan"] = plan
         self.table, res = self._stream(
             self.table, jnp.array(op_t.reshape(T, N)),
-            jnp.array(kk_t.reshape(T, N, 2)), jnp.array(vv_t.reshape(T, N, 2)))
+            jnp.array(kk_t.reshape(T, N, 2)), jnp.array(vv_t.reshape(T, N, 2)),
+            **extra)
         found = np.asarray(res.found).reshape(T * N)[:n]
         value = np.asarray(res.value).reshape(T * N, 2)[:n]
         return found, value

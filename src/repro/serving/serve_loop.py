@@ -1,0 +1,306 @@
+"""Steady-state serving primitives: slab packing + the LRU router-plan cache.
+
+The continuous-batching admission loop (``serving.engine.TableServer``;
+DESIGN.md §4) is built from three pieces that live here so both the server
+and ``PrefixCache`` can share them without an import cycle:
+
+``SlabQueue``
+    packs arriving variable-length requests into fixed ``[T, N]`` slabs —
+    recompile-free by construction: every dispatch sees the SAME step-tensor
+    shape, tail lanes are NOP-padded (op 0, key 0 — the repo-wide dead-lane
+    sentinel), and requests may span slab boundaries.  Packing is strictly
+    arrival-order and lane-order-preserving, so the concatenation of live
+    lanes across slabs IS the concatenation of submitted requests (the
+    hypothesis property tests/test_serve_loop.py pins: no drop, no
+    reorder, no duplicate).
+
+``measure_loads_host``
+    the bounded router's pass-1 histograms (``engine.route_load_pass``)
+    recomputed in pure numpy from the slab's host-side arrays — H3 hash,
+    owner shard, per-(step, owner) loads and per-(origin, owner) pair
+    totals.  The serve loop holds the query tensors on the host *before*
+    committing them to the device anyway, and at slab sizes the numpy pass
+    costs microseconds, so the plan-cache coverage check never has to sync
+    with (or queue behind) in-flight device work — this is what lets the
+    measurement pass amortize to ~zero on cache hits.
+
+``PlanCache``
+    an LRU of frozen :class:`~repro.core.engine.BoundedRoutePlan` values
+    keyed on ``(steps, lanes, measured-width bucket, op-mix bucket)``.  A
+    hit is only served after ``plan.covers(max_load, pair_max)`` — the
+    safety check that the cached ``Nr`` still covers THIS batch's measured
+    max load and its pair totals still fit the send FIFOs (an under-sized
+    plan would silently drop lanes past the FIFO sentinel).  A failed check
+    falls back to a replan, which replaces the stale entry.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_NOP,
+                        engine as _engine)
+from repro.core.engine import BoundedRoutePlan
+
+__all__ = ["SlabRequest", "Slab", "SlabQueue", "PlanCache",
+           "measure_loads_host", "op_mix_bucket"]
+
+
+# ---------------------------------------------------------------------------
+# Requests and slab packing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SlabRequest:
+    """One submitted request: a flat run of ``n`` query lanes plus the
+    result arrays the retire path scatters back into.  ``done`` flips when
+    the last slab carrying any of its lanes retires; ``latency_s`` is
+    submit-to-retire wall time (the serve benchmark's p50/p99 source)."""
+    rid: int
+    ops: np.ndarray                     # [n] int32
+    keys: np.ndarray                    # [n, Wk] uint32
+    vals: np.ndarray                    # [n, Wv] uint32
+    found: np.ndarray = None            # [n] bool, filled on retire
+    ok: np.ndarray = None               # [n] bool
+    value: np.ndarray = None            # [n, Wv] uint32
+    submit_s: float = 0.0
+    done_s: float = 0.0
+    lanes_done: int = 0
+
+    def __post_init__(self):
+        n = len(self.ops)
+        if self.found is None:
+            self.found = np.zeros(n, bool)
+        if self.ok is None:
+            self.ok = np.zeros(n, bool)
+        if self.value is None:
+            self.value = np.zeros((n, self.vals.shape[-1]), np.uint32)
+
+    @property
+    def done(self) -> bool:
+        return self.lanes_done == len(self.ops)
+
+    @property
+    def latency_s(self) -> float:
+        return self.done_s - self.submit_s
+
+
+@dataclasses.dataclass
+class Slab:
+    """One packed ``[T, N]`` dispatch unit.  ``spans`` maps slab lanes back
+    to their requests: ``(request, request_offset, flat_offset, count)``
+    with ``flat_offset`` indexing the row-major flattened ``[T * N]`` lane
+    space.  ``live`` counts non-pad lanes."""
+    ops: np.ndarray                     # [T, N] int32 (NOP-padded)
+    keys: np.ndarray                    # [T, N, Wk] uint32
+    vals: np.ndarray                    # [T, N, Wv] uint32
+    spans: List[Tuple[SlabRequest, int, int, int]]
+    live: int
+
+
+class SlabQueue:
+    """Arrival-order admission queue packing requests into fixed slabs.
+
+    ``max_requests`` bounds the queue depth (``submit`` raises beyond it —
+    backpressure instead of unbounded host memory); 0 means unbounded.
+    """
+
+    def __init__(self, steps: int, lanes: int, key_words: int, val_words: int,
+                 max_requests: int = 0):
+        self.steps, self.lanes = steps, lanes
+        self.key_words, self.val_words = key_words, val_words
+        self.max_requests = max_requests
+        self._pending: Deque[SlabRequest] = collections.deque()
+        self._cursor = 0                # head-request lanes already packed
+
+    @property
+    def pending_requests(self) -> int:
+        return len(self._pending)
+
+    @property
+    def pending_lanes(self) -> int:
+        return sum(len(r.ops) for r in self._pending) - self._cursor
+
+    def submit(self, req: SlabRequest) -> None:
+        if self.max_requests and len(self._pending) >= self.max_requests:
+            raise RuntimeError(f"admission queue full ({self.max_requests} "
+                               f"requests pending); drain with step()/run() "
+                               f"before submitting more")
+        if not (req.ops.shape[0] == req.keys.shape[0] == req.vals.shape[0]):
+            raise ValueError("ops/keys/vals lane counts differ")
+        self._pending.append(req)
+
+    def next_slab(self) -> Optional[Slab]:
+        """Pack the next ``[T, N]`` slab from the queue head (None when
+        empty).  Pad lanes are NOPs with key 0 — inert by the engine's
+        dead-lane contract, exactly the prefix-cache admission padding."""
+        if not self._pending:
+            return None
+        T, N = self.steps, self.lanes
+        cap = T * N
+        op = np.zeros(cap, np.int32)            # OP_NOP == 0, key 0 == dead
+        kk = np.zeros((cap, self.key_words), np.uint32)
+        vv = np.zeros((cap, self.val_words), np.uint32)
+        filled, spans = 0, []
+        while filled < cap and self._pending:
+            req = self._pending[0]
+            off = self._cursor
+            take = min(cap - filled, len(req.ops) - off)
+            op[filled:filled + take] = req.ops[off:off + take]
+            kk[filled:filled + take] = req.keys[off:off + take]
+            vv[filled:filled + take] = req.vals[off:off + take]
+            spans.append((req, off, filled, take))
+            filled += take
+            self._cursor = off + take
+            if self._cursor == len(req.ops):
+                self._pending.popleft()
+                self._cursor = 0
+        return Slab(ops=op.reshape(T, N),
+                    keys=kk.reshape(T, N, self.key_words),
+                    vals=vv.reshape(T, N, self.val_words),
+                    spans=spans, live=filled)
+
+
+# ---------------------------------------------------------------------------
+# Host-side measurement pass (numpy mirror of engine.route_load_pass)
+# ---------------------------------------------------------------------------
+
+
+def _parity32_np(v: np.ndarray) -> np.ndarray:
+    v = v ^ (v >> np.uint32(16))
+    v = v ^ (v >> np.uint32(8))
+    v = v ^ (v >> np.uint32(4))
+    v = v ^ (v >> np.uint32(2))
+    v = v ^ (v >> np.uint32(1))
+    return v & np.uint32(1)
+
+
+def h3_hash_host(keys: np.ndarray, q_masks: np.ndarray) -> np.ndarray:
+    """Numpy mirror of :func:`repro.core.hashing.h3_hash` (same bit
+    semantics word for word — tests/test_serve_loop.py pins the
+    equivalence), so the serve loop can bucket host-resident keys without a
+    device round trip."""
+    keys = np.asarray(keys, np.uint32)
+    q_masks = np.asarray(q_masks, np.uint32)
+    index_bits, key_words = q_masks.shape
+    anded = keys[..., None, :] & q_masks            # [..., J, W]
+    per_word = _parity32_np(anded)
+    folded = per_word[..., 0]
+    for w in range(1, key_words):
+        folded = folded ^ per_word[..., w]
+    weights = (np.uint32(1) << np.arange(index_bits, dtype=np.uint32))
+    return (folded * weights).sum(axis=-1).astype(np.uint32)
+
+
+def measure_loads_host(cfg: HashTableConfig, q_masks: np.ndarray,
+                       keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """The bounded router's pass 1 on the host: ``[T, N, Wk]`` keys ->
+    ``(loads [T, D], pair [D, D])``, bit-identical to the device
+    ``engine.route_load_pass`` histograms.  ``q_masks`` must be a host
+    (numpy) copy of ``table.q_masks``."""
+    T, N = keys.shape[:2]
+    D = cfg.shards
+    n = N // D
+    bucket = h3_hash_host(keys.reshape(T * N, -1), q_masks)
+    owner = (bucket >> np.uint32(cfg.local_index_bits)).astype(np.int64)
+    loads = np.bincount(
+        (np.repeat(np.arange(T, dtype=np.int64), N) * D + owner),
+        minlength=T * D).reshape(T, D)
+    origin = np.tile(np.repeat(np.arange(D, dtype=np.int64), n), T)
+    pair = np.bincount(origin * D + owner,
+                       minlength=D * D).reshape(D, D)
+    return loads, pair
+
+
+def op_mix_bucket(ops: np.ndarray, buckets: int = 8) -> int:
+    """Coarse op-mix component of the plan-cache key: the mutation (insert +
+    delete) fraction of live lanes quantized to ``buckets`` levels.  Routing
+    itself is key-hash-only, but traces with different mixes stress
+    different plan shapes over time — bucketing them apart keeps a
+    search-heavy steady state from thrashing against a write burst."""
+    ops = np.asarray(ops)
+    live = int((ops != OP_NOP).sum())
+    if live == 0:
+        return 0
+    mut = int(((ops == OP_INSERT) | (ops == OP_DELETE)).sum())
+    return min(int(buckets * mut / live), buckets - 1)
+
+
+# ---------------------------------------------------------------------------
+# LRU plan cache
+# ---------------------------------------------------------------------------
+
+
+class PlanCache:
+    """LRU cache of frozen :class:`BoundedRoutePlan` values.
+
+    Key = ``(steps, lanes, routed-width bucket, op-mix bucket)`` — the width
+    bucket is ``cfg.bounded_routed_width`` of the batch's measured max load,
+    i.e. the width a fresh plan WOULD pick, so distinct load regimes hash
+    apart while jitter within one lane tile collapses onto one entry.  A
+    hit must still pass ``plan.covers(max_load, pair_max)`` (module
+    docstring); plans that cannot cover their own batch (a binding
+    ``routed_slack`` cap — the carry regime) are never cached, since their
+    drain-row count is trace-specific.
+
+    ``plans == 0`` disables caching (every lookup replans) but keeps the
+    stats, which is the cold-plan A/B column in benchmarks/serve_latency.py.
+    """
+
+    def __init__(self, cfg: HashTableConfig, plans: int = 16,
+                 slack: Optional[int] = None):
+        self.cfg = cfg
+        self.capacity = plans
+        self.slack = cfg.routed_slack if slack is None else slack
+        self._plans: "collections.OrderedDict[tuple, BoundedRoutePlan]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "entries": len(self._plans),
+                "hit_rate": self.hit_rate}
+
+    def lookup(self, loads: np.ndarray, pair: np.ndarray,
+               mix_bucket: int = 0) -> Tuple[BoundedRoutePlan, bool]:
+        """Resolve a plan for a batch measured as ``(loads, pair)`` (host
+        histograms from :func:`measure_loads_host` or a device
+        ``route_load_pass``).  Returns ``(plan, was_hit)``; on a miss the
+        fresh plan is cached (when cacheable) under the batch's key."""
+        loads = np.asarray(loads)
+        pair = np.asarray(pair)
+        T, D = loads.shape
+        n_local = int(pair.sum()) // max(T * D, 1) if T else 1
+        max_load = int(loads.max()) if T else 0
+        pair_max = int(pair.max()) if T else 0
+        nr = self.cfg.bounded_routed_width(max_load, n_local, slack=self.slack)
+        key = (T, D * n_local, nr, mix_bucket)
+        plan = self._plans.get(key)
+        if plan is not None and plan.covers(max_load, pair_max):
+            self.hits += 1
+            self._plans.move_to_end(key)
+            return plan, True
+        self.misses += 1
+        plan = _engine.plan_bounded_route(self.cfg, slack=self.slack,
+                                          loads=loads, pair=pair)
+        if self.capacity > 0 and plan.covers(max_load, pair_max):
+            self._plans[key] = plan
+            self._plans.move_to_end(key)
+            while len(self._plans) > self.capacity:
+                self._plans.popitem(last=False)
+                self.evictions += 1
+        return plan, False

@@ -88,7 +88,11 @@ def test_engine_end_to_end_and_prefix_hits():
             np.int32), max_new_tokens=4)
         reqs.append(r)
         eng.submit(r)
-    eng.run()
+    finished = eng.run()
     assert all(len(r.out_tokens) >= 4 for r in reqs)
     assert eng.prefix_cache.hits > 0, "shared prefixes must hit the table"
     assert any(r.cached_blocks >= 1 for r in reqs[1:])
+    # run() returns what it retired (no busy re-sweep) and closes the engine
+    assert sorted(r.rid for r in finished) == [r.rid for r in reqs]
+    with pytest.raises(RuntimeError, match="submit before run"):
+        eng.submit(Request(rid=99, prompt=reqs[0].prompt, max_new_tokens=1))
