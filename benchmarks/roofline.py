@@ -164,6 +164,33 @@ def stream_measured_vs_modeled(path: str = "BENCH_stream.json") -> list:
     return rows
 
 
+def bulk_measured_vs_modeled(path: str = "BENCH_bulk.json") -> list:
+    """measured-vs-modeled rows for the count-then-place bulk build
+    (BENCH_bulk.json x perfmodel.bulk_build_modeled_mops).  The model prices
+    the plan's two sort passes + scan passes over the packed record rows at
+    VMEM bandwidth plus one port-0 plane round trip; off-TPU the absolute
+    gap is host/CPU noise, so the interesting number is the shape across n
+    (sort-bound growth) — both are printed."""
+    from repro.core.config import HashTableConfig
+    from repro.core.perfmodel import bulk_build_modeled_mops
+    if not os.path.exists(path):
+        return []
+    bench = json.load(open(path))
+    table = bench.get("table", dict(buckets=1 << 13, slots=4,
+                                    replicate_reads=False,
+                                    stagger_slots=True))
+    cfg = HashTableConfig(p=bench["p"], k=bench["p"], queries_per_pe=8,
+                          **table)
+    rows = []
+    for r in bench["rows"]:
+        modeled = bulk_build_modeled_mops(cfg, r["n"])
+        rows.append(dict(n=r["n"], keyset=r["keyset"],
+                         measured_mops=r["mops_bulk"], modeled_mops=modeled,
+                         measured_over_modeled=r["mops_bulk"] / modeled,
+                         bulk_over_streamed=r["bulk_over_streamed"]))
+    return rows
+
+
 def serve_measured_vs_modeled(path: str = "BENCH_serve.json") -> list:
     """measured-vs-modeled rows for the continuous-batching serve loop
     (BENCH_serve.json x perfmodel.serve_loop_modeled).
@@ -227,6 +254,12 @@ def main() -> None:
               f"measured_MOPS={r['measured_mops']:.3f};"
               f"modeled_MOPS={r['modeled_mops']:.1f};"
               f"measured_over_modeled={r['measured_over_modeled']:.2e}")
+    for r in bulk_measured_vs_modeled():
+        print(f"roofline_bulk_{r['keyset']}_n{r['n']},0.0,"
+              f"measured_MOPS={r['measured_mops']:.3f};"
+              f"modeled_MOPS={r['modeled_mops']:.1f};"
+              f"measured_over_modeled={r['measured_over_modeled']:.2e};"
+              f"bulk_over_streamed={r['bulk_over_streamed']:.2f}")
     for r in serve_measured_vs_modeled():
         print(f"roofline_serve__{r['mode']},0.0,"
               f"measured_MOPS={r['measured_mops']:.3f};"

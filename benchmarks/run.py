@@ -10,7 +10,8 @@ def main() -> None:
     # some benchmark mains parse argv (e.g. --smoke); the driver runs them
     # all in full mode, and a stray driver arg must not SystemExit the sweep
     sys.argv = sys.argv[:1]
-    from benchmarks import (backend_compare, distributed_throughput,
+    from benchmarks import (backend_compare, bulk_build,
+                            distributed_throughput,
                             fig4_memory, fig5_throughput, fig6_capacity,
                             fig7_nsq_ratio, fig10_latency, ht_hillclimb,
                             serve_latency, stream_throughput,
@@ -24,6 +25,7 @@ def main() -> None:
             ("stream_throughput", stream_throughput),
             ("distributed_throughput", distributed_throughput),
             ("serve_latency", serve_latency),
+            ("bulk_build", bulk_build),
             ("roofline", roofline)]
     failures = 0
     for name, mod in mods:

@@ -16,7 +16,9 @@ exercising the HBM-resident code path — in BOTH dispatch layouts
 windowed sweep, the default), ``blocked8_nobinned`` the mask-all-N baseline
 it replaced.  ``--binned`` / ``--no-binned`` restrict the A/B to one side
 (CI runs both); the default measures all columns in ONE paired round-robin
-group, so the binned-over-unbinned ratio is drift-immune.  Emits
+group, so the binned-over-unbinned ratio is drift-immune.  The table is
+bulk-prepopulated with the stream's key set (``engine.bulk_build``) so
+search lanes exercise the hit path, not the empty-table miss path.  Emits
 ``BENCH_stream.json`` (full mode only; ``--smoke`` is the CI harness
 check).
 """
@@ -30,7 +32,7 @@ import os
 import jax
 
 from benchmarks.common import bench_group, mixed_stream, row
-from repro.core import HashTableConfig, init_table, run_stream
+from repro.core import HashTableConfig, bulk_build, init_table, run_stream
 
 P = 8
 QPP = 8
@@ -53,6 +55,11 @@ def run_t(steps: int, qpp: int = QPP, iters: int = ITERS,
     tab = init_table(cfg, jax.random.key(0))
     N = cfg.queries_per_step
     ops_j, keys_j, vals_j = mixed_stream(cfg, steps)
+    # bulk-prepopulate with the stream's own key set (engine.bulk_build, one
+    # count-then-place sweep) so the timed stream probes a WARM table — the
+    # empty-table variant measured only the miss path for every search lane
+    tab, _ = bulk_build(tab, keys_j.reshape(-1, cfg.key_words),
+                        vals_j.reshape(-1, cfg.val_words))
     jfn = jax.jit(run_stream, static_argnames=("backend", "fused",
                                                "bucket_tiles", "binned"))
 

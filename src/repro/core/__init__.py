@@ -28,6 +28,8 @@ from repro.core.hash_table import (
     StepResults,
     XorHashTable,
     apply_step,
+    bulk_build,
+    compact,
     init_table,
     run_stream,
     schedule_queries,
@@ -35,13 +37,14 @@ from repro.core.hash_table import (
 from repro.core.hashing import h3_hash, make_h3_params
 from repro.core.xor_memory import XorMemory, xor_reduce
 from repro.core import engine
-from repro.core.engine import MutationPlan, ProbeResult
+from repro.core.engine import BulkBuildReport, MutationPlan, ProbeResult
 
 __all__ = [
     "HashTableConfig", "memory_bytes", "sram_blocks_ours", "sram_blocks_laforest",
     "OP_NOP", "OP_SEARCH", "OP_INSERT", "OP_DELETE",
     "QueryBatch", "StepResults", "XorHashTable",
-    "apply_step", "init_table", "run_stream", "schedule_queries",
+    "apply_step", "init_table", "run_stream", "bulk_build", "compact",
+    "schedule_queries",
     "h3_hash", "make_h3_params", "XorMemory", "xor_reduce",
-    "engine", "ProbeResult", "MutationPlan",
+    "engine", "ProbeResult", "MutationPlan", "BulkBuildReport",
 ]

@@ -68,7 +68,8 @@ from repro.core.hash_table import (QueryBatch, StepResults, XorHashTable,
 from repro.core.hashing import h3_hash as _h3, make_h3_params
 
 __all__ = ["make_ht_mesh", "init_distributed_table", "make_distributed_step",
-           "make_distributed_stream"]
+           "make_distributed_stream", "make_distributed_bulk_build",
+           "make_distributed_compact"]
 
 
 def make_ht_mesh(n_devices: int | None = None, axis: str = "ht") -> Mesh:
@@ -332,6 +333,168 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
     bounded_stream.plan = make_plan
     bounded_stream.dispatch = dispatch
     return bounded_stream
+
+
+def make_distributed_bulk_build(mesh: Mesh, cfg: HashTableConfig,
+                                axis: str = "ht", router: str | None = None,
+                                backend: str | None = None,
+                                bucket_tiles: int | None = None):
+    """Bucket-sharded bulk build (DESIGN.md §3.2): route records to their
+    owner shards with the existing exchange, then run ONE local
+    count-then-place sweep per partition.
+
+    Returns ``f(table, keys, vals, live=None) -> (table, BulkBuildReport)``
+    over ``[T, N(, W)]`` step tensors sharded over ``axis`` (``N = n_dev *
+    n_local``, the stream layout; ``live`` masks padding records).  Requires
+    ``cfg.shards == n_dev`` and an EMPTY table.  Program order is row-major
+    ``(step, lane)``; both routers deliver an owner's records in program
+    order, so each local sweep is byte-identical to the serialized-insert
+    oracle over that partition — and unlike the query stream, the bounded
+    router's FIFO carry-over cannot break bit-exactness here (the sweep sees
+    all records at once; carry shifts only which routed ROW a record rides,
+    never its rank in program order).  ``router`` overrides ``cfg.router``
+    (``"skewproof"`` or ``"bounded"``); the bounded path measures each batch
+    on the host and dispatches a jit specialized on the measured widths.
+    Spill/placement flags ride the inverse exchange home, so the report
+    keeps the caller's ``[T, N]`` record layout.
+    """
+    from jax.experimental.shard_map import shard_map
+    n_dev = mesh.shape[axis]
+    if cfg.shards != n_dev:
+        raise ValueError(f"bulk build shards the bucket axis: cfg.shards="
+                         f"{cfg.shards} must equal the mesh axis size "
+                         f"{n_dev}")
+    router = cfg.router if router is None else router
+
+    table_spec = XorHashTable(P(), P(None, None, axis),
+                              P(None, None, axis), P(None, None, axis), cfg)
+    shmap = lambda body: jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(table_spec, P(None, axis), P(None, axis), P(None, axis)),
+        out_specs=(table_spec, P(None, axis), P(None, axis), P(None, axis),
+                   P(None, axis), P(None, axis), P()),
+        check_rep=False,
+    ))
+
+    def _local_sweep(table, r_bkt, r_key, r_val, r_live, d):
+        """One owner partition's count-then-place over the routed records,
+        flattened row-major == program order."""
+        Wk, Wv = cfg.key_words, cfg.val_words
+        fb = r_bkt.reshape(-1)
+        fk = r_key.reshape(-1, Wk)
+        fv = r_val.reshape(-1, Wv)
+        fl = r_live.reshape(-1)
+        sk, sv, sb, placed, spilled, slot, first, max_load = \
+            _engine.bulk_place_records(
+                cfg, table.store_keys, table.store_vals, table.store_valid,
+                fb, fk, fv, fl, bucket_base=d * cfg.local_buckets,
+                backend=backend, bucket_tiles=bucket_tiles)
+        shape = r_bkt.shape
+        return (sk, sv, sb, placed.reshape(shape), spilled.reshape(shape),
+                slot.reshape(shape), first.reshape(shape),
+                jax.lax.pmax(max_load, axis))
+
+    @functools.lru_cache(maxsize=None)
+    def _skewproof_build():
+        def body(table, keys, vals, live):
+            d = jax.lax.axis_index(axis)
+            T, n = live.shape
+            bucket = _h3(keys.reshape(T * n, cfg.key_words),
+                         table.q_masks).reshape(T, n)
+            (r_key, r_val, r_bkt, r_live), tgt = _engine.route_stream(
+                cfg, axis, bucket, keys, vals, bucket, live)
+            sk, sv, sb, placed, spilled, slot, first, max_load = _local_sweep(
+                table, r_bkt, r_key, r_val, r_live, d)
+            p_l, s_l, sl_l, f_l = _engine.inverse_route(axis, tgt, placed,
+                                                        spilled, slot, first)
+            table = XorHashTable(table.q_masks, sk, sv, sb, cfg)
+            return table, p_l, s_l, sl_l, f_l, bucket, max_load
+
+        return shmap(body)
+
+    @functools.lru_cache(maxsize=None)
+    def _bounded_build(q_cap: int, nr: int, tr: int):
+        def body(table, keys, vals, live):
+            d = jax.lax.axis_index(axis)
+            T, n = live.shape
+            bucket = _h3(keys.reshape(T * n, cfg.key_words),
+                         table.q_masks).reshape(T, n)
+            routed, pe, carry = _engine.route_stream_bounded(
+                cfg, axis, bucket, keys, vals, bucket, live,
+                pair_capacity=q_cap, routed_width=nr, routed_steps=tr)
+            r_key, r_val, r_bkt, r_live = routed
+            # dead routed padding carries pe == D (zeros elsewhere too, but
+            # the explicit live word is the single source of truth)
+            sk, sv, sb, placed, spilled, slot, first, max_load = _local_sweep(
+                table, r_bkt, r_key, r_val, r_live & (pe < n_dev), d)
+            p_l, s_l, sl_l, f_l = _engine.inverse_route_bounded(
+                axis, carry, placed, spilled, slot, first)
+            table = XorHashTable(table.q_masks, sk, sv, sb, cfg)
+            return table, p_l, s_l, sl_l, f_l, bucket, max_load
+
+        return shmap(body)
+
+    @jax.jit
+    def _measure(keys, q_masks):
+        T, N = keys.shape[:2]
+        bucket = _h3(keys.reshape(T * N, cfg.key_words),
+                     q_masks).reshape(T, N)
+        return _engine.route_load_pass(cfg, _engine.shard_owner(cfg, bucket))
+
+    def build(table, keys, vals, live=None):
+        T, N = keys.shape[:2]
+        if live is None:
+            live = jnp.ones((T, N), jnp.bool_)
+        if T == 0:
+            z = jnp.zeros((0, N), jnp.int32)
+            zb = jnp.zeros((0, N), jnp.bool_)
+            return table, _engine.BulkBuildReport(
+                bucket=z, slot=z, placed=zb, spilled=zb, first=zb,
+                max_load=jnp.zeros((), jnp.int32))
+        if router == "skewproof":
+            fn = _skewproof_build()
+        else:
+            loads, pair = jax.device_get(_measure(keys, table.q_masks))
+            plan = _engine.plan_bounded_route(cfg, loads=loads, pair=pair)
+            if plan.routed_width >= plan.skewproof_width:
+                fn = _skewproof_build()
+            else:
+                fn = _bounded_build(plan.pair_capacity, plan.routed_width,
+                                    plan.routed_steps)
+        table, placed, spilled, slot, first, bucket, max_load = fn(
+            table, keys, vals, live)
+        report = _engine.BulkBuildReport(
+            bucket=bucket.astype(jnp.int32), slot=slot, placed=placed,
+            spilled=spilled, first=first, max_load=max_load)
+        return table, report
+
+    build.router = router
+    build.cfg = cfg
+    return build
+
+
+def make_distributed_compact(mesh: Mesh, cfg: HashTableConfig,
+                             axis: str = "ht", backend: str | None = None,
+                             bucket_tiles: int | None = None):
+    """Shard-local compaction: every owner rewrites its own partition with
+    the count-then-place sweep (records already live at their owners, so no
+    exchange is needed).  Returns ``f(table) -> table`` — jitted end to
+    end; same semantics per partition as ``engine.compact``."""
+    from jax.experimental.shard_map import shard_map
+    n_dev = mesh.shape[axis]
+    if cfg.shards != n_dev:
+        raise ValueError(f"cfg.shards={cfg.shards} != mesh axis size {n_dev}")
+    table_spec = XorHashTable(P(), P(None, None, axis),
+                              P(None, None, axis), P(None, None, axis), cfg)
+
+    def body(table):
+        local = XorHashTable(table.q_masks, table.store_keys,
+                             table.store_vals, table.store_valid, cfg)
+        return _engine.compact(local, backend=backend,
+                               bucket_tiles=bucket_tiles)
+
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(table_spec,),
+                             out_specs=table_spec, check_rep=False))
 
 
 def make_distributed_step(mesh: Mesh, cfg: HashTableConfig, axis: str = "ht"):

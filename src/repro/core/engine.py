@@ -53,8 +53,10 @@ paper-faithful per-PE replica gather.  Both decode identical values.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -73,6 +75,8 @@ __all__ = [
     "BoundedRoutePlan", "plan_bounded_route", "route_load_pass",
     "route_stream_bounded",
     "inverse_route_bounded",
+    "BulkBuildReport", "plan_bulk_build", "bulk_place_records",
+    "bulk_build", "extract_records", "compact",
     "register_backend", "get_backend", "resolve_backend", "available_backends",
 ]
 
@@ -376,6 +380,23 @@ class JnpBackend:
         # bucket_tiles/binned are fused-kernel knobs; the scan has no tiling
         return _scan_stream(table, ops, keys, vals, backend=self.name)
 
+    def bulk_place(self, plane_k, plane_v, plane_b, w_bucket, w_slot,
+                   keys, vals, bucket_tiles: Optional[int] = None):
+        """Plaintext placement of pre-planned records into the port-0 plane
+        (``[B, S, W*]``) — the jnp oracle for the binned placement kernel.
+        Targets are pairwise distinct by construction (plan_bulk_build), so
+        a plain masked scatter needs no supersession pass.  The three planes
+        scatter as ONE packed ``[B, S, Wk+Wv+1]`` write: a scatter's cost is
+        dominated by its per-row index handling, so fusing pays ~3x."""
+        Wk, Wv = keys.shape[-1], vals.shape[-1]
+        packed = jnp.concatenate(
+            [plane_k, plane_v, plane_b[..., None]], axis=-1)
+        rows = jnp.concatenate(
+            [keys, vals, jnp.ones((keys.shape[0], 1), jnp.uint32)], axis=-1)
+        packed = packed.at[w_bucket, w_slot, :].set(rows, mode="drop")
+        return (packed[..., :Wk], packed[..., Wk:Wk + Wv],
+                packed[..., Wk + Wv])
+
 
 class PallasBackend:
     """Routes the hot path through the Pallas kernels (interpret on CPU)."""
@@ -462,6 +483,16 @@ class PallasBackend:
             jnp.broadcast_to(sb[None], (R,) + sb.shape), cfg)
         return new_table, StepResults(found=found, value=value, ok=ok,
                                       bucket=bucket)
+
+    def bulk_place(self, plane_k, plane_v, plane_b, w_bucket, w_slot,
+                   keys, vals, bucket_tiles: Optional[int] = None):
+        """The binned placement kernel (kernels.bulk_place): records sorted
+        by bucket tile, one residency-sized span load/store per pass — one
+        plane round trip for the whole build.  Interpret mode off-TPU."""
+        from repro.kernels import ops as kops
+        return kops.bulk_place(w_bucket, w_slot, keys, vals,
+                               plane_k, plane_v, plane_b,
+                               bucket_tiles=bucket_tiles)
 
 
 _BACKENDS: Dict[str, object] = {}
@@ -1066,3 +1097,373 @@ def inverse_route_bounded(axis: str, carry, *arrays: jnp.ndarray):
     backp = jnp.concatenate([back, jnp.zeros((1, w), jnp.uint32)])
     res = backp[jnp.clip(slot.reshape(-1), 0, back.shape[0])]
     return _unpack_u32(res.reshape(slot.shape + (w,)), meta)
+
+
+# ---------------------------------------------------------------------------
+# Stage five: bulk build + compaction (count-then-place, DESIGN.md §3.2)
+#
+# All table population above streams inserts through the query path — one
+# probe/commit round per step even when every key is known up front.  The
+# HashGraph move (PAPERS.md) builds the whole table in a constant number of
+# counting-sort sweeps instead: hash all keys, resolve intra-batch duplicates
+# with one stable sort (last value wins, first occurrence fixes the slot),
+# histogram-rank distinct keys within their bucket, and place everything with
+# ONE pass over the table.  The result is defined to be byte-identical to
+# streaming the records through the insert path one record per step on lane 0
+# (the serialized-insert oracle): every record initiates from PE 0, so all
+# data lands in partial store 0 of every replica, the XOR encode basis is
+# zero (enc == plaintext), and a distinct key's slot is its first-occurrence
+# rank in the bucket.  Records whose bucket overflows (rank >= slots) SPILL:
+# they are reported per record in the BulkBuildReport instead of silently
+# dropped — exactly the records whose streamed insert would return ok=False.
+#
+# The same sweep over an existing table's occupied slots is ``compact()``:
+# extract live plaintext records in (bucket, slot) order, rebuild into zeroed
+# stores.  Slots densify to 0..count-1 per bucket, every live record
+# survives, and the output is a fixed point (compact . compact == compact) —
+# the migration inner loop the online-resize roadmap item needs.
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BulkBuildReport:
+    """Per-record outcome of a count-then-place sweep.
+
+    ``placed`` mirrors the streamed-insert oracle's per-record ``ok``: True
+    iff the record's key is resident after the build (its value may have been
+    superseded by a later duplicate — last wins).  ``spilled`` marks live
+    records whose bucket overflowed (``rank >= slots``); the spill list is
+    the caller's records masked by it.  Arrays keep the caller's record
+    layout (flat ``[n]`` from :func:`bulk_build`, ``[T, N]`` step tensors
+    from the distributed builder)."""
+    bucket: jnp.ndarray    # int32 — global H3 bucket per record
+    slot: jnp.ndarray      # int32 — resident slot of the record's key
+    placed: jnp.ndarray    # bool — key resident (== streamed-insert ok)
+    spilled: jnp.ndarray   # bool — live record lost to bucket overflow
+    first: jnp.ndarray     # bool — first occurrence of its key in the batch
+    max_load: jnp.ndarray  # [] int32 — max distinct keys hashed to one bucket
+
+    def tree_flatten(self):
+        return (self.bucket, self.slot, self.placed, self.spilled,
+                self.first, self.max_load), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def spill_count(self) -> jnp.ndarray:
+        return jnp.sum(self.spilled.astype(jnp.int32))
+
+    def spill_indices(self):
+        """Host-side indices of spilled records (the reported spill list)."""
+        import numpy as np
+        return np.nonzero(np.asarray(self.spilled))[0]
+
+
+def _plan_bulk_build_np(keys, vals, bucket, live, buckets: int, slots: int):
+    """Host (numpy) implementation of the count-then-place plan — the same
+    two-sort algorithm as :func:`_plan_bulk_build_xla`, field-for-field
+    bit-exact (tests/test_bulk_build pins the equality).
+
+    Exists because the plan is sort-bound and host sorts beat XLA:CPU's
+    variadic comparison sort by ~4x (the same host-pass economics as the
+    bounded router's ``plan_bounded_route`` load pass).  Where the packed
+    sort key fits one uint64 word the variadic lexsort collapses to a single
+    quicksort; numpy's indirect sorts are stable, so the explicit program-
+    order tiebreak operand disappears entirely.
+    """
+    keys = np.asarray(keys)
+    vals = np.asarray(vals)
+    bucket = np.asarray(bucket, np.int32)
+    live = np.asarray(live, bool)
+    n, Wk = keys.shape
+    B, S = buckets, slots
+    idx = np.arange(n, dtype=np.int32)
+
+    # --- sort 1: group identical live keys, program order within group ----
+    if Wk == 1:
+        # dead-last bit + the key word in one uint64 quicksort (stable)
+        k1 = ((~live).astype(np.uint64) << np.uint64(32)
+              | keys[:, 0].astype(np.uint64))
+        order = np.argsort(k1, kind="stable").astype(np.int32)
+    else:
+        order = np.lexsort(tuple(keys[:, w] for w in range(Wk))
+                           + ((~live).astype(np.int8),)).astype(np.int32)
+    ks, live_s = keys[order], live[order]
+    prev_same = np.zeros(n, bool)
+    prev_same[1:] = ((ks[1:] == ks[:-1]).all(axis=-1)
+                     & live_s[1:] & live_s[:-1])
+    newg = live_s & ~prev_same
+    segfirst = np.maximum.accumulate(np.where(newg, idx, -1))
+    rep_s = order[np.clip(segfirst, 0, n - 1)]
+    is_end = live_s & np.concatenate([~prev_same[1:], [True]])
+    segend = np.minimum.accumulate(
+        np.where(is_end, idx, n)[::-1])[::-1]
+    val_last_s = vals[order][np.clip(segend, 0, n - 1)]
+
+    is_rep = np.zeros(n, bool)
+    is_rep[order] = newg
+    grp_rep = np.zeros(n, np.int32)
+    grp_rep[order] = rep_s
+    val_w = np.zeros_like(vals)
+    val_w[order] = val_last_s
+
+    # --- sort 2: rank representatives per bucket by first occurrence ------
+    b_bits = max(int(B - 1).bit_length(), 1)
+    i_bits = max(int(n - 1).bit_length(), 1)
+    if 1 + b_bits + i_bits <= 64:
+        k2 = ((~is_rep).astype(np.uint64) << np.uint64(b_bits + i_bits)
+              | bucket.astype(np.uint64) << np.uint64(i_bits)
+              | idx.astype(np.uint64))
+        order2 = np.argsort(k2).astype(np.int32)
+    else:                                     # pragma: no cover - B*n > 2^63
+        order2 = np.lexsort(
+            (bucket, (~is_rep).astype(np.int8))).astype(np.int32)
+    rep2, b2 = is_rep[order2], bucket[order2]
+    newb = rep2 & np.concatenate([[True], b2[1:] != b2[:-1]])
+    bstart = np.maximum.accumulate(np.where(newb, idx, -1))
+    rank = np.zeros(n, np.int32)
+    rank[order2] = idx - bstart
+
+    # --- placement + spill ------------------------------------------------
+    placed_rep = is_rep & (rank < S)
+    spilled_rep = is_rep & (rank >= S)
+    slot_per = rank[grp_rep]
+    spilled = live & spilled_rep[grp_rep]
+    placed = live & ~spilled
+    return dict(
+        w_bucket=np.where(placed_rep, bucket, np.int32(B)).astype(np.int32),
+        w_slot=np.where(placed_rep, rank, 0).astype(np.int32),
+        val_w=val_w,
+        slot=np.where(placed, slot_per, 0).astype(np.int32),
+        placed=placed, spilled=spilled, first=live & is_rep,
+        max_load=np.max(np.where(is_rep, rank + 1, 0),
+                        initial=0).astype(np.int32))
+
+
+def plan_bulk_build(keys: jnp.ndarray, vals: jnp.ndarray, bucket: jnp.ndarray,
+                    live: Optional[jnp.ndarray] = None, *, buckets: int,
+                    slots: int, host: Optional[bool] = None):
+    """The count-then-place plan, shared by every backend (the backends
+    differ only in how the planned records are placed).
+
+    Resolves ``n`` records (``keys [n, Wk]``, ``vals [n, Wv]``, ``bucket
+    [n]``; ``live`` masks padding lanes) into at most one write per distinct
+    key:
+
+      sort 1  stable-group identical live keys (program order within a
+              group): the group's FIRST occurrence is its representative —
+              it fixes the slot — and its LAST occurrence carries the
+              committed value (the streamed oracle's last-wins overwrite).
+      sort 2  rank representatives within their bucket by first occurrence;
+              rank == the slot a serialized insert stream would claim, since
+              port-0 inserts always take the first open slot.
+      spill   representatives with ``rank >= slots`` overflow; every
+              occurrence of such a key is reported spilled (its streamed
+              insert would find no match and no open slot -> ok=False).
+
+    ``host`` picks the implementation: the direct numpy pass (off-TPU
+    default — the arrays already live in host memory and host sorts are ~4x
+    faster than XLA:CPU's), or the pure-XLA two-lexsort path (the TPU
+    default — no device->host round trip).  Both are field-for-field
+    bit-exact.  The host pass needs CONCRETE arrays, so under a trace
+    (jit / scan / shard_map) the XLA path always runs — callers that want
+    the host plan keep ``bulk_build`` itself out of ``jax.jit`` and let its
+    internally-jitted placement stage do the compiling.  (A
+    ``jax.pure_callback`` bridge was tried and abandoned: XLA:CPU executes
+    the callback on the intra-op pool and ``pure_callback_impl``'s
+    ``device_put`` of large operands deadlocks against it.)
+
+    Returns a dict: ``w_bucket``/``w_slot`` ``[n]`` int32 write targets
+    (``buckets`` == masked, only representatives write), ``val_w [n, Wv]``
+    the group-last value at representative positions, and the report fields
+    ``slot``/``placed``/``spilled``/``first``/``max_load``.
+    """
+    n, Wk = keys.shape
+    B, S = buckets, slots
+    if n == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        zb = jnp.zeros((0,), jnp.bool_)
+        return dict(w_bucket=z, w_slot=z, val_w=jnp.zeros_like(vals),
+                    slot=z, placed=zb, spilled=zb, first=zb,
+                    max_load=jnp.zeros((), jnp.int32))
+    live = jnp.ones((n,), jnp.bool_) if live is None else live
+    if host is None:
+        host = jax.default_backend() != "tpu"
+    tracing = any(isinstance(x, jax.core.Tracer)
+                  for x in (keys, vals, bucket, live))
+    if host and not tracing:
+        # numpy outputs flow straight into the jitted placement call (its
+        # implicit device_put) — eagerly wrapping them here would just add
+        # eight dispatches
+        return _plan_bulk_build_np(np.asarray(keys), np.asarray(vals),
+                                   np.asarray(bucket), np.asarray(live),
+                                   buckets=B, slots=S)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    pos = idx
+
+    # --- sort 1: group identical live keys, program order within group ----
+    order = jnp.lexsort((idx,) + tuple(keys[:, w] for w in range(Wk))
+                        + ((~live).astype(jnp.int32),))
+    ks, live_s, idx_s = keys[order], live[order], idx[order]
+    prev_same = jnp.concatenate([
+        jnp.zeros((1,), jnp.bool_),
+        jnp.all(ks[1:] == ks[:-1], axis=-1) & live_s[1:] & live_s[:-1]])
+    newg = live_s & ~prev_same                       # group representatives
+    # first occurrence (the representative) per sorted position
+    segfirst = jax.lax.cummax(jnp.where(newg, pos, -1))
+    rep_s = idx_s[jnp.clip(segfirst, 0, n - 1)]
+    # last occurrence carries the committed value (last-wins)
+    is_end = live_s & jnp.concatenate([~prev_same[1:],
+                                       jnp.ones((1,), jnp.bool_)])
+    segend = jnp.flip(jax.lax.cummin(jnp.flip(jnp.where(is_end, pos, n))))
+    val_last_s = vals[order][jnp.clip(segend, 0, n - 1)]
+
+    is_rep = jnp.zeros((n,), jnp.bool_).at[idx_s].set(newg)
+    grp_rep = jnp.zeros((n,), jnp.int32).at[idx_s].set(rep_s)
+    val_w = jnp.zeros_like(vals).at[idx_s].set(val_last_s)
+
+    # --- sort 2: rank representatives per bucket by first occurrence ------
+    bkt = bucket.astype(jnp.int32)
+    order2 = jnp.lexsort((idx, bkt, (~is_rep).astype(jnp.int32)))
+    rep2, b2 = is_rep[order2], bkt[order2]
+    newb = rep2 & jnp.concatenate([jnp.ones((1,), jnp.bool_),
+                                   b2[1:] != b2[:-1]])
+    bstart = jax.lax.cummax(jnp.where(newb, pos, -1))
+    rank = jnp.zeros((n,), jnp.int32).at[order2].set(pos - bstart)
+
+    # --- placement + spill --------------------------------------------------
+    placed_rep = is_rep & (rank < S)
+    spilled_rep = is_rep & (rank >= S)
+    slot_per = rank[grp_rep]                  # group slot, at every occurrence
+    spilled = live & spilled_rep[grp_rep]
+    placed = live & ~spilled
+    return dict(
+        w_bucket=jnp.where(placed_rep, bkt, jnp.int32(B)),
+        w_slot=jnp.where(placed_rep, rank, 0),
+        val_w=val_w,
+        slot=jnp.where(placed, slot_per, 0),
+        placed=placed, spilled=spilled, first=live & is_rep,
+        max_load=jnp.max(jnp.where(is_rep, rank + 1, 0)).astype(jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("backend_name", "bucket_tiles"))
+def _place_into_stores(store_keys, store_vals, store_valid, w_bucket, w_slot,
+                       keys, val_w, *, backend_name: str,
+                       bucket_tiles: Optional[int] = None):
+    """The device half of a bulk placement: scatter the planned records into
+    the port-0 plane and broadcast it to every replica.  Jitted so the
+    eager host-planned path (``bulk_build`` outside ``jax.jit``) pays one
+    fused dispatch, not one per op; under an outer trace it inlines."""
+    be = get_backend(backend_name)
+    pk, pv, pb = be.bulk_place(
+        store_keys[0, 0], store_vals[0, 0], store_valid[0, 0],
+        w_bucket, w_slot, keys, val_w, bucket_tiles=bucket_tiles)
+    # every record writes port 0 of every replica (replica invariant)
+    return (store_keys.at[:, 0].set(pk), store_vals.at[:, 0].set(pv),
+            store_valid.at[:, 0].set(pb))
+
+
+def bulk_place_records(cfg: HashTableConfig, store_keys, store_vals,
+                       store_valid, bucket, keys, vals,
+                       live: Optional[jnp.ndarray] = None, *,
+                       bucket_base=0, backend: Optional[str] = None,
+                       bucket_tiles: Optional[int] = None):
+    """Count-then-place a flat record batch into (a partition of) empty
+    stores — the raw-array core shared by :func:`bulk_build`,
+    :func:`compact` and the shard_map distributed builder.
+
+    ``store_*`` ``[R, k, B, S, W*]`` hold global buckets ``[bucket_base,
+    bucket_base + B)`` and must be EMPTY over the placed range (all records
+    land in partial store 0, encode basis zero — the serialized-insert
+    oracle's layout).  ``bucket`` carries GLOBAL indices; records outside
+    the partition are treated as dead.  Returns ``(store_keys', store_vals',
+    store_valid', placed, spilled, slot, first, max_load)``.
+    """
+    Bl = store_keys.shape[2]
+    rel = bucket.astype(jnp.int32) - jnp.asarray(bucket_base, jnp.int32)
+    in_part = (rel >= 0) & (rel < Bl)
+    live = in_part if live is None else (live & in_part)
+    plan = plan_bulk_build(keys, vals, jnp.clip(rel, 0, Bl - 1), live,
+                           buckets=Bl, slots=store_keys.shape[3])
+    sk, sv, sb = _place_into_stores(
+        store_keys, store_vals, store_valid, plan["w_bucket"], plan["w_slot"],
+        keys, plan["val_w"], backend_name=_resolve_name(cfg, backend),
+        bucket_tiles=bucket_tiles)
+    return (sk, sv, sb, plan["placed"], plan["spilled"], plan["slot"],
+            plan["first"], plan["max_load"])
+
+
+def bulk_build(table: XorHashTable, keys: jnp.ndarray, vals: jnp.ndarray,
+               live: Optional[jnp.ndarray] = None,
+               backend: Optional[str] = None,
+               bucket_tiles: Optional[int] = None
+               ) -> Tuple[XorHashTable, BulkBuildReport]:
+    """Construct table state from a flat record batch in O(1) sweeps.
+
+    ``keys [n, Wk]`` / ``vals [n, Wv]`` (``live`` masks padding records).
+    The table must be EMPTY (fresh from ``init_table``); the result is
+    byte-identical to streaming the records through the insert path one
+    record per step (the serialized-insert oracle — tests/test_bulk_build).
+    Intra-batch duplicate keys resolve last-wins; bucket overflow degrades
+    to per-record spill reporting (``report.spilled``), never a silent
+    drop.  ``backend`` as in :func:`run_stream`; ``bucket_tiles`` pins the
+    placement kernel's sweep-pass count (auto-sized from the VMEM budget).
+    """
+    cfg = table.cfg
+    keys = jnp.asarray(keys).astype(jnp.uint32).reshape(-1, cfg.key_words)
+    vals = jnp.asarray(vals).astype(jnp.uint32).reshape(-1, cfg.val_words)
+    n = keys.shape[0]
+    if n == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        zb = jnp.zeros((0,), jnp.bool_)
+        return table, BulkBuildReport(bucket=z, slot=z, placed=zb,
+                                      spilled=zb, first=zb,
+                                      max_load=jnp.zeros((), jnp.int32))
+    name = _resolve_name(cfg, backend)
+    if name == "pallas":
+        from repro.kernels import ops as kops
+        bucket = kops.h3_hash(keys, table.q_masks)
+    else:
+        bucket = _h3_jnp(keys, table.q_masks)
+    sk, sv, sb, placed, spilled, slot, first, max_load = bulk_place_records(
+        cfg, table.store_keys, table.store_vals, table.store_valid,
+        bucket, keys, vals, live, backend=name, bucket_tiles=bucket_tiles)
+    report = BulkBuildReport(bucket=bucket.astype(jnp.int32), slot=slot,
+                             placed=placed, spilled=spilled, first=first,
+                             max_load=max_load)
+    return XorHashTable(table.q_masks, sk, sv, sb, cfg), report
+
+
+def extract_records(table: XorHashTable):
+    """Decode a table's live plaintext records in (bucket, slot) order.
+
+    Returns ``(keys [B*S, Wk], vals [B*S, Wv], live [B*S], bucket [B*S])``
+    — the input layout :func:`plan_bulk_build` expects, with ``bucket``
+    taken from slot POSITION (no rehash: a resident key already lives in
+    its H3 bucket, and position survives even without the H3 matrix)."""
+    pk, pv, pvalid = table.plaintext()
+    B, S, Wk = pk.shape
+    return (pk.reshape(B * S, Wk), pv.reshape(B * S, -1),
+            pvalid.reshape(B * S).astype(jnp.bool_),
+            jnp.repeat(jnp.arange(B, dtype=jnp.int32), S))
+
+
+def compact(table: XorHashTable, backend: Optional[str] = None,
+            bucket_tiles: Optional[int] = None) -> XorHashTable:
+    """Rewrite a fragmented table into dense slot occupancy: the bulk-build
+    sweep run over the table's own occupied slots.  Every live record
+    survives at its bucket (slots densify to ``0..count-1`` in slot order),
+    deleted/stale encodings vanish, and the output is canonical: idempotent
+    under re-compaction and a fixed point of fresh bulk builds.  Spill is
+    impossible (at most S live records per bucket come out of S slots)."""
+    cfg = table.cfg
+    keys, vals, live, bucket = extract_records(table)
+    sk, sv, sb, _, _, _, _, _ = bulk_place_records(
+        cfg, jnp.zeros_like(table.store_keys),
+        jnp.zeros_like(table.store_vals),
+        jnp.zeros_like(table.store_valid),
+        bucket, keys, vals, live, backend=backend, bucket_tiles=bucket_tiles)
+    return XorHashTable(table.q_masks, sk, sv, sb, cfg)

@@ -43,7 +43,8 @@ from repro.core.xor_memory import xor_reduce
 __all__ = [
     "OP_NOP", "OP_SEARCH", "OP_INSERT", "OP_DELETE",
     "XorHashTable", "QueryBatch", "StepResults",
-    "init_table", "apply_step", "run_stream", "schedule_queries",
+    "init_table", "apply_step", "run_stream", "bulk_build", "compact",
+    "schedule_queries",
 ]
 
 # Operation codes (OP_INSERT covers the paper's fused Insert/Update).
@@ -180,6 +181,29 @@ def run_stream(table: XorHashTable, ops: jnp.ndarray, keys: jnp.ndarray,
     return _engine_run_stream(table, ops, keys, vals, backend=backend,
                               fused=fused, bucket_tiles=bucket_tiles,
                               binned=binned)
+
+
+def bulk_build(table: XorHashTable, keys: jnp.ndarray, vals: jnp.ndarray,
+               live: jnp.ndarray | None = None, backend: str | None = None,
+               bucket_tiles: int | None = None):
+    """Construct an EMPTY table's state from a flat ``[n, Wk]``/``[n, Wv]``
+    record batch in O(1) count-then-place sweeps instead of O(n) streamed
+    insert steps — byte-identical to the serialized insert stream, with
+    last-wins duplicate resolution and per-record spill reporting.  Returns
+    ``(table, BulkBuildReport)``; see ``engine.bulk_build`` (DESIGN.md
+    §3.2)."""
+    from repro.core.engine import bulk_build as _engine_bulk_build
+    return _engine_bulk_build(table, keys, vals, live=live, backend=backend,
+                              bucket_tiles=bucket_tiles)
+
+
+def compact(table: XorHashTable, backend: str | None = None,
+            bucket_tiles: int | None = None) -> XorHashTable:
+    """Rewrite a fragmented table into dense slot occupancy — the bulk-build
+    sweep over the table's own live records.  Idempotent; preserves every
+    live record.  See ``engine.compact`` (DESIGN.md §3.2)."""
+    from repro.core.engine import compact as _engine_compact
+    return _engine_compact(table, backend=backend, bucket_tiles=bucket_tiles)
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,7 @@ __all__ = [
     "routed_width_lanes", "routed_exchange_bytes",
     "sharded_stream_modeled_mops",
     "serve_plan_seconds", "serve_loop_modeled",
+    "bulk_build_seconds", "bulk_build_modeled_mops",
 ]
 
 
@@ -163,6 +164,54 @@ def stream_modeled_mops(cfg: HashTableConfig, steps: int,
         sweep_s = 0.0
     step_s = lane_s + commit_s + sweep_s
     return n / step_s / 1e6
+
+
+# ---------------------------------------------------------------------------
+# Bulk-build (count-then-place) model, DESIGN.md §3.2.  The whole table is
+# constructed in O(1) sweeps over the record arrays plus ONE table round
+# trip, so the per-record cost is sort passes at memory bandwidth instead of
+# the streamed path's per-step dispatch + table traffic.  benchmarks/
+# roofline.py reports measured-vs-modeled for BENCH_bulk.json rows; the
+# streamed side of that A/B is :func:`stream_modeled_mops` with
+# ``fused=False`` (the scanned per-step insert path it replaces).
+# ---------------------------------------------------------------------------
+
+PLAN_SCAN_PASSES = 6.0      # segment/rank/scatter passes between the sorts
+
+
+def bulk_build_seconds(cfg: HashTableConfig, n: int,
+                       spec: TPUSpec = V5E) -> float:
+    """Count-then-place build time for ``n`` records.
+
+    Three terms:
+
+      sorts   two stable key sorts (group duplicates; rank per bucket), each
+              ``~log2 n`` data-parallel passes over the packed record rows
+              (key + value + bucket/slot words) at VMEM bandwidth — the
+              asymptotically dominant term, O(n log n) lane work in O(1)
+              dispatches.
+      plan    the fixed segment/cummax/scatter passes between the sorts
+              (:data:`PLAN_SCAN_PASSES` sweeps of the record rows).
+      sweep   ONE port-0 plane round trip over HBM (zeroed plane out, placed
+              plane in) — a replica/k of the table, once per BUILD, vs the
+              streamed path's full-table round trip per STEP.
+    """
+    import math
+    if n <= 0:
+        return 0.0
+    rec_bytes = n * 4 * (cfg.key_words + cfg.val_words + 2)
+    passes = 2 * max(math.log2(n), 1.0) + PLAN_SCAN_PASSES
+    sort_s = passes * rec_bytes / (spec.vmem_gbps * 1e9)
+    plane = memory_bytes(cfg) / cfg.replicas / cfg.k
+    sweep_s = 2.0 * plane / (spec.hbm_gbps * 1e9)
+    return sort_s + sweep_s
+
+
+def bulk_build_modeled_mops(cfg: HashTableConfig, n: int,
+                            spec: TPUSpec = V5E) -> float:
+    """Records per second (in MOPS) for one count-then-place build."""
+    s = bulk_build_seconds(cfg, n, spec=spec)
+    return n / s / 1e6 if s else 0.0
 
 
 # ---------------------------------------------------------------------------

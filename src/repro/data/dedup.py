@@ -4,6 +4,14 @@ The data-pipeline integration of the hash table (DESIGN.md §4): every incoming
 sequence is content-hashed to a 64-bit key; a batched SEARCH filters
 duplicates and a batched INSERT admits new ones — the exact bulk S+I workload
 FASTHash [12] was built for, here with DELETE available for eviction windows.
+
+The INITIAL corpus load (an empty table) takes the count-then-place bulk-build
+path instead (DESIGN.md §3.2): one ``bulk_build`` sweep replaces the per-chunk
+SEARCH+INSERT round trips AND the host-side ``np.unique`` intra-batch
+resolution — the plan's duplicate pass computes the first-occurrence mask
+(``report.first``), which on an empty table equals the streamed keep-mask
+bit-for-bit (including spilled keys, which the streamed path also keeps while
+their insert silently fails).  Incremental batches stay on the streamed path.
 """
 from __future__ import annotations
 
@@ -14,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (HashTableConfig, OP_INSERT, OP_SEARCH, QueryBatch,
-                        apply_step, init_table)
+                        apply_step, bulk_build, init_table)
 
 __all__ = ["StreamDeduper", "content_key"]
 
@@ -34,7 +42,9 @@ class StreamDeduper:
     """Batch-at-a-time dedup filter.
 
     ``filter_batch(seqs)`` returns the boolean keep-mask: True for sequences
-    whose content key was not present (and inserts them)."""
+    whose content key was not present (and inserts them).  The first batch
+    into an empty table is admitted with ONE ``bulk_build`` sweep; later
+    batches stream through the SEARCH+INSERT path."""
 
     def __init__(self, capacity_buckets: int = 1 << 14, slots: int = 4,
                  p: int = 8, seed: int = 0):
@@ -43,18 +53,26 @@ class StreamDeduper:
             val_words=1, replicate_reads=False, stagger_slots=True)
         self.table = init_table(self.cfg, jax.random.key(seed))
         self._step = jax.jit(apply_step)
+        self._empty = True
 
     def filter_batch(self, seqs: np.ndarray) -> np.ndarray:
         n = len(seqs)
         keys64 = np.array([content_key(s) for s in seqs], dtype=np.uint64)
+        keys = np.zeros((n, 2), np.uint32)
+        keys[:, 0] = (keys64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        keys[:, 1] = (keys64 >> np.uint64(32)).astype(np.uint32)
+        if self._empty and n:
+            # initial corpus load: count-then-place in one table round trip;
+            # the plan's duplicate pass IS the intra-batch resolution
+            self.table, report = bulk_build(
+                self.table, keys, np.ones((n, 1), np.uint32))
+            self._empty = False
+            return np.asarray(report.first)
         # intra-batch duplicates are resolved host-side (same-step inserts of
         # one key are within the relaxed-consistency window by design)
         _, first_idx = np.unique(keys64, return_index=True)
         intra_first = np.zeros(n, bool)
         intra_first[first_idx] = True
-        keys = np.zeros((n, 2), np.uint32)
-        keys[:, 0] = (keys64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
-        keys[:, 1] = (keys64 >> np.uint64(32)).astype(np.uint32)
         keep = np.zeros(n, bool)
         N = self.cfg.queries_per_step
         for start in range(0, n, N):
@@ -75,4 +93,5 @@ class StreamDeduper:
             batch2 = QueryBatch(jnp.array(op2), jnp.array(kk),
                                 jnp.array(np.ones((N, 1), np.uint32)))
             self.table, _ = self._step(self.table, batch2)
+        self._empty = self._empty and not keep.any()
         return keep

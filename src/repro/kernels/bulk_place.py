@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: binned bulk placement (DESIGN.md §3.2).
+
+The commit half of the count-then-place bulk build (``engine.bulk_build``).
+The plan (``engine.plan_bulk_build``) has already resolved duplicates and
+assigned every surviving representative record a pairwise-distinct
+``(bucket, slot)`` cell in the port-0 plane, so this kernel is pure
+placement: no probe, no XOR encode (the target stores are empty, so the
+encode basis is zero and plaintext IS the encoding), no supersession mask.
+
+Layout reuses the fused stream kernel's tile-binned dispatch
+(``kernels/xor_stream.py``, the HashGraph bin-then-process move), shrunk to
+the write-only case:
+
+  * an XLA-side pre-pass stable-sorts the records by bucket tile and emits a
+    ``[passes + 1]`` offsets table (scalar-prefetch operand) — masked records
+    (``bucket == B``) sort behind every window;
+  * grid step ``p`` loads its packed span ``[B/passes, S, Wk+Wv+1]`` from
+    the ``ANY``-space plane refs ONCE, walks ONLY its own record window
+    ``[offs[p], offs[p+1])`` with per-record ``dynamic_update_slice`` commits,
+    and writes the span back once — one plane round trip for the whole
+    build, work proportional to the record count;
+  * the plane outputs are ``input_output_aliases`` pairs, so untouched spans
+    never round-trip through fresh buffers.
+
+TPU-lowering caveat: same as the binned stream kernel — the span load/store
+accesses ``ANY``-space refs with plain indexing, which Mosaic only accepts
+via ``pltpu.make_async_copy`` for HBM-resident refs; the (mechanical)
+substitution at the two sites below is blocked on real-TPU access.  On this
+container everything runs under ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bulk_place_kernel(offs_ref, rec_ref, kin_ref, vin_ref, bin_ref,
+                       kout_ref, vout_ref, bout_ref, *, span_buckets: int,
+                       key_words: int, val_words: int):
+    p = pl.program_id(0)
+    Bs, Wk, Wv = span_buckets, key_words, val_words
+    wtot = Wk + Wv + 1
+
+    # span DMA: plane -> packed on-chip value once per pass, back once — the
+    # build's only full-plane traffic
+    tile0 = jnp.concatenate([
+        kin_ref[pl.ds(p * Bs, Bs)],
+        vin_ref[pl.ds(p * Bs, Bs)],
+        bin_ref[pl.ds(p * Bs, Bs)][..., None],
+    ], axis=-1)                                            # [Bs, S, Wtot]
+
+    rec = rec_ref[...]                                     # [n, 2+Wk+Wv]
+
+    def commit(i, tile):
+        r = jax.lax.dynamic_slice(rec, (i, 0), (1, 2 + Wk + Wv))[0]
+        b = r[0].astype(jnp.int32) - p * Bs
+        s = r[1].astype(jnp.int32)
+        row = jnp.concatenate(
+            [r[2:2 + Wk + Wv], jnp.ones((1,), jnp.uint32)]
+        ).reshape(1, 1, wtot)                              # key | val | valid
+        return jax.lax.dynamic_update_slice(tile, row, (b, s, 0))
+
+    tile = jax.lax.fori_loop(offs_ref[p], offs_ref[p + 1], commit, tile0)
+
+    kout_ref[pl.ds(p * Bs, Bs)] = tile[..., :Wk]
+    vout_ref[pl.ds(p * Bs, Bs)] = tile[..., Wk:Wk + Wv]
+    bout_ref[pl.ds(p * Bs, Bs)] = tile[..., wtot - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("bin_passes", "interpret"))
+def bulk_place_pallas(w_bucket: jnp.ndarray, w_slot: jnp.ndarray,
+                      keys: jnp.ndarray, vals: jnp.ndarray,
+                      plane_keys: jnp.ndarray, plane_vals: jnp.ndarray,
+                      plane_valid: jnp.ndarray, bin_passes: int = 1,
+                      interpret: bool = True):
+    """Place ``n`` pre-planned records into the port-0 plane.
+
+    ``w_bucket``/``w_slot`` ``[n]`` int32 (``bucket == B`` marks a masked
+    record); ``keys [n, Wk]`` / ``vals [n, Wv]`` uint32 plaintext;
+    ``plane_* [B, S, W*]`` (valid ``[B, S]``) ONE port's slice of one
+    replica.  ``bin_passes`` must be a power-of-two divisor of ``B`` —
+    residency-sized sweep passes, sized from the VMEM budget by
+    ``kernels.ops.bulk_place``.  Returns the updated planes.
+    """
+    B, S, Wk = plane_keys.shape
+    Wv = plane_vals.shape[-1]
+    if bin_passes < 1 or B % bin_passes:
+        raise ValueError(f"bin_passes={bin_passes} must divide buckets={B}")
+    n = w_bucket.shape[0]
+    wrec = 2 + Wk + Wv
+
+    # ---- XLA-side pre-pass: stable-sort records by bucket tile -----------
+    Bs = B // bin_passes
+    wb = w_bucket.astype(jnp.int32)
+    tile_id = jnp.where(wb < B, jnp.clip(wb, 0, B - 1) // Bs, bin_passes)
+    rec = jnp.concatenate([
+        wb.astype(jnp.uint32)[:, None], w_slot.astype(jnp.uint32)[:, None],
+        keys.astype(jnp.uint32), vals.astype(jnp.uint32)], axis=-1)
+    if n == 0:
+        rec = jnp.zeros((1, wrec), jnp.uint32)
+        offs = jnp.zeros((bin_passes + 1,), jnp.int32)
+    else:
+        order = jnp.argsort(tile_id, stable=True)
+        rec = rec[order]
+        # offs[j] == #records with tile id < j: pass p's window is
+        # [offs[p], offs[p+1]) and masked records fall past every window
+        offs = jnp.concatenate([
+            jnp.zeros((1,), jnp.int32),
+            jnp.sum(tile_id[:, None]
+                    < jnp.arange(1, bin_passes + 1, dtype=jnp.int32)[None, :],
+                    axis=0, dtype=jnp.int32)])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1, grid=(bin_passes,),
+        in_specs=[
+            pl.BlockSpec((rec.shape[0], wrec), lambda p, offs: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),          # HBM-resident
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=(
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ),
+    )
+    out_shapes = (
+        jax.ShapeDtypeStruct(plane_keys.shape, plane_keys.dtype),
+        jax.ShapeDtypeStruct(plane_vals.shape, plane_vals.dtype),
+        jax.ShapeDtypeStruct(plane_valid.shape, plane_valid.dtype),
+    )
+    return pl.pallas_call(
+        functools.partial(_bulk_place_kernel, span_buckets=Bs,
+                          key_words=Wk, val_words=Wv),
+        grid_spec=grid_spec, out_shape=out_shapes,
+        # the plane updates in place — fresh buffers would double the
+        # build's only full-plane traffic
+        input_output_aliases={2: 0, 3: 1, 4: 2},
+        interpret=interpret,
+    )(offs, rec, plane_keys, plane_vals, plane_valid)

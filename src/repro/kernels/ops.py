@@ -21,6 +21,7 @@ from repro.kernels.h3_hash import h3_hash_pallas
 from repro.kernels.xor_probe import xor_probe_pallas
 from repro.kernels.xor_commit import xor_commit_pallas
 from repro.kernels.xor_stream import xor_stream_pallas
+from repro.kernels.bulk_place import bulk_place_pallas
 
 # VMEM-resident table budget (one replica must fit alongside query blocks).
 VMEM_TABLE_BUDGET_BYTES = 96 * 1024 * 1024
@@ -155,3 +156,23 @@ def xor_stream(bucket: jnp.ndarray, port: jnp.ndarray, legal: jnp.ndarray,
                              interpret=not _on_tpu(), stagger=stagger,
                              bucket_base=bucket_base, binned=binned,
                              bin_passes=passes)
+
+
+def bulk_place(w_bucket: jnp.ndarray, w_slot: jnp.ndarray, keys: jnp.ndarray,
+               vals: jnp.ndarray, plane_keys: jnp.ndarray,
+               plane_vals: jnp.ndarray, plane_valid: jnp.ndarray,
+               bucket_tiles: int | None = None):
+    """Binned bulk placement of pre-planned records into the port-0 plane
+    (the commit half of ``engine.bulk_build`` — see bulk_place_pallas).
+    ``bucket_tiles`` pins the residency-sized sweep-pass count (a
+    power-of-two divisor of B); None sizes it so one span plus headroom fits
+    the VMEM budget — the plane is 1/k of a replica, so budget-fitting
+    tables place in ONE pass.  Engine's jnp backend scatter is the oracle.
+    """
+    if bucket_tiles is None:
+        bucket_tiles = stream_bucket_tiles(plane_keys[None], plane_vals[None],
+                                           plane_valid[None])
+    return bulk_place_pallas(w_bucket, w_slot, keys, vals, plane_keys,
+                             plane_vals, plane_valid,
+                             bin_passes=bucket_tiles,
+                             interpret=not _on_tpu())

@@ -157,6 +157,64 @@ class PrefixCache:
         return found, value[:, 0].astype(np.int64)
 
     # ----------------------------------------------------------------- admit
+    def bulk_admit(self, keys64: np.ndarray) -> np.ndarray:
+        """Cold-cache bulk admission: construct the whole page table in ONE
+        count-then-place sweep (engine.bulk_build, DESIGN.md §3.2) instead of
+        streamed INSERT rounds — the warm-start path when a serving process
+        boots with a known prefix corpus.  Requires an EMPTY cache.  Page
+        allocation stays host-side (pages are the inserted values, so they
+        must exist before the sweep); duplicate keys share their first
+        occurrence's page.  Spilled records degrade exactly like a failed
+        streamed insert: the page returns to the free list and the record
+        reports -1.  Returns page ids per input record (-1 == not admitted).
+        """
+        if self.lru:
+            raise ValueError("bulk_admit requires a cold (empty) cache")
+        keys64 = np.asarray(keys64, np.uint64)
+        n = len(keys64)
+        pages = np.full(n, -1, np.int64)
+        if n == 0:
+            return pages
+        vals = np.zeros((n, 2), np.uint32)
+        live = np.zeros(n, bool)
+        page_of: Dict[int, int] = {}
+        for i, k in enumerate(map(int, keys64)):
+            if k in page_of or not self.free_pages:
+                continue
+            pg = self.free_pages.pop()
+            page_of[k] = pg
+            vals[i, 0], vals[i, 1] = pg, 1
+            live[i] = True
+        keys = np.zeros((n, 2), np.uint32)
+        keys[:, 0] = (keys64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        keys[:, 1] = (keys64 >> np.uint64(32)).astype(np.uint32)
+        if self.cfg.shards > 1:
+            from repro.core.distributed import make_distributed_bulk_build
+            N = self.cfg.queries_per_step
+            T = -(-n // N)
+            kk = np.zeros((T * N, 2), np.uint32); kk[:n] = keys
+            vv = np.zeros((T * N, 2), np.uint32); vv[:n] = vals
+            lv = np.zeros(T * N, bool); lv[:n] = live
+            build = make_distributed_bulk_build(self.mesh, self.cfg)
+            self.table, report = build(
+                self.table, jnp.array(kk.reshape(T, N, 2)),
+                jnp.array(vv.reshape(T, N, 2)),
+                jnp.array(lv.reshape(T, N)))
+            spilled = np.asarray(report.spilled).reshape(T * N)[:n]
+        else:
+            from repro.core import bulk_build
+            self.table, report = bulk_build(self.table, keys, vals,
+                                            live=jnp.array(live))
+            spilled = np.asarray(report.spilled)
+        for i in np.nonzero(live & spilled)[0]:
+            self.free_pages.append(int(page_of.pop(int(keys64[i]))))
+        self.clock += 1
+        for k, pg in page_of.items():
+            self.lru[k] = self.clock
+        resident = np.array([page_of.get(int(k), -1) for k in keys64],
+                            np.int64)
+        return resident
+
     def admit_batch(self, keys64: np.ndarray) -> np.ndarray:
         """Insert blocks, allocating pages (evicting LRU if needed).
         Returns page ids (-1 when allocation failed)."""

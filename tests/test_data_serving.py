@@ -52,6 +52,47 @@ def test_dedup_intra_batch():
     assert list(keep) == [True, False, True]
 
 
+def test_dedup_bulk_initial_load_matches_streamed():
+    """The empty-table bulk_build path and the streamed SEARCH+INSERT path
+    must produce the same keep-masks and leave equivalent filter state."""
+    rng = np.random.default_rng(3)
+    seqs = np.stack([rng.integers(0, 50, 16).astype(np.uint32)
+                     for _ in range(40)])
+    batch1, batch2 = seqs[:25], seqs[15:]          # overlapping batches
+    bulk = StreamDeduper(capacity_buckets=1 << 8)
+    streamed = StreamDeduper(capacity_buckets=1 << 8)
+    streamed._empty = False                        # force the streamed path
+    assert bulk._empty
+    k1b = bulk.filter_batch(batch1)
+    assert not bulk._empty, "bulk load must mark the table warm"
+    k1s = streamed.filter_batch(batch1)
+    assert (k1b == k1s).all()
+    # incremental batch: both are on the streamed path now, and the bulk-built
+    # table must filter exactly like the streamed-built one
+    assert (bulk.filter_batch(batch2) == streamed.filter_batch(batch2)).all()
+
+
+def test_prefix_cache_bulk_admit_cold_start():
+    pc = PrefixCache(num_pages=64, p=8)
+    keys = np.arange(1, 25, dtype=np.uint64) * np.uint64(0x9E3779B97F4A7C15)
+    keys = np.concatenate([keys, keys[:5]])        # dups share their page
+    pages = pc.bulk_admit(keys)
+    assert (pages >= 0).all()
+    assert (pages[24:] == pages[:5]).all()
+    assert len(set(pages[:24].tolist())) == 24
+    hit, pg = pc.lookup_batch(keys[:24])
+    assert hit.all() and (pg == pages[:24]).all()
+    miss, _ = pc.lookup_batch(keys[:4] + np.uint64(1))
+    assert not miss.any()
+    with pytest.raises(ValueError):
+        pc.bulk_admit(keys)                        # warm cache refuses
+    # a bulk-admitted cache keeps serving the streamed admit/evict path
+    more = np.arange(100, 108, dtype=np.uint64) * np.uint64(999)
+    pc.admit_batch(more)
+    hit2, _ = pc.lookup_batch(more[-2:])
+    assert hit2.all()
+
+
 def test_chain_key_prefix_property():
     a = chain_key(0, np.array([1, 2, 3, 4]))
     b = chain_key(a, np.array([5, 6, 7, 8]))
