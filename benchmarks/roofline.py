@@ -17,7 +17,11 @@ BENCH_stream.json row is re-derived from ``perfmodel.stream_modeled_mops``
 measured column (scanned ~ serial commit, fused, blocked binned/unbinned).
 Off-TPU the measurement is interpret-mode CPU, so the interesting number is
 the RELATIVE shape (fused/blocked/binned ratios), not the absolute gap —
-both are printed.  Likewise for the continuous-batching serve loop: every
+both are printed.  The routed distributed stream gets the same treatment
+(BENCH_distributed.json x ``perfmodel.sharded_stream_modeled_mops`` /
+``replicated_read_mops``), including the 2-D replication A/B with its
+replica-broadcast copy factor.  Likewise for the continuous-batching serve
+loop: every
 BENCH_serve.json mode is re-derived from ``perfmodel.serve_loop_modeled``
 (plan-cache hit rate -> amortized planning, slab padding, double-buffer
 overlap), comparing measured and modeled MOPS and p50.
@@ -191,6 +195,91 @@ def bulk_measured_vs_modeled(path: str = "BENCH_bulk.json") -> list:
     return rows
 
 
+def distributed_measured_vs_modeled(path: str = "BENCH_distributed.json"
+                                    ) -> list:
+    """measured-vs-modeled rows for the routed distributed stream
+    (BENCH_distributed.json x perfmodel.sharded_stream_modeled_mops /
+    replicated_read_mops).
+
+    Sharded sweep rows: each router column is re-derived at the benchmark's
+    achieved routed shapes — skewproof at the fixed ``D * n_local`` width,
+    bounded at the recorded measured width.  The replication_ab section adds
+    the 2-D pair: flat 1-D at its bounded width vs the grouped mesh via
+    :func:`perfmodel.replicated_read_mops` (measured max per-(step, dest)
+    load + the replica-broadcast copy factor from the recorded mix and
+    per-shard load fractions).  Off-TPU the absolute gap is interpret/CPU
+    noise; the interesting number is agreement on the width-driven RATIOS
+    (bounded/skewproof, replicated/flat), which the model attributes
+    entirely to routed-width shrink net of broadcast copies."""
+    from repro.core.config import HashTableConfig
+    from repro.core.perfmodel import (replica_copy_factor,
+                                      replicated_read_mops,
+                                      sharded_stream_modeled_mops)
+    if not os.path.exists(path):
+        return []
+    bench = json.load(open(path))
+    rows = []
+    steps, nl = bench.get("steps", 16), bench.get("n_local", 8)
+    buckets = bench.get("buckets", 1 << 13)
+    for r in bench.get("rows", []):
+        d = r["shards"]
+        cfg = HashTableConfig(p=d, k=d, buckets=buckets, slots=2,
+                              queries_per_pe=nl, replicate_reads=False,
+                              stagger_slots=True, shards=d)
+        br = r["bounded_router"]
+        shapes = {
+            "mops_sharded_skewproof": dict(routed_width=None),
+            "mops_sharded_bounded": dict(routed_width=br["routed_width"],
+                                         routed_steps=br["routed_steps"]),
+        }
+        for col, kw in shapes.items():
+            if col not in r:
+                continue
+            modeled = sharded_stream_modeled_mops(cfg, steps, nl, **kw)
+            rows.append(dict(label=f"D{d}__{col}", measured_mops=r[col],
+                             modeled_mops=modeled,
+                             measured_over_modeled=r[col] / modeled))
+    ab = bench.get("replication_ab")
+    if ab:
+        steps, nl = ab["steps"], ab["n_local"]
+        nsq = ab["nsq_fraction"]
+        flat = ab["flat"]
+        cfg_f = HashTableConfig(p=flat["shards"], k=flat["shards"],
+                                buckets=buckets, slots=2, queries_per_pe=nl,
+                                replicate_reads=False, stagger_slots=True,
+                                shards=flat["shards"], router="bounded")
+        m_flat = sharded_stream_modeled_mops(
+            cfg_f, steps, nl, routed_width=flat["bounded_router"]
+            ["routed_width"], routed_steps=flat["bounded_router"]
+            ["routed_steps"], nsq_fraction=nsq)
+        rep = ab["replicated"]
+        cfg_r = HashTableConfig(p=ab["n_devices"], k=flat["shards"],
+                                buckets=buckets, slots=2, queries_per_pe=nl,
+                                replicate_reads=False, stagger_slots=True,
+                                shards=rep["shards"], router="bounded",
+                                replica_groups=tuple(rep["replica_groups"]))
+        frac = [g["shard_load_fraction"] for g in rep["group_occupancy"]]
+        max_dest = max(g["max_member_load"] for g in rep["group_occupancy"])
+        m_rep = replicated_read_mops(cfg_r, steps, nl,
+                                     max_dest_load=max_dest,
+                                     routed_steps=rep["bounded_router"]
+                                     ["routed_steps"], nsq_fraction=nsq,
+                                     shard_load_fraction=frac)
+        for label, meas, mod in (("flat", flat["mops"], m_flat),
+                                 ("replicated", rep["mops"], m_rep)):
+            rows.append(dict(label=f"replication_ab__{label}",
+                             measured_mops=meas, modeled_mops=mod,
+                             measured_over_modeled=meas / mod))
+        rows.append(dict(
+            label="replication_ab__ratio",
+            measured_mops=ab["replicated_over_flat"],
+            modeled_mops=m_rep / m_flat,
+            measured_over_modeled=(ab["replicated_over_flat"]
+                                   / (m_rep / m_flat)),
+            copy_factor=replica_copy_factor(cfg_r, nsq, frac)))
+    return rows
+
+
 def serve_measured_vs_modeled(path: str = "BENCH_serve.json") -> list:
     """measured-vs-modeled rows for the continuous-batching serve loop
     (BENCH_serve.json x perfmodel.serve_loop_modeled).
@@ -260,6 +349,14 @@ def main() -> None:
               f"modeled_MOPS={r['modeled_mops']:.1f};"
               f"measured_over_modeled={r['measured_over_modeled']:.2e};"
               f"bulk_over_streamed={r['bulk_over_streamed']:.2f}")
+    for r in distributed_measured_vs_modeled():
+        extra = (f";copy_factor={r['copy_factor']:.3f}"
+                 if "copy_factor" in r else "")
+        print(f"roofline_distributed__{r['label']},0.0,"
+              f"measured={r['measured_mops']:.3f};"
+              f"modeled={r['modeled_mops']:.1f};"
+              f"measured_over_modeled={r['measured_over_modeled']:.2e}"
+              + extra)
     for r in serve_measured_vs_modeled():
         print(f"roofline_serve__{r['mode']},0.0,"
               f"measured_MOPS={r['measured_mops']:.3f};"

@@ -13,6 +13,15 @@ Terminology maps 1:1 onto the paper:
            axis): each shard owns buckets/shards contiguous buckets, selected
            by the high bits of the H3 index (core.distributed; DESIGN.md
            §2.1).  1 == single memory domain.
+  replica_groups — per-shard device replica counts for the 2-D
+           (shard x replica) mesh (DESIGN.md §2.3): shard ``s`` is held by
+           ``replica_groups[s]`` devices, searches fan out round-robin across
+           them while mutations broadcast within the group.  The degrees may
+           differ per shard (load-aware hot-shard replication,
+           ``engine.plan_replication``), which is why the replica axis is a
+           logical addressing layer over a flat mesh rather than a
+           rectangular mesh dimension.  None == one device per shard (the
+           1-D mesh).
   replicate_reads — True  = paper-faithful: one replica per PE (p replicas).
                     False = TPU-native ('compact') variant: a single replica
                     per device; vector gathers are natively multi-ported on
@@ -60,6 +69,17 @@ class HashTableConfig:
                                     # high bits of the H3 bucket index select
                                     # the owner shard.  1 == single memory
                                     # domain (replicated when distributed).
+    replica_groups: Optional[Tuple[int, ...]] = None
+                                    # 2-D (shard x replica) mesh (DESIGN.md
+                                    # §2.3): replica_groups[s] devices hold
+                                    # identical copies of shard s's partition
+                                    # — searches fan out round-robin across
+                                    # the group, mutations broadcast within
+                                    # it.  Degrees may differ per shard
+                                    # (engine.plan_replication feeds the
+                                    # bounded router's measured skew forward:
+                                    # hot shards get more replicas).  None ==
+                                    # one device per shard (the 1-D mesh).
     router: str = "skewproof"       # sharded-stream routing policy
                                     # (DESIGN.md §2.2):
                                     # "skewproof" — fixed D*n_local routed
@@ -102,6 +122,33 @@ class HashTableConfig:
         if self.shards > self.buckets:
             raise ValueError(f"need shards <= buckets, got shards={self.shards}"
                              f" buckets={self.buckets}")
+        if self.replica_groups is not None:
+            if not isinstance(self.replica_groups, tuple):
+                object.__setattr__(self, "replica_groups",
+                                   tuple(int(g) for g in self.replica_groups))
+            if self.replicate_reads:
+                raise ValueError(
+                    f"replica_groups={self.replica_groups} with "
+                    f"replicate_reads=True: the distributed table uses the "
+                    f"compact per-device layout (replication happens across "
+                    f"devices via replica_groups, not within a chip) — set "
+                    f"replicate_reads=False")
+            if self.shards < 2:
+                raise ValueError(
+                    f"replica_groups={self.replica_groups} needs shards > 1 "
+                    f"(a shards=1 table is already fully replicated by the "
+                    f"distributed oracle — drop replica_groups or set "
+                    f"shards to the partition count)")
+            if len(self.replica_groups) != self.shards:
+                raise ValueError(
+                    f"replica_groups has {len(self.replica_groups)} degrees "
+                    f"but shards={self.shards}: give one replica degree per "
+                    f"shard (e.g. replica_groups={(1,) * self.shards} for "
+                    f"the unreplicated 1-D mesh)")
+            if any(g < 1 for g in self.replica_groups):
+                raise ValueError(
+                    f"replica_groups={self.replica_groups}: every shard "
+                    f"needs at least one replica (degree >= 1)")
         if self.router not in ("skewproof", "bounded"):
             raise ValueError(f"router must be skewproof|bounded, "
                              f"got {self.router!r}")
@@ -138,6 +185,67 @@ class HashTableConfig:
     def replicas(self) -> int:
         return self.p if self.replicate_reads else 1
 
+    # -- 2-D (shard x replica) mesh geometry (DESIGN.md §2.3) ---------------
+    # The mesh stays physically 1-D; the replica axis is logical addressing
+    # because load-aware degrees are ragged (a hot shard may hold 4 devices
+    # while a cold one holds 1), which no rectangular mesh axis can express.
+    # Device order is shard-major: group s owns the contiguous device range
+    # [group_offsets[s], group_offsets[s] + group_sizes[s]).
+
+    @property
+    def group_sizes(self) -> Tuple[int, ...]:
+        """Replica degree per shard (all-ones when unreplicated)."""
+        return (self.replica_groups if self.replica_groups is not None
+                else (1,) * self.shards)
+
+    @property
+    def group_offsets(self) -> Tuple[int, ...]:
+        """First device id of each shard's replica group (shard-major)."""
+        offs, acc = [], 0
+        for g in self.group_sizes:
+            offs.append(acc)
+            acc += g
+        return tuple(offs)
+
+    @property
+    def mesh_devices(self) -> int:
+        """Devices the distributed table occupies: sum of replica degrees
+        (== shards for the 1-D mesh, 1 for the undistributed table)."""
+        return sum(self.group_sizes) if self.shards > 1 else 1
+
+    @property
+    def max_group(self) -> int:
+        """Largest replica degree across shards."""
+        return max(self.group_sizes)
+
+    @property
+    def replicated(self) -> bool:
+        """True when any shard has cross-device replicas (degree > 1)."""
+        return self.replica_groups is not None and self.max_group > 1
+
+    def validate_mesh(self, n_dev: int, axis: str = "ht") -> None:
+        """The single distributed-entry validation path: every consumer of a
+        mesh (`init_distributed_table`, `make_distributed_stream`,
+        `make_distributed_bulk_build`, `make_distributed_compact`) calls this
+        so inconsistent configs fail in one place with a fix-it message."""
+        if self.shards <= 1:
+            return
+        if self.replicate_reads:
+            raise ValueError(
+                f"shards={self.shards} with replicate_reads=True: the "
+                f"distributed table uses the compact per-device layout "
+                f"(cross-device replication is replica_groups' job) — set "
+                f"replicate_reads=False")
+        if n_dev != self.mesh_devices:
+            want = (f"replica_groups={self.replica_groups} needs "
+                    f"sum(replica_groups)={self.mesh_devices} devices"
+                    if self.replica_groups is not None
+                    else f"shards={self.shards} needs one device per shard")
+            raise ValueError(
+                f"mesh axis {axis!r} has {n_dev} devices but {want} — build "
+                f"the mesh with make_ht_mesh({self.mesh_devices}) or adjust "
+                f"shards/replica_groups to match the device count")
+
     @property
     def nsq_ratio(self) -> float:
         return self.k / self.p
@@ -154,8 +262,10 @@ class HashTableConfig:
     def bounded_routed_width(self, max_owner_load: int, n_local: int,
                              slack=None, tile=None) -> int:
         """The bounded router's routed width (DESIGN.md §2.2): the measured
-        max per-(step, owner) load rounded up to the lane tile, clamped by
-        ``routed_slack`` and the skew-proof ceiling ``shards * n_local``.
+        max per-(step, dest) load rounded up to the lane tile, clamped by
+        ``routed_slack`` and the skew-proof ceiling ``mesh_devices *
+        n_local`` (== ``shards * n_local`` on the 1-D mesh; under
+        replica_groups the dests are devices, not shards).
         The single source of this arithmetic — ``engine.plan_bounded_route``
         picks the real exchange shape with it and
         ``perfmodel.routed_width_lanes`` models it, so the two cannot
@@ -165,7 +275,7 @@ class HashTableConfig:
         nr = round_up_lanes(max_owner_load, tile)
         if slack is not None:
             nr = max(1, min(nr, slack))
-        return min(nr, self.shards * n_local)
+        return min(nr, self.mesh_devices * n_local)
 
     def tree_flatten(self):  # static-only dataclass; handy for jit static args
         return (), self

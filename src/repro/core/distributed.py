@@ -37,6 +37,18 @@ capacity padding) — independent of table size.  Routed order is
 last-wins commit resolves duplicate targets exactly like the replicated
 oracle: the two mappings are bit-exact (tests/test_distributed_sharded.py).
 
+**2-D grouped** (``cfg.replica_groups`` — hot-shard read fan-out,
+DESIGN.md §2.3).  Same seam, but the route destination is a DEVICE: shard
+``s``'s partition is copied onto ``replica_groups[s]`` contiguous devices.
+Searches are served by ONE group member chosen per-origin round-robin
+(read fan-out: a hot shard's search load divides by its degree, shrinking
+the bounded router's measured width); mutations broadcast to every member
+(identical commit sequences on identical state keep the copies
+byte-identical), and ``engine.plan_replication`` turns the bounded
+router's measured per-shard skew into the degrees.  The mesh stays
+physically 1-D — degrees are ragged, so the replica axis is logical
+addressing (``HashTableConfig.group_offsets``).
+
 **Replicated** (``cfg.shards == 1`` — the semantic oracle, and the paper's
 literal PE array).  Every device holds the entire table; one ring
 ``all_gather`` of encoded mutation records per step (the FPGA inter-PE
@@ -72,8 +84,21 @@ __all__ = ["make_ht_mesh", "init_distributed_table", "make_distributed_step",
            "make_distributed_compact"]
 
 
-def make_ht_mesh(n_devices: int | None = None, axis: str = "ht") -> Mesh:
+def make_ht_mesh(n_devices: int | None = None, axis: str = "ht",
+                 replica_groups: tuple[int, ...] | None = None) -> Mesh:
+    """Build the table's device mesh.
+
+    The mesh is physically 1-D even under ``replica_groups`` (the 2-D
+    (shard x replica) mapping, DESIGN.md §2.3): load-aware replica degrees
+    are ragged — a hot shard may hold 4 devices while a cold one holds 1 —
+    which no rectangular mesh axis can express, so the replica axis is
+    logical addressing over device order (shard-major contiguous groups,
+    ``HashTableConfig.group_offsets``).  Pass ``replica_groups`` (or
+    ``n_devices = cfg.mesh_devices``) to size the axis.
+    """
     devs = jax.devices()
+    if n_devices is None and replica_groups is not None:
+        n_devices = sum(replica_groups)
     n = n_devices or len(devs)
     return jax.make_mesh((n,), (axis,))
 
@@ -88,22 +113,26 @@ def init_distributed_table(cfg: HashTableConfig, rng: jax.Array,
     with its bucket axis sharded over ``mesh``'s ``axis`` — each device
     materializes only its ``cfg.local_buckets``-bucket partition, so
     capacity scales with the mesh.  The H3 matrix spans the global index
-    space either way and is replicated.
+    space either way and is replicated.  Under ``cfg.replica_groups`` the
+    physical bucket dim is ``mesh_devices * local_buckets``: every device in
+    shard ``s``'s replica group holds an identical copy of ``s``'s
+    partition (they start identical — all zeros — and the grouped exchange
+    broadcasts every mutation within the group, DESIGN.md §2.3).
     """
-    if cfg.replicate_reads:
-        raise ValueError("distributed table uses the compact per-device layout; "
-                         "set replicate_reads=False (replication happens across "
-                         "devices instead)")
     if cfg.shards == 1:
+        if cfg.replicate_reads:
+            raise ValueError(
+                "distributed table uses the compact per-device layout; set "
+                "replicate_reads=False (replication happens across devices "
+                "instead)")
         return init_table(cfg, rng)
     if mesh is None:
         raise ValueError("a bucket-sharded table (cfg.shards > 1) needs the "
                          "mesh to place its partitions")
     n_dev = mesh.shape[axis]
-    if cfg.shards != n_dev:
-        raise ValueError(f"cfg.shards={cfg.shards} != mesh axis "
-                         f"{axis!r} size {n_dev}")
-    R, k, B, S = cfg.replicas, cfg.k, cfg.buckets, cfg.slots
+    cfg.validate_mesh(n_dev, axis)
+    R, k, S = cfg.replicas, cfg.k, cfg.slots
+    B = n_dev * cfg.local_buckets       # == cfg.buckets when unreplicated
     shard_b = NamedSharding(mesh, P(None, None, axis))   # bucket axis (dim 2)
     rep = NamedSharding(mesh, P())
     zeros = lambda shape: jax.jit(lambda: jnp.zeros(shape, jnp.uint32),
@@ -145,9 +174,8 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
     """
     from jax.experimental.shard_map import shard_map
     n_dev = mesh.shape[axis]
-    if cfg.shards not in (1, n_dev):
-        raise ValueError(f"cfg.shards must be 1 (replicated) or the mesh "
-                         f"axis size {n_dev}, got {cfg.shards}")
+    if cfg.shards != 1:
+        cfg.validate_mesh(n_dev, axis)
     router = cfg.router if router is None else router
 
     if cfg.shards == 1:
@@ -190,6 +218,10 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
         check_rep=False,
     ))
 
+    # device d's partition start: shard_of[d] (2-D grouped mapping) or d
+    # itself (1-D, where shard_of is the identity)
+    _shard_of = jnp.asarray(_engine.replica_layout(cfg)[0], jnp.int32)
+
     @functools.lru_cache(maxsize=None)
     def _skewproof_stream():
         def local_stream(table, ops, keys, vals):
@@ -197,14 +229,20 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
             T, n = ops.shape
             bucket = _h3(keys.reshape(T * n, cfg.key_words),
                          table.q_masks).reshape(T, n)
-            (r_op, r_key, r_val, r_bkt), tgt = _engine.route_stream(
-                cfg, axis, bucket, ops, keys, vals, bucket)
+            if cfg.replicated:
+                mut = ops >= _engine.OP_INSERT
+                (r_op, r_key, r_val, r_bkt), tgt = \
+                    _engine.route_stream_grouped(cfg, axis, bucket, mut,
+                                                 ops, keys, vals, bucket)
+            else:
+                (r_op, r_key, r_val, r_bkt), tgt = _engine.route_stream(
+                    cfg, axis, bucket, ops, keys, vals, bucket)
             # routed lane r belongs to origin device r // n == its PE
             pe = jnp.repeat(jnp.arange(n_dev, dtype=jnp.int32), n)
             sk, sv, sb, found, ok, value = _engine.run_stream_local(
                 cfg, table.store_keys, table.store_vals, table.store_valid,
                 pe, r_bkt, r_op, r_key, r_val,
-                bucket_base=d * cfg.local_buckets,
+                bucket_base=_shard_of[d] * cfg.local_buckets,
                 fused=fused, bucket_tiles=bucket_tiles, binned=binned)
             f_l, ok_l, v_l = _engine.inverse_route(axis, tgt, found, ok, value)
             table = XorHashTable(table.q_masks, sk, sv, sb, cfg)
@@ -229,6 +267,14 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
                      q_masks).reshape(T, N)
         return _engine.route_load_pass(cfg, _engine.shard_owner(cfg, bucket))
 
+    @jax.jit
+    def _measure_grouped(keys, ops, q_masks):
+        T, N = keys.shape[:2]
+        bucket = _h3(keys.reshape(T * N, cfg.key_words),
+                     q_masks).reshape(T, N)
+        return _engine.route_load_pass_grouped(
+            cfg, _engine.shard_owner(cfg, bucket), ops >= _engine.OP_INSERT)
+
     # pass 1 should not run as an n_dev-way SPMD program just because
     # q_masks is mesh-replicated (per-call dispatch over the mesh costs more
     # than the whole measurement): when the query tensors live on ONE
@@ -241,16 +287,23 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
     # is an incompatible-devices error.
     _qm_slot: list = [None, None, None]     # [source array, device, copy]
 
-    def _measure_loads(keys, q_masks):
+    def _measure_loads(keys, q_masks, ops=None):
+        if cfg.replicated and ops is None:
+            raise ValueError(
+                "measuring a replicated (replica_groups) stream needs the "
+                "ops tensor: copy loads depend on which lanes are mutations "
+                "(the group broadcast) — pass ops to measure()/plan()")
+        run = ((lambda k_, qm: _measure_grouped(k_, ops, qm))
+               if cfg.replicated else _measure)
         devs = keys.devices() if isinstance(keys, jax.Array) else None
         if devs is None or len(devs) != 1:
-            return _measure(keys, q_masks)      # sharded queries: SPMD pass
+            return run(keys, q_masks)           # sharded queries: SPMD pass
         dev = next(iter(devs))
         if _qm_slot[0] is not q_masks or _qm_slot[1] != dev:
             _qm_slot[0] = q_masks
             _qm_slot[1] = dev
             _qm_slot[2] = jax.device_put(jax.device_get(q_masks), dev)
-        return _measure(keys, _qm_slot[2])
+        return run(keys, _qm_slot[2])
 
     @functools.lru_cache(maxsize=None)
     def _bounded_inner(q_cap: int, nr: int, tr: int):
@@ -259,14 +312,20 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
             T, n = ops.shape
             bucket = _h3(keys.reshape(T * n, cfg.key_words),
                          table.q_masks).reshape(T, n)
-            routed, pe, carry = _engine.route_stream_bounded(
-                cfg, axis, bucket, ops, keys, vals, bucket,
-                pair_capacity=q_cap, routed_width=nr, routed_steps=tr)
+            if cfg.replicated:
+                mut = ops >= _engine.OP_INSERT
+                routed, pe, carry = _engine.route_stream_grouped_bounded(
+                    cfg, axis, bucket, mut, ops, keys, vals, bucket,
+                    pair_capacity=q_cap, routed_width=nr, routed_steps=tr)
+            else:
+                routed, pe, carry = _engine.route_stream_bounded(
+                    cfg, axis, bucket, ops, keys, vals, bucket,
+                    pair_capacity=q_cap, routed_width=nr, routed_steps=tr)
             r_op, r_key, r_val, r_bkt = routed
             sk, sv, sb, found, ok, value = _engine.run_stream_local(
                 cfg, table.store_keys, table.store_vals, table.store_valid,
                 pe, r_bkt, r_op, r_key, r_val,
-                bucket_base=d * cfg.local_buckets,
+                bucket_base=_shard_of[d] * cfg.local_buckets,
                 fused=fused, bucket_tiles=bucket_tiles, binned=binned)
             f_l, ok_l, v_l = _engine.inverse_route_bounded(
                 axis, carry, found, ok, value)
@@ -280,30 +339,34 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
     # plans and dispatches as separate stages so it can cache the frozen
     # (hashable) BoundedRoutePlan across same-shaped slabs instead of
     # re-deriving it inside the wrapper on every call.
-    def measure(table, keys):
+    def measure(table, keys, ops=None):
         """Pass 1, async: enqueue the jitted load histogram for ``keys``
         (``[T, N, Wk]``) and return the ``(loads [T, D], pair [D, D])``
         device arrays WITHOUT syncing — callers overlap the transfer with
-        in-flight stream work and ``device_get`` when they need values."""
-        return _measure_loads(keys, table.q_masks)
+        in-flight stream work and ``device_get`` when they need values.
+        ``D`` is the dest count: shards on the 1-D mesh, mesh devices under
+        ``replica_groups`` (which also needs ``ops`` — copy loads depend on
+        which lanes broadcast)."""
+        return _measure_loads(keys, table.q_masks, ops)
 
-    def make_plan(table, keys):
+    def make_plan(table, keys, ops=None):
         """Pass 1, blocking: measure ``keys`` and return the frozen
         :class:`~repro.core.engine.BoundedRoutePlan`."""
-        loads, pair = jax.device_get(measure(table, keys))
-        return _engine.plan_bounded_route(cfg, slack=slack, loads=loads,
-                                          pair=pair)
+        loads, pair = jax.device_get(measure(table, keys, ops))
+        return _engine.plan_bounded_route(
+            cfg, slack=slack, loads=loads, pair=pair,
+            n_local=keys.shape[1] // n_dev)
 
     def dispatch(table, ops, keys, vals, plan):
         """Pass 2: run the stream under an explicit ``plan`` (this wrapper's
         own, or a cached one whose ``plan.covers(...)`` check passed —
         caller's responsibility; an under-sized plan drops lanes)."""
         T, N = ops.shape
-        if plan.steps != T or plan.shards != cfg.shards:
+        if plan.steps != T or plan.shards != cfg.mesh_devices:
             raise ValueError(f"plan measured [T={plan.steps}, D="
                              f"{plan.shards}] but batch is [T={T}, D="
-                             f"{cfg.shards}] — plans only transfer between "
-                             f"equal-shaped streams")
+                             f"{cfg.mesh_devices}] — plans only transfer "
+                             f"between equal-shaped streams")
         # nothing to shrink: the measured width IS the worst case (and the
         # bounded no-carry exchange is the skew-proof one minus padding), so
         # skip the re-binning and take the jit-internal skew-proof path
@@ -323,7 +386,7 @@ def make_distributed_stream(mesh: Mesh, cfg: HashTableConfig,
                 ok=jnp.zeros((0, N), jnp.bool_),
                 bucket=jnp.zeros((0, N), jnp.uint32))
         if plan is None:
-            plan = make_plan(table, keys)
+            plan = make_plan(table, keys, ops)
         return dispatch(table, ops, keys, vals, plan)
 
     bounded_stream.router = "bounded"
@@ -360,11 +423,13 @@ def make_distributed_bulk_build(mesh: Mesh, cfg: HashTableConfig,
     """
     from jax.experimental.shard_map import shard_map
     n_dev = mesh.shape[axis]
-    if cfg.shards != n_dev:
-        raise ValueError(f"bulk build shards the bucket axis: cfg.shards="
-                         f"{cfg.shards} must equal the mesh axis size "
-                         f"{n_dev}")
+    cfg.validate_mesh(n_dev, axis)
     router = cfg.router if router is None else router
+    # under replica_groups every record broadcasts to its owner's whole
+    # group (mut=True for all lanes): each member runs the identical sweep
+    # on the identical record sequence, so the partitions stay identical;
+    # the serving copy carries the report home
+    _shard_of = jnp.asarray(_engine.replica_layout(cfg)[0], jnp.int32)
 
     table_spec = XorHashTable(P(), P(None, None, axis),
                               P(None, None, axis), P(None, None, axis), cfg)
@@ -387,7 +452,7 @@ def make_distributed_bulk_build(mesh: Mesh, cfg: HashTableConfig,
         sk, sv, sb, placed, spilled, slot, first, max_load = \
             _engine.bulk_place_records(
                 cfg, table.store_keys, table.store_vals, table.store_valid,
-                fb, fk, fv, fl, bucket_base=d * cfg.local_buckets,
+                fb, fk, fv, fl, bucket_base=_shard_of[d] * cfg.local_buckets,
                 backend=backend, bucket_tiles=bucket_tiles)
         shape = r_bkt.shape
         return (sk, sv, sb, placed.reshape(shape), spilled.reshape(shape),
@@ -401,8 +466,14 @@ def make_distributed_bulk_build(mesh: Mesh, cfg: HashTableConfig,
             T, n = live.shape
             bucket = _h3(keys.reshape(T * n, cfg.key_words),
                          table.q_masks).reshape(T, n)
-            (r_key, r_val, r_bkt, r_live), tgt = _engine.route_stream(
-                cfg, axis, bucket, keys, vals, bucket, live)
+            if cfg.replicated:
+                (r_key, r_val, r_bkt, r_live), tgt = \
+                    _engine.route_stream_grouped(
+                        cfg, axis, bucket, jnp.ones_like(live),
+                        keys, vals, bucket, live)
+            else:
+                (r_key, r_val, r_bkt, r_live), tgt = _engine.route_stream(
+                    cfg, axis, bucket, keys, vals, bucket, live)
             sk, sv, sb, placed, spilled, slot, first, max_load = _local_sweep(
                 table, r_bkt, r_key, r_val, r_live, d)
             p_l, s_l, sl_l, f_l = _engine.inverse_route(axis, tgt, placed,
@@ -419,9 +490,15 @@ def make_distributed_bulk_build(mesh: Mesh, cfg: HashTableConfig,
             T, n = live.shape
             bucket = _h3(keys.reshape(T * n, cfg.key_words),
                          table.q_masks).reshape(T, n)
-            routed, pe, carry = _engine.route_stream_bounded(
-                cfg, axis, bucket, keys, vals, bucket, live,
-                pair_capacity=q_cap, routed_width=nr, routed_steps=tr)
+            if cfg.replicated:
+                routed, pe, carry = _engine.route_stream_grouped_bounded(
+                    cfg, axis, bucket, jnp.ones_like(live),
+                    keys, vals, bucket, live,
+                    pair_capacity=q_cap, routed_width=nr, routed_steps=tr)
+            else:
+                routed, pe, carry = _engine.route_stream_bounded(
+                    cfg, axis, bucket, keys, vals, bucket, live,
+                    pair_capacity=q_cap, routed_width=nr, routed_steps=tr)
             r_key, r_val, r_bkt, r_live = routed
             # dead routed padding carries pe == D (zeros elsewhere too, but
             # the explicit live word is the single source of truth)
@@ -439,7 +516,11 @@ def make_distributed_bulk_build(mesh: Mesh, cfg: HashTableConfig,
         T, N = keys.shape[:2]
         bucket = _h3(keys.reshape(T * N, cfg.key_words),
                      q_masks).reshape(T, N)
-        return _engine.route_load_pass(cfg, _engine.shard_owner(cfg, bucket))
+        owner = _engine.shard_owner(cfg, bucket)
+        if cfg.replicated:      # every record is a broadcast "mutation"
+            return _engine.route_load_pass_grouped(
+                cfg, owner, jnp.ones((T, N), jnp.bool_))
+        return _engine.route_load_pass(cfg, owner)
 
     def build(table, keys, vals, live=None):
         T, N = keys.shape[:2]
@@ -455,7 +536,8 @@ def make_distributed_bulk_build(mesh: Mesh, cfg: HashTableConfig,
             fn = _skewproof_build()
         else:
             loads, pair = jax.device_get(_measure(keys, table.q_masks))
-            plan = _engine.plan_bounded_route(cfg, loads=loads, pair=pair)
+            plan = _engine.plan_bounded_route(cfg, loads=loads, pair=pair,
+                                              n_local=N // n_dev)
             if plan.routed_width >= plan.skewproof_width:
                 fn = _skewproof_build()
             else:
@@ -482,8 +564,7 @@ def make_distributed_compact(mesh: Mesh, cfg: HashTableConfig,
     end; same semantics per partition as ``engine.compact``."""
     from jax.experimental.shard_map import shard_map
     n_dev = mesh.shape[axis]
-    if cfg.shards != n_dev:
-        raise ValueError(f"cfg.shards={cfg.shards} != mesh axis size {n_dev}")
+    cfg.validate_mesh(n_dev, axis)
     table_spec = XorHashTable(P(), P(None, None, axis),
                               P(None, None, axis), P(None, None, axis), cfg)
 

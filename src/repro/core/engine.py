@@ -75,6 +75,9 @@ __all__ = [
     "BoundedRoutePlan", "plan_bounded_route", "route_load_pass",
     "route_stream_bounded",
     "inverse_route_bounded",
+    "replica_layout", "plan_replication", "replica_copy_mask",
+    "route_stream_grouped", "route_stream_grouped_bounded",
+    "route_load_pass_grouped",
     "BulkBuildReport", "plan_bulk_build", "bulk_place_records",
     "bulk_build", "extract_records", "compact",
     "register_backend", "get_backend", "resolve_backend", "available_backends",
@@ -839,8 +842,9 @@ class BoundedRoutePlan:
     routed_steps: int         # T': owner-side rows (T + drain rows)
     steps: int                # T: stream steps measured
     n_local: int              # lanes per origin device per step
-    shards: int               # D
-    max_owner_load: int       # max lanes routed to one owner in one step
+    shards: int               # D: route DESTINATIONS — owner shards on the
+                              # 1-D mesh, mesh devices under replica_groups
+    max_owner_load: int       # max lanes routed to one dest in one step
     mean_owner_load: float
     carried_lanes: int        # lanes served after their arrival step
     total_lanes: int
@@ -895,17 +899,23 @@ def route_load_pass(cfg: HashTableConfig, owner: jnp.ndarray):
 def plan_bounded_route(cfg: HashTableConfig, owner=None,
                        slack: Optional[int] = None,
                        tile: Optional[int] = None,
-                       loads=None, pair=None) -> BoundedRoutePlan:
+                       loads=None, pair=None,
+                       n_local: Optional[int] = None) -> BoundedRoutePlan:
     """Pass 1 of the bounded router: measure the trace, pick static shapes.
 
     ``owner`` is the GLOBAL ``[T, N]`` owner-shard matrix (``shard_owner`` of
     the H3 buckets; ``N = shards * n_local``, lanes origin-major) — or pass
     the precomputed ``loads [T, D]`` / ``pair [D, D]`` histograms from a
-    jitted :func:`route_load_pass` (plus ``n_local`` inferred from pair use)
-    to keep the hot path off the eager interpreter.  Pure numpy on the host
-    from there — the caller reads the plan's static fields and dispatches
-    the jitted exchange specialized on them.  ``slack``/``tile`` default to
-    ``cfg.routed_slack`` / ``cfg.routed_lane_tile``.
+    jitted :func:`route_load_pass` (or :func:`route_load_pass_grouped`, in
+    which case ``D`` is the MESH DEVICE count and the entries count copies,
+    mutation broadcast included) to keep the hot path off the eager
+    interpreter.  Pure numpy on the host from there — the caller reads the
+    plan's static fields and dispatches the jitted exchange specialized on
+    them.  ``slack``/``tile`` default to ``cfg.routed_slack`` /
+    ``cfg.routed_lane_tile``.  ``n_local`` (lanes per origin per step) is
+    inferred from the histograms when omitted — pass it explicitly for
+    grouped histograms, where copies outnumber lanes and the inference is
+    wrong.
     """
     import numpy as np
 
@@ -915,7 +925,7 @@ def plan_bounded_route(cfg: HashTableConfig, owner=None,
     if loads is None or pair is None:
         owner = np.asarray(owner)
         T, N = owner.shape
-        n = N // D
+        n = N // D if n_local is None else n_local
         if T == 0:
             w = min(_round_up_lanes(1, tile), D * n)
             return BoundedRoutePlan(pair_capacity=min(tile, n),
@@ -933,7 +943,11 @@ def plan_bounded_route(cfg: HashTableConfig, owner=None,
     else:
         loads, pair = np.asarray(loads), np.asarray(pair)
         T = loads.shape[0]
-        n = int(pair.sum()) // max(T * D, 1) if T else 1
+        D = loads.shape[1]          # dest count: shards (1-D) or mesh devices
+        if n_local is not None:
+            n = n_local
+        else:
+            n = int(pair.sum()) // max(T * D, 1) if T else 1
         if T == 0:
             w = min(_round_up_lanes(1, tile), D * n)
             return BoundedRoutePlan(pair_capacity=min(tile, n),
@@ -1097,6 +1111,209 @@ def inverse_route_bounded(axis: str, carry, *arrays: jnp.ndarray):
     backp = jnp.concatenate([back, jnp.zeros((1, w), jnp.uint32)])
     res = backp[jnp.clip(slot.reshape(-1), 0, back.shape[0])]
     return _unpack_u32(res.reshape(slot.shape + (w,)), meta)
+
+
+# ---------------------------------------------------------------------------
+# Stage four, grouped: the 2-D (shard x replica) mesh (DESIGN.md §2.3)
+#
+# Under ``cfg.replica_groups`` the route destination is a DEVICE, not a
+# shard: shard ``s``'s partition lives on the ``group_sizes[s]`` contiguous
+# devices starting at ``group_offsets[s]``.  Every query lane expands into a
+# set of COPIES —
+#
+#   search (and NOP padding): exactly one copy, to the lane's SERVING device
+#       — ``group_offsets[s] + serving_rank % group_sizes[s]`` where the
+#       serving rank is the lane's per-origin round-robin counter over prior
+#       same-shard lanes in (step, lane) program order (all ops count, so
+#       the host measurement pass can replay it without device state);
+#   mutation: one copy to EVERY device in the owner group (broadcast), so
+#       each group member applies the identical mutation sequence in program
+#       order and the partitions stay byte-identical — the serving device's
+#       copy carries the result home, the rest are discarded (they are
+#       identical anyway).
+#
+# Each origin lane sends at most one copy per destination, so the skew-proof
+# capacity argument (``n`` slots per (origin, dest) per step) survives
+# unchanged, and per-dest arrival order remains a program-order subsequence
+# — the bit-exactness argument of §2.1/§2.2 goes through verbatim with
+# D := mesh_devices.  ``inverse_route`` / ``inverse_route_bounded`` are
+# reused as-is: the carry addresses the serving copy only.
+# ---------------------------------------------------------------------------
+
+
+def replica_layout(cfg: HashTableConfig):
+    """Static device layout of the 2-D mesh: ``(shard_of, rank_of)`` tuples
+    of length ``cfg.mesh_devices`` — device ``d`` holds shard ``shard_of[d]``
+    as replica ``rank_of[d]`` (shard-major contiguous groups)."""
+    shard_of, rank_of = [], []
+    for s, g in enumerate(cfg.group_sizes):
+        shard_of.extend([s] * g)
+        rank_of.extend(range(g))
+    return tuple(shard_of), tuple(rank_of)
+
+
+def plan_replication(cfg: HashTableConfig, shard_loads,
+                     n_devices: int) -> Tuple[int, ...]:
+    """Convert measured per-shard load into per-shard replica degrees — the
+    bounded router's discarded skew histogram fed forward (ISSUE: hot shards
+    get more replicas, cold shards fewer, total devices fixed).
+
+    ``shard_loads`` ``[shards]``: any nonnegative load measure (the column
+    sums of :func:`route_load_pass`'s ``loads``, a search count, QPS...).
+    Largest-remainder proportional allocation with a floor of one device per
+    shard; deterministic (ties resolve to the lower shard id).  Returns a
+    tuple suitable for ``HashTableConfig.replica_groups`` with
+    ``sum == n_devices``.
+    """
+    S = cfg.shards
+    loads = np.asarray(shard_loads, np.float64).reshape(-1)
+    if loads.shape[0] != S:
+        raise ValueError(f"shard_loads has {loads.shape[0]} entries but "
+                         f"shards={S}")
+    if n_devices < S:
+        raise ValueError(f"n_devices={n_devices} < shards={S}: every shard "
+                         f"needs at least one device")
+    if loads.min() < 0:
+        raise ValueError("shard_loads must be nonnegative")
+    if loads.sum() <= 0:
+        loads = np.ones(S)
+    share = loads / loads.sum() * n_devices
+    deg = np.maximum(np.floor(share).astype(np.int64), 1)
+    rem = n_devices - int(deg.sum())
+    if rem > 0:
+        # +1 to the most under-allocated shards (largest share - deg, NOT
+        # the raw fractional part: a min-floor-bumped cold shard is already
+        # over its share and must not outrank the hot shard); ties resolve
+        # to the hotter share then the lower shard id
+        order = sorted(range(S),
+                       key=lambda s: (-(share[s] - deg[s]), -share[s], s))
+        for s in order[:rem]:
+            deg[s] += 1
+    while rem < 0:
+        # the min-1 floor over-allocated: reclaim from the most
+        # over-provisioned replicable shards (smallest share first)
+        cand = [s for s in range(S) if deg[s] > 1]
+        s = min(cand, key=lambda s: (share[s] - deg[s] + 1, s))
+        deg[s] -= 1
+        rem += 1
+    return tuple(int(g) for g in deg)
+
+
+def replica_copy_mask(cfg: HashTableConfig, owner: jnp.ndarray,
+                      mut: jnp.ndarray):
+    """Expand a ``[T, n]`` owner-shard matrix into the per-device copy mask.
+
+    Returns ``(mask [T, n, Dv] bool, serve [T, n] int32)``: ``mask[t, j, d]``
+    is True when lane ``(t, j)`` sends a copy to device ``d``; ``serve`` is
+    the lane's serving device (always masked).  ``mut`` ``[T, n]`` marks
+    mutations (``ops >= OP_INSERT``), which broadcast to the whole owner
+    group.  The serving rank counts ALL prior lanes of the same owner shard
+    on this origin in (step, lane) program order — identical arithmetic to
+    ``serving.serve_loop.measure_loads_host``'s numpy mirror, which is what
+    lets host-side plan caching replay it.
+    """
+    T, n = owner.shape
+    S, Dv = cfg.shards, cfg.mesh_devices
+    sizes = jnp.asarray(cfg.group_sizes, jnp.int32)             # [S]
+    offs = jnp.asarray(cfg.group_offsets, jnp.int32)            # [S]
+    shard_of = jnp.asarray(replica_layout(cfg)[0], jnp.int32)   # [Dv]
+    ow = owner.reshape(T * n).astype(jnp.int32)
+    oneh = (ow[:, None] == jnp.arange(S, dtype=jnp.int32)).astype(jnp.int32)
+    csum = jnp.cumsum(oneh, axis=0)                             # [T*n, S]
+    rank = jnp.take_along_axis(csum, ow[:, None], axis=1)[:, 0] - 1
+    serve = offs[ow] + rank % sizes[ow]                         # [T*n]
+    same = shard_of[None, :] == ow[:, None]                     # [T*n, Dv]
+    dev = jnp.arange(Dv, dtype=jnp.int32)
+    mask = same & (mut.reshape(T * n)[:, None]
+                   | (dev[None, :] == serve[:, None]))
+    return mask.reshape(T, n, Dv), serve.reshape(T, n).astype(jnp.int32)
+
+
+def route_stream_grouped(cfg: HashTableConfig, axis: str, bucket: jnp.ndarray,
+                         mut: jnp.ndarray, *arrays: jnp.ndarray):
+    """Skew-proof exchange on the 2-D mesh: :func:`route_stream` with the
+    owner-shard destination replaced by the per-device copy set of
+    :func:`replica_copy_mask`.  Capacity stays ``n`` slots per (origin,
+    dest) pair per step — each origin lane contributes at most one copy per
+    device — so arbitrary skew still cannot drop queries.  Returns
+    ``(routed_arrays, tgt)`` where ``tgt [T, n]`` addresses the SERVING
+    copy's routed position; pass it to :func:`inverse_route` unchanged.
+    """
+    D = jax.lax.psum(1, axis)                       # == cfg.mesh_devices
+    T, n = bucket.shape
+    owner = shard_owner(cfg, bucket)
+    mask, serve = replica_copy_mask(cfg, owner, mut)            # [T, n, D]
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1        # [T, n, D]
+    dev = jnp.arange(D, dtype=jnp.int32)
+    tgt = jnp.where(mask, dev[None, None, :] * n + pos, D * n)  # [T, n, D]
+    packed, meta = _pack_u32(arrays)                            # [T, n, W]
+    buf = jnp.zeros((T, D * n, packed.shape[-1]), jnp.uint32)
+    buf = buf.at[jnp.arange(T)[:, None, None], tgt].set(
+        packed[:, :, None, :], mode="drop")
+    routed = jax.lax.all_to_all(buf, axis, split_axis=1, concat_axis=1,
+                                tiled=True)
+    pos_serve = jnp.take_along_axis(pos, serve[..., None], axis=2)[..., 0]
+    return _unpack_u32(routed, meta), serve * n + pos_serve
+
+
+def route_stream_grouped_bounded(cfg: HashTableConfig, axis: str,
+                                 bucket: jnp.ndarray, mut: jnp.ndarray,
+                                 *arrays: jnp.ndarray, pair_capacity: int,
+                                 routed_width: int, routed_steps: int):
+    """Bounded exchange on the 2-D mesh: per-(origin, device) FIFOs over the
+    copy set.  Identical contract to :func:`route_stream_bounded` (plan the
+    shapes with :func:`plan_bounded_route` on
+    :func:`route_load_pass_grouped` histograms — they count copies, so the
+    mutation broadcast is priced into width and capacity); the returned
+    ``carry`` addresses the serving copy and feeds
+    :func:`inverse_route_bounded` unchanged.
+    """
+    D = jax.lax.psum(1, axis)                       # == cfg.mesh_devices
+    T, n = bucket.shape
+    Q, Nr, Tr = pair_capacity, routed_width, routed_steps
+    owner = shard_owner(cfg, bucket)
+    mask, serve = replica_copy_mask(cfg, owner, mut)
+    L = T * n
+    m = mask.reshape(L, D)
+    q = jnp.cumsum(m.astype(jnp.int32), axis=0) - 1             # [L, D]
+    dev = jnp.arange(D, dtype=jnp.int32)
+    slotm = jnp.where(m & (q < Q), dev[None, :] * Q + q, D * Q)  # [L, D]
+    packed, meta = _pack_u32(arrays)
+    W = packed.shape[-1]
+    tag = jnp.repeat(jnp.arange(T, dtype=jnp.int32) + 1, n).astype(jnp.uint32)
+    payload = jnp.concatenate([tag[:, None], packed.reshape(L, W)], axis=-1)
+    send = jnp.zeros((D * Q, W + 1), jnp.uint32)
+    send = send.at[slotm].set(payload[:, None, :], mode="drop")
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+    idx, origin = _bounded_recv_binning(recv[:, 0], D, Q, T, Tr, Nr)
+    routed = jnp.zeros((Tr * Nr, W), jnp.uint32)
+    routed = routed.at[idx].set(recv[:, 1:], mode="drop").reshape(Tr, Nr, W)
+    pe = jnp.full((Tr * Nr,), D, jnp.int32)
+    pe = pe.at[idx].set(origin, mode="drop").reshape(Tr, Nr)
+    slot_serve = jnp.take_along_axis(slotm.reshape(T, n, D),
+                                     serve[..., None], axis=2)[..., 0]
+    return _unpack_u32(routed, meta), pe, (slot_serve, idx)
+
+
+def route_load_pass_grouped(cfg: HashTableConfig, owner: jnp.ndarray,
+                            mut: jnp.ndarray):
+    """The grouped measurement pass: histogram the GLOBAL ``[T, N]`` owner
+    matrix (lanes origin-major, ``N = mesh_devices * n_local``) into
+    per-(step, device) copy loads ``[T, Dv]`` and per-(origin, device)
+    totals ``[Dv, Dv]``.  Entries count COPIES — a mutation lands in every
+    member of its owner group — so ``pair.sum()`` exceeds the lane count;
+    pass ``n_local`` explicitly to :func:`plan_bounded_route`.
+    """
+    T, N = owner.shape
+    Dv = cfg.mesh_devices
+    n = N // Dv
+    ob = owner.reshape(T, Dv, n).transpose(1, 0, 2)             # [Dv, T, n]
+    mb = mut.reshape(T, Dv, n).transpose(1, 0, 2)
+    masks = jax.vmap(
+        lambda o, mm: replica_copy_mask(cfg, o, mm)[0])(ob, mb)
+    mi = masks.astype(jnp.int32)                        # [Dv, T, n, Dv]
+    return mi.sum(axis=(0, 2)), mi.sum(axis=(1, 2))
 
 
 # ---------------------------------------------------------------------------

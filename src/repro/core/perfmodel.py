@@ -33,6 +33,7 @@ __all__ = [
     "tpu_modeled_mops", "stream_commit_seconds", "stream_modeled_mops",
     "routed_width_lanes", "routed_exchange_bytes",
     "sharded_stream_modeled_mops",
+    "replica_copy_factor", "replicated_read_mops",
     "serve_plan_seconds", "serve_loop_modeled",
     "bulk_build_seconds", "bulk_build_modeled_mops",
 ]
@@ -282,6 +283,83 @@ def sharded_stream_modeled_mops(cfg: HashTableConfig, steps: int,
     ici_s = routed_exchange_bytes(cfg, steps, n_local, width) \
         / (spec.ici_link_gbps * 1e9)
     return steps * d * n_local / (lane_s + commit_s + ici_s) / 1e6
+
+
+# ---------------------------------------------------------------------------
+# 2-D (shard x replica) mesh terms (DESIGN.md §2.3).  Replicating a hot
+# shard's partition over a group of g devices divides its SEARCH traffic by
+# g (round-robin fan-out), so the bounded router's measured max per-(step,
+# dest) load — hence the routed width every per-device term scales with —
+# shrinks toward the mean.  The price is the mutation broadcast: every
+# insert/delete ships one copy per group member, inflating routed traffic by
+# :func:`replica_copy_factor`.  The crossover is exactly the read-mix knob:
+# search-heavy skewed streams win, mutation-heavy ones pay g x the exchange
+# for no width relief.  benchmarks/roofline.py reports measured-vs-modeled
+# for BENCH_distributed.json's replication_ab section from these terms.
+# ---------------------------------------------------------------------------
+
+
+def replica_copy_factor(cfg: HashTableConfig, nsq_fraction: float = 0.5,
+                        shard_load_fraction: list | None = None) -> float:
+    """Mean routed copies per source lane under ``cfg.replica_groups``.
+
+    A search/NOP lane ships exactly one copy (to its round-robin serving
+    replica); a mutation lane broadcasts one copy per member of its owner
+    shard's group.  ``shard_load_fraction`` weights the per-shard group
+    sizes by the stream's measured owner distribution (uniform when None) —
+    a hot shard with a big group drags the factor up faster than a cold
+    one.  Degenerates to 1.0 on the 1-D mesh."""
+    if not cfg.replicated:
+        return 1.0
+    sizes = cfg.group_sizes
+    if shard_load_fraction is None:
+        w = [1.0 / len(sizes)] * len(sizes)
+    else:
+        tot = float(sum(shard_load_fraction))
+        w = ([1.0 / len(sizes)] * len(sizes) if tot <= 0
+             else [f / tot for f in shard_load_fraction])
+    mean_group = sum(ws * g for ws, g in zip(w, sizes))
+    return (1.0 - nsq_fraction) + nsq_fraction * mean_group
+
+
+def replicated_read_mops(cfg: HashTableConfig, steps: int, n_local: int,
+                         max_dest_load: int | None = None,
+                         routed_steps: int | None = None,
+                         nsq_fraction: float = 0.5,
+                         shard_load_fraction: list | None = None,
+                         spec: TPUSpec = V5E) -> float:
+    """Roofline MOPS for the routed stream on the 2-D grouped mesh.
+
+    Same three per-device terms as :func:`sharded_stream_modeled_mops`, with
+    the 2-D substitutions: destinations are the ``cfg.mesh_devices`` flat
+    devices (not owner shards), the routed width tracks the measured max
+    per-(step, DEST) load — the quantity replication shrinks, since a group
+    of g splits its shard's search load g ways — and the query-side exchange
+    carries :func:`replica_copy_factor` copies per lane while results return
+    only from each lane's serving replica.  Aggregate useful queries stay
+    ``steps * mesh_devices * n_local``: broadcast copies are overhead, not
+    throughput."""
+    import math
+    dv = cfg.mesh_devices
+    copies = replica_copy_factor(cfg, nsq_fraction, shard_load_fraction)
+    # broadcast floor: mean per-(step, dest) load is copies * n_local, so no
+    # measurement can shrink the width below it — the mutation-broadcast
+    # cost term, rising with the load-weighted mean group size
+    floor = cfg.bounded_routed_width(int(math.ceil(copies * n_local)),
+                                     n_local)
+    width = dv * n_local if max_dest_load is None \
+        else max(cfg.bounded_routed_width(max_dest_load, n_local), floor)
+    rows = steps if routed_steps is None else routed_steps
+    entry_bytes = 4 * cfg.entry_words
+    gather = cfg.k * cfg.slots * entry_bytes
+    scatter = nsq_fraction * entry_bytes
+    lane_s = rows * width * (gather + scatter) / (spec.vmem_gbps * 1e9)
+    commit_s = rows * 2 * width * VECTOR_LANE_NS * 1e-9
+    q_words = 3 + cfg.key_words + cfg.val_words
+    r_words = 2 + cfg.val_words
+    ici_bytes = 4 * (rows * width * q_words + steps * n_local * r_words)
+    ici_s = ici_bytes / (spec.ici_link_gbps * 1e9)
+    return steps * dv * n_local / (lane_s + commit_s + ici_s) / 1e6
 
 
 # ---------------------------------------------------------------------------

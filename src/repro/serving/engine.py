@@ -67,6 +67,14 @@ class ServeConfig:
                                         # (PrefixCache(router=); DESIGN.md
                                         # §2.2): "bounded" two-pass width or
                                         # the "skewproof" worst-case width
+    cache_replica_groups: Optional[Tuple[int, ...]] = None
+                                        # per-shard replica degrees for the
+                                        # 2-D (shard x replica) page-table
+                                        # mesh (PrefixCache(replica_groups=);
+                                        # DESIGN.md §2.3) — read-mostly
+                                        # prefix probing is exactly the
+                                        # workload hot-shard read fan-out
+                                        # pays off on.  None == 1-D
     # ---- TableServer / steady-state admission loop (DESIGN.md §4) ----
     slab_steps: int = 4                 # T: step rows per packed slab — every
                                         # dispatch sees the same [T, N] shape
@@ -112,6 +120,7 @@ class Engine:
         self.prefix_cache = PrefixCache(block_tokens=scfg.block_tokens,
                                         shards=scfg.cache_shards,
                                         router=scfg.cache_router,
+                                        replica_groups=scfg.cache_replica_groups,
                                         plan_cache_plans=scfg.plan_cache_plans)
         self._closed = False
         self.queue: List[Request] = []
@@ -310,9 +319,11 @@ class TableServer:
             return None
         if self._qm_host is None:
             self._qm_host = np.asarray(jax.device_get(self.table.q_masks))
-        loads, pair = measure_loads_host(self.cfg, self._qm_host, slab.keys)
-        plan, _ = self.plan_cache.lookup(loads, pair,
-                                         op_mix_bucket(slab.ops))
+        loads, pair = measure_loads_host(self.cfg, self._qm_host, slab.keys,
+                                         slab.ops)
+        plan, _ = self.plan_cache.lookup(
+            loads, pair, op_mix_bucket(slab.ops),
+            n_local=slab.keys.shape[1] // self.cfg.mesh_devices)
         return plan
 
     def _dispatch(self, slab) -> None:

@@ -53,14 +53,21 @@ class PrefixCache:
     def __init__(self, num_pages: int = 4096, block_tokens: int = 16,
                  p: int = 8, seed: int = 0, backend: str = "auto",
                  shards: int = 1, router: str = "bounded",
+                 replica_groups: Optional[Tuple[int, ...]] = None,
                  plan_cache_plans: int = 16):
         buckets = 1 << max(int(np.ceil(np.log2(max(num_pages, 2) * 2))), 4)
-        if p % shards:
-            raise ValueError(f"need p % shards == 0, got p={p} shards={shards}")
+        # under replica_groups (the 2-D hot-shard read fan-out mesh,
+        # DESIGN.md §2.3 — lookup_batch is search-only, the replicated
+        # sweet spot) lanes split over the replica total, not the shards
+        mesh_devices = sum(replica_groups) if replica_groups else shards
+        if p % mesh_devices:
+            raise ValueError(f"need p % mesh_devices == 0, got p={p} "
+                             f"mesh devices={mesh_devices} (shards={shards}"
+                             f", replica_groups={replica_groups})")
         self.cfg = HashTableConfig(
             p=p, k=p, buckets=buckets, slots=4, key_words=2, val_words=2,
             replicate_reads=False, stagger_slots=True, backend=backend,
-            shards=shards, router=router)
+            shards=shards, replica_groups=replica_groups, router=router)
         # probe+commit through the pluggable query engine (DESIGN.md §3/§4);
         # multi-step batches ride the stream seam — the fused xor_stream
         # kernel on pallas-capable backends, the scanned oracle on jnp.
@@ -72,7 +79,7 @@ class PrefixCache:
             from repro.core.distributed import (init_distributed_table,
                                                 make_distributed_stream,
                                                 make_ht_mesh)
-            self.mesh = make_ht_mesh(shards)
+            self.mesh = make_ht_mesh(self.cfg.mesh_devices)
             self.table = init_distributed_table(self.cfg, jax.random.key(seed),
                                                 self.mesh)
             self._stream = make_distributed_stream(self.mesh, self.cfg)
@@ -131,9 +138,11 @@ class PrefixCache:
             if self._qm_host is None:
                 self._qm_host = np.asarray(jax.device_get(self.table.q_masks))
             loads, pair = measure_loads_host(self.cfg, self._qm_host,
-                                             kk_t.reshape(T, N, 2))
-            plan, _ = self._plan_cache.lookup(loads, pair,
-                                              op_mix_bucket(op_t))
+                                             kk_t.reshape(T, N, 2),
+                                             op_t.reshape(T, N))
+            plan, _ = self._plan_cache.lookup(
+                loads, pair, op_mix_bucket(op_t),
+                n_local=N // self.cfg.mesh_devices)
             extra["plan"] = plan
         self.table, res = self._stream(
             self.table, jnp.array(op_t.reshape(T, N)),

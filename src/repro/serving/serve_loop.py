@@ -197,16 +197,49 @@ def h3_hash_host(keys: np.ndarray, q_masks: np.ndarray) -> np.ndarray:
 
 
 def measure_loads_host(cfg: HashTableConfig, q_masks: np.ndarray,
-                       keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+                       keys: np.ndarray,
+                       ops: Optional[np.ndarray] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
     """The bounded router's pass 1 on the host: ``[T, N, Wk]`` keys ->
     ``(loads [T, D], pair [D, D])``, bit-identical to the device
-    ``engine.route_load_pass`` histograms.  ``q_masks`` must be a host
-    (numpy) copy of ``table.q_masks``."""
+    ``engine.route_load_pass`` histograms — or, under ``cfg.replica_groups``
+    (where ``ops`` is required and ``D`` is the mesh-device count), to
+    ``engine.route_load_pass_grouped``'s per-device COPY histograms: the
+    numpy mirror replays the exact per-origin round-robin serving rank
+    (cumulative same-shard lane count in (step, lane) program order) and
+    the mutation group broadcast.  ``q_masks`` must be a host (numpy) copy
+    of ``table.q_masks``."""
     T, N = keys.shape[:2]
-    D = cfg.shards
-    n = N // D
     bucket = h3_hash_host(keys.reshape(T * N, -1), q_masks)
     owner = (bucket >> np.uint32(cfg.local_index_bits)).astype(np.int64)
+    if cfg.replicated:
+        if ops is None:
+            raise ValueError(
+                "measuring a replicated (replica_groups) stream needs the "
+                "ops tensor: copy loads depend on which lanes broadcast")
+        Dv = cfg.mesh_devices
+        n = N // Dv
+        mut = np.asarray(ops).reshape(T, N) >= OP_INSERT
+        ow = owner.reshape(T, N)
+        sizes = np.asarray(cfg.group_sizes, np.int64)
+        offs = np.asarray(cfg.group_offsets, np.int64)
+        shard_of = np.asarray(_engine.replica_layout(cfg)[0], np.int64)
+        dev = np.arange(Dv, dtype=np.int64)
+        loads = np.zeros((T, Dv), np.int64)
+        pair = np.zeros((Dv, Dv), np.int64)
+        for o in range(Dv):
+            ow_o = ow[:, o * n:(o + 1) * n].reshape(T * n)
+            mu_o = mut[:, o * n:(o + 1) * n].reshape(T * n)
+            oneh = ow_o[:, None] == np.arange(cfg.shards, dtype=np.int64)
+            rank = np.cumsum(oneh, axis=0)[np.arange(T * n), ow_o] - 1
+            serve = offs[ow_o] + rank % sizes[ow_o]
+            mask = ((shard_of[None, :] == ow_o[:, None])
+                    & (mu_o[:, None] | (dev[None, :] == serve[:, None])))
+            loads += mask.reshape(T, n, Dv).sum(axis=1)
+            pair[o] = mask.sum(axis=0)
+        return loads, pair
+    D = cfg.shards
+    n = N // D
     loads = np.bincount(
         (np.repeat(np.arange(T, dtype=np.int64), N) * D + owner),
         minlength=T * D).reshape(T, D)
@@ -276,15 +309,20 @@ class PlanCache:
                 "hit_rate": self.hit_rate}
 
     def lookup(self, loads: np.ndarray, pair: np.ndarray,
-               mix_bucket: int = 0) -> Tuple[BoundedRoutePlan, bool]:
+               mix_bucket: int = 0,
+               n_local: Optional[int] = None
+               ) -> Tuple[BoundedRoutePlan, bool]:
         """Resolve a plan for a batch measured as ``(loads, pair)`` (host
         histograms from :func:`measure_loads_host` or a device
         ``route_load_pass``).  Returns ``(plan, was_hit)``; on a miss the
-        fresh plan is cached (when cacheable) under the batch's key."""
+        fresh plan is cached (when cacheable) under the batch's key.
+        ``n_local`` must be passed for grouped (replica) histograms, whose
+        entries count copies — the lane-count inference would overshoot."""
         loads = np.asarray(loads)
         pair = np.asarray(pair)
         T, D = loads.shape
-        n_local = int(pair.sum()) // max(T * D, 1) if T else 1
+        if n_local is None:
+            n_local = int(pair.sum()) // max(T * D, 1) if T else 1
         max_load = int(loads.max()) if T else 0
         pair_max = int(pair.max()) if T else 0
         nr = self.cfg.bounded_routed_width(max_load, n_local, slack=self.slack)
@@ -296,7 +334,8 @@ class PlanCache:
             return plan, True
         self.misses += 1
         plan = _engine.plan_bounded_route(self.cfg, slack=self.slack,
-                                          loads=loads, pair=pair)
+                                          loads=loads, pair=pair,
+                                          n_local=n_local)
         if self.capacity > 0 and plan.covers(max_load, pair_max):
             self._plans[key] = plan
             self._plans.move_to_end(key)

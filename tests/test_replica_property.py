@@ -1,0 +1,133 @@
+"""Hypothesis property suite for the 2-D (shard x replica) mesh's pure copy
+arithmetic (engine.replica_copy_mask / route_load_pass_grouped /
+plan_replication) and its host mirror (serving.serve_loop.measure_loads_host).
+Owner matrices, mutation masks and group shapes are drawn unconstrained, so
+uniform, skewed and all-one-shard traffic all arise.  Invariants:
+
+  * read fan-out: every search/NOP lane ships EXACTLY one copy, to a member
+    of its owner shard's group, and consecutive same-shard lanes (in (step,
+    lane) program order per origin) round-robin across the group — per-member
+    serve counts within a shard differ by at most 1;
+  * mutation broadcast: every insert/delete lane ships exactly one copy to
+    EVERY member of its owner group and none elsewhere — the replica-
+    coherence guarantee (all members see all their shard's mutations);
+  * serving copy is always in the copy set (the carry path home);
+  * host mirror: ``measure_loads_host``'s numpy histograms are bit-identical
+    to the device ``route_load_pass_grouped`` — the equality the serve
+    loop's plan cache replays;
+  * plan_replication: degrees sum to ``n_devices``, every shard keeps >= 1
+    device, the hottest shard gets a maximal degree (monotone under the
+    largest-remainder allocation), and uniform loads with a divisible device
+    count allocate evenly.
+
+Guarded on hypothesis like tests/test_router_property.py."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import HashTableConfig  # noqa: E402
+from repro.core.engine import (OP_INSERT, plan_replication,  # noqa: E402
+                               replica_copy_mask, replica_layout,
+                               route_load_pass_grouped, shard_owner)
+from repro.core.hashing import h3_hash, make_h3_params  # noqa: E402
+from repro.serving.serve_loop import measure_loads_host  # noqa: E402
+
+
+def _cfg(groups):
+    return HashTableConfig(p=sum(groups), k=2, buckets=64, slots=2,
+                           replicate_reads=False, shards=len(groups),
+                           replica_groups=tuple(groups), router="bounded")
+
+
+@st.composite
+def copy_cases(draw):
+    S = draw(st.sampled_from([2, 4]))       # shards must be a power of two
+    groups = tuple(draw(st.lists(st.integers(1, 4), min_size=S, max_size=S)))
+    T = draw(st.integers(1, 4))
+    n = draw(st.integers(1, 6))
+    owner = draw(st.lists(st.integers(0, S - 1), min_size=T * n,
+                          max_size=T * n))
+    mut = draw(st.lists(st.booleans(), min_size=T * n, max_size=T * n))
+    return (groups, T, n, np.asarray(owner, np.int32).reshape(T, n),
+            np.asarray(mut, bool).reshape(T, n))
+
+
+@settings(max_examples=40, deadline=None)
+@given(case=copy_cases())
+def test_copy_mask_fanout_broadcast_and_round_robin(case):
+    groups, T, n, owner, mut = case
+    cfg = _cfg(groups)
+    shard_of = np.asarray(replica_layout(cfg)[0])
+    mask, serve = map(np.asarray, replica_copy_mask(
+        cfg, jnp.asarray(owner), jnp.asarray(mut)))
+    for t in range(T):
+        for j in range(n):
+            s = owner[t, j]
+            members = np.flatnonzero(shard_of == s)
+            copies = np.flatnonzero(mask[t, j])
+            assert mask[t, j, serve[t, j]], "serving copy must be in the set"
+            assert shard_of[serve[t, j]] == s, "serve outside owner group"
+            if mut[t, j]:
+                assert (copies == members).all(), \
+                    "mutation must broadcast to exactly the owner group"
+            else:
+                assert copies.tolist() == [serve[t, j]], \
+                    "search must ship exactly one copy"
+    # round-robin balance: per shard, the serve counts across its members
+    # differ by at most 1 (rank % group_size over program order)
+    for s in range(len(groups)):
+        members = np.flatnonzero(shard_of == s)
+        counts = [(serve.reshape(-1)[owner.reshape(-1) == s] == d).sum()
+                  for d in members]
+        assert max(counts) - min(counts) <= 1, (s, counts)
+
+
+@settings(max_examples=15, deadline=None)
+@given(case=copy_cases(), seed=st.integers(0, 2 ** 16))
+def test_host_mirror_matches_device_grouped_pass(case, seed):
+    groups, T, _, _, _ = case
+    cfg = _cfg(groups)
+    nl = 3
+    N = cfg.mesh_devices * nl
+    qm = make_h3_params(jax.random.key(seed), key_words=cfg.key_words,
+                        index_bits=cfg.index_bits)
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(1, 1 << 32, size=(T, N, cfg.key_words),
+                        dtype=np.uint32)
+    ops = rng.choice([0, 1, 2, 3], size=(T, N)).astype(np.int32)
+    bucket = h3_hash(jnp.asarray(keys.reshape(T * N, cfg.key_words)), qm)
+    owner = shard_owner(cfg, bucket).reshape(T, N)
+    ld, pd = route_load_pass_grouped(cfg, owner,
+                                     jnp.asarray(ops >= OP_INSERT))
+    lh, ph = measure_loads_host(cfg, np.asarray(jax.device_get(qm)), keys,
+                                ops)
+    np.testing.assert_array_equal(np.asarray(ld), lh)
+    np.testing.assert_array_equal(np.asarray(pd), ph)
+
+
+@settings(max_examples=60, deadline=None)
+@given(S=st.sampled_from([2, 4, 8]),
+       extra=st.integers(0, 12),
+       loads=st.lists(st.integers(0, 1 << 20), min_size=2, max_size=8))
+def test_plan_replication_totals_floor_and_monotonicity(S, extra, loads):
+    loads = (loads * S)[:S]
+    n_dev = S + extra
+    cfg = dataclasses.replace(_cfg((1,) * S), replica_groups=None)
+    deg = plan_replication(cfg, loads, n_dev)
+    assert sum(deg) == n_dev
+    assert min(deg) >= 1
+    if sum(loads) > 0 and loads.count(max(loads)) == 1:
+        # the STRICTLY hottest shard ends with a maximal degree (ties may
+        # legitimately resolve either way)
+        hottest = int(np.argmax(loads))
+        assert deg[hottest] == max(deg), (loads, deg)
+    # uniform loads with a divisible device count allocate evenly
+    if extra % S == 0:
+        even = plan_replication(cfg, [7] * S, n_dev)
+        assert len(set(even)) == 1, even
