@@ -136,7 +136,7 @@ def stream_measured_vs_modeled(path: str = "BENCH_stream.json") -> list:
     """measured-vs-modeled rows for the fused stream kernel
     (BENCH_stream.json x perfmodel.stream_modeled_mops)."""
     from repro.core.config import HashTableConfig
-    from repro.core.perfmodel import stream_modeled_mops
+    from repro.core.perfmodel import MIX_DEFAULT, stream_modeled_mops
     if not os.path.exists(path):
         return []
     bench = json.load(open(path))
@@ -164,7 +164,8 @@ def stream_measured_vs_modeled(path: str = "BENCH_stream.json") -> list:
             modeled = stream_modeled_mops(cfg, steps=r["steps"], **kw)
             rows.append(dict(steps=r["steps"], column=col,
                              measured_mops=r[col], modeled_mops=modeled,
-                             measured_over_modeled=r[col] / modeled))
+                             measured_over_modeled=r[col] / modeled,
+                             mix=MIX_DEFAULT.as_tuple()))
     return rows
 
 
@@ -191,7 +192,8 @@ def bulk_measured_vs_modeled(path: str = "BENCH_bulk.json") -> list:
         rows.append(dict(n=r["n"], keyset=r["keyset"],
                          measured_mops=r["mops_bulk"], modeled_mops=modeled,
                          measured_over_modeled=r["mops_bulk"] / modeled,
-                         bulk_over_streamed=r["bulk_over_streamed"]))
+                         bulk_over_streamed=r["bulk_over_streamed"],
+                         mix=(0.0, 1.0, 0.0, 0.0)))   # construction: all inserts
     return rows
 
 
@@ -212,7 +214,8 @@ def distributed_measured_vs_modeled(path: str = "BENCH_distributed.json"
     (bounded/skewproof, replicated/flat), which the model attributes
     entirely to routed-width shrink net of broadcast copies."""
     from repro.core.config import HashTableConfig
-    from repro.core.perfmodel import (replica_copy_factor,
+    from repro.core.perfmodel import (MIX_DEFAULT, as_mix,
+                                      replica_copy_factor,
                                       replicated_read_mops,
                                       sharded_stream_modeled_mops)
     if not os.path.exists(path):
@@ -238,7 +241,8 @@ def distributed_measured_vs_modeled(path: str = "BENCH_distributed.json"
             modeled = sharded_stream_modeled_mops(cfg, steps, nl, **kw)
             rows.append(dict(label=f"D{d}__{col}", measured_mops=r[col],
                              modeled_mops=modeled,
-                             measured_over_modeled=r[col] / modeled))
+                             measured_over_modeled=r[col] / modeled,
+                             mix=MIX_DEFAULT.as_tuple()))
     ab = bench.get("replication_ab")
     if ab:
         steps, nl = ab["steps"], ab["n_local"]
@@ -251,7 +255,7 @@ def distributed_measured_vs_modeled(path: str = "BENCH_distributed.json"
         m_flat = sharded_stream_modeled_mops(
             cfg_f, steps, nl, routed_width=flat["bounded_router"]
             ["routed_width"], routed_steps=flat["bounded_router"]
-            ["routed_steps"], nsq_fraction=nsq)
+            ["routed_steps"], mix=nsq)
         rep = ab["replicated"]
         cfg_r = HashTableConfig(p=ab["n_devices"], k=flat["shards"],
                                 buckets=buckets, slots=2, queries_per_pe=nl,
@@ -263,20 +267,21 @@ def distributed_measured_vs_modeled(path: str = "BENCH_distributed.json"
         m_rep = replicated_read_mops(cfg_r, steps, nl,
                                      max_dest_load=max_dest,
                                      routed_steps=rep["bounded_router"]
-                                     ["routed_steps"], nsq_fraction=nsq,
+                                     ["routed_steps"], mix=nsq,
                                      shard_load_fraction=frac)
+        ab_mix = as_mix(nsq).as_tuple()
         for label, meas, mod in (("flat", flat["mops"], m_flat),
                                  ("replicated", rep["mops"], m_rep)):
             rows.append(dict(label=f"replication_ab__{label}",
                              measured_mops=meas, modeled_mops=mod,
-                             measured_over_modeled=meas / mod))
+                             measured_over_modeled=meas / mod, mix=ab_mix))
         rows.append(dict(
             label="replication_ab__ratio",
             measured_mops=ab["replicated_over_flat"],
             modeled_mops=m_rep / m_flat,
             measured_over_modeled=(ab["replicated_over_flat"]
                                    / (m_rep / m_flat)),
-            copy_factor=replica_copy_factor(cfg_r, nsq, frac)))
+            copy_factor=replica_copy_factor(cfg_r, nsq, frac), mix=ab_mix))
     return rows
 
 
@@ -293,7 +298,7 @@ def serve_measured_vs_modeled(path: str = "BENCH_serve.json") -> list:
     RATIOS, which the model attributes entirely to amortized planning and
     overlap."""
     from repro.core.config import HashTableConfig
-    from repro.core.perfmodel import serve_loop_modeled
+    from repro.core.perfmodel import MIX_DEFAULT, as_mix, serve_loop_modeled
     if not os.path.exists(path):
         return []
     bench = json.load(open(path))
@@ -306,15 +311,20 @@ def serve_measured_vs_modeled(path: str = "BENCH_serve.json") -> list:
                           **table)
     rows = []
     for r in bench["rows"]:
+        # the bench may record the served op mix per mode; the model assumes
+        # the 50/50 default otherwise — either way the row reports it
+        mix = as_mix(tuple(r["op_mix"]) if "op_mix" in r else None)
         m = serve_loop_modeled(cfg, bench["slab_steps"],
                                hit_rate=r.get("hit_rate", 0.0),
                                pad_fraction=r.get("pad_fraction", 0.0),
-                               double_buffer=r.get("double_buffer", False))
+                               double_buffer=r.get("double_buffer", False),
+                               mix=mix)
         rows.append(dict(mode=r["mode"], measured_mops=r["mops"],
                          modeled_mops=m["mops"],
                          measured_p50_ms=r["p50_ms"],
                          modeled_p50_ms=m["p50_seconds"] * 1e3,
-                         measured_over_modeled=r["mops"] / m["mops"]))
+                         measured_over_modeled=r["mops"] / m["mops"],
+                         mix=mix.as_tuple()))
     return rows
 
 
@@ -338,17 +348,21 @@ def main() -> None:
               f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
               f"collective_s={r['collective_s']:.3e};dom={r['dominant']};"
               f"frac={r['roofline_frac']:.3f}")
+    # assumed search/insert/update/delete mix the model priced each row at
+    fmt_mix = lambda r: "mix=" + "/".join(f"{f:.2f}" for f in r["mix"])
     for r in stream_measured_vs_modeled():
         print(f"roofline_stream_T{r['steps']}__{r['column']},0.0,"
               f"measured_MOPS={r['measured_mops']:.3f};"
               f"modeled_MOPS={r['modeled_mops']:.1f};"
-              f"measured_over_modeled={r['measured_over_modeled']:.2e}")
+              f"measured_over_modeled={r['measured_over_modeled']:.2e};"
+              f"{fmt_mix(r)}")
     for r in bulk_measured_vs_modeled():
         print(f"roofline_bulk_{r['keyset']}_n{r['n']},0.0,"
               f"measured_MOPS={r['measured_mops']:.3f};"
               f"modeled_MOPS={r['modeled_mops']:.1f};"
               f"measured_over_modeled={r['measured_over_modeled']:.2e};"
-              f"bulk_over_streamed={r['bulk_over_streamed']:.2f}")
+              f"bulk_over_streamed={r['bulk_over_streamed']:.2f};"
+              f"{fmt_mix(r)}")
     for r in distributed_measured_vs_modeled():
         extra = (f";copy_factor={r['copy_factor']:.3f}"
                  if "copy_factor" in r else "")
@@ -356,14 +370,15 @@ def main() -> None:
               f"measured={r['measured_mops']:.3f};"
               f"modeled={r['modeled_mops']:.1f};"
               f"measured_over_modeled={r['measured_over_modeled']:.2e}"
-              + extra)
+              + extra + f";{fmt_mix(r)}")
     for r in serve_measured_vs_modeled():
         print(f"roofline_serve__{r['mode']},0.0,"
               f"measured_MOPS={r['measured_mops']:.3f};"
               f"modeled_MOPS={r['modeled_mops']:.1f};"
               f"measured_p50_ms={r['measured_p50_ms']:.3f};"
               f"modeled_p50_ms={r['modeled_p50_ms']:.3f};"
-              f"measured_over_modeled={r['measured_over_modeled']:.2e}")
+              f"measured_over_modeled={r['measured_over_modeled']:.2e};"
+              f"{fmt_mix(r)}")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,8 @@ from repro.core.hash_table import (
     bulk_build,
     compact,
     init_table,
+    pack_trace,
+    reconfigure,
     run_stream,
     schedule_queries,
 )
@@ -44,7 +46,7 @@ __all__ = [
     "OP_NOP", "OP_SEARCH", "OP_INSERT", "OP_DELETE",
     "QueryBatch", "StepResults", "XorHashTable",
     "apply_step", "init_table", "run_stream", "bulk_build", "compact",
-    "schedule_queries",
+    "reconfigure", "schedule_queries", "pack_trace",
     "h3_hash", "make_h3_params", "XorMemory", "xor_reduce",
     "engine", "ProbeResult", "MutationPlan", "BulkBuildReport",
 ]

@@ -32,7 +32,7 @@ Terminology maps 1:1 onto the paper:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
 __all__ = ["HashTableConfig", "sram_blocks_ours", "sram_blocks_laforest",
            "memory_bytes", "round_up_lanes"]
@@ -46,7 +46,12 @@ def round_up_lanes(x: int, tile: int) -> int:
 @dataclasses.dataclass(frozen=True)
 class HashTableConfig:
     p: int = 4                      # PEs == parallel queries per step-slice
-    k: int = 4                      # NSQ-capable PEs == partial XOR stores
+    k: Union[int, str] = 4          # NSQ-capable PEs == partial XOR stores;
+                                    # "auto" resolves the cheapest legal k via
+                                    # perfmodel.plan_geometry from op_mix (or
+                                    # the 50:50 default mix) at construction —
+                                    # requires replicate_reads=False (the
+                                    # planner owns the replica decision)
     buckets: int = 1024             # power of two
     slots: int = 2
     key_words: int = 1              # uint32 words: 1/2/4 == 32/64/128-bit
@@ -105,8 +110,36 @@ class HashTableConfig:
                                     # coarser tiles mean fewer jit
                                     # specializations (and TPU-friendly lane
                                     # alignment), finer tiles a tighter fit
+    op_mix: Optional[Tuple[float, ...]] = None
+                                    # declared workload mix (search, insert,
+                                    # update, delete) fractions — the input to
+                                    # k="auto" geometry planning and the
+                                    # default mix the perfmodel terms assume
+                                    # for this table.  None == unknown (the
+                                    # 50:50 search:NSQ default).
 
     def __post_init__(self):
+        if self.op_mix is not None:
+            mx = tuple(float(f) for f in self.op_mix)
+            if len(mx) != 4 or any(f < 0 for f in mx) or sum(mx) <= 0:
+                raise ValueError(
+                    f"op_mix must be 4 nonnegative (search, insert, update, "
+                    f"delete) fractions with a positive sum, got {self.op_mix}")
+            object.__setattr__(self, "op_mix", mx)
+        if self.k == "auto":
+            if self.replicate_reads:
+                raise ValueError(
+                    "k='auto' with replicate_reads=True: the geometry "
+                    "planner owns the replica decision and plans the compact "
+                    "per-device layout — set replicate_reads=False (or pick "
+                    "an explicit k for the paper-faithful replicated table)")
+            # lazy import: perfmodel imports this module at its top level
+            from repro.core.perfmodel import plan_geometry
+            base = dataclasses.replace(self, k=self.p)
+            plan = plan_geometry(base, self.op_mix)
+            object.__setattr__(self, "k", plan.k)
+        if not isinstance(self.k, int):
+            raise ValueError(f"k must be an int or 'auto', got {self.k!r}")
         if self.k < 1 or self.k > self.p:
             raise ValueError(f"need 1 <= k <= p, got k={self.k} p={self.p}")
         if self.backend not in ("auto", "jnp", "pallas"):
@@ -249,6 +282,20 @@ class HashTableConfig:
     @property
     def nsq_ratio(self) -> float:
         return self.k / self.p
+
+    @property
+    def replica_bytes(self) -> int:
+        """Bytes of ONE read replica of this geometry (k partial-store
+        planes of buckets x slots entries) — the unit the VMEM residency
+        check tiles against.  Computable for a planned-but-not-yet-built
+        geometry: no arrays needed, and for a built table it equals
+        ``kernels.ops.replica_bytes`` on the store arrays."""
+        return self.k * self.buckets * self.slots * 4 * self.entry_words
+
+    @property
+    def table_bytes(self) -> int:
+        """Total storage across replicas (== ``memory_bytes(cfg)``)."""
+        return self.replicas * self.replica_bytes
 
     @property
     def queries_per_step(self) -> int:

@@ -81,7 +81,7 @@ from repro.core.hashing import h3_hash as _h3, make_h3_params
 
 __all__ = ["make_ht_mesh", "init_distributed_table", "make_distributed_step",
            "make_distributed_stream", "make_distributed_bulk_build",
-           "make_distributed_compact"]
+           "make_distributed_compact", "make_distributed_reconfigure"]
 
 
 def make_ht_mesh(n_devices: int | None = None, axis: str = "ht",
@@ -576,6 +576,35 @@ def make_distributed_compact(mesh: Mesh, cfg: HashTableConfig,
 
     return jax.jit(shard_map(body, mesh=mesh, in_specs=(table_spec,),
                              out_specs=table_spec, check_rep=False))
+
+
+def make_distributed_reconfigure(mesh: Mesh, cfg: HashTableConfig,
+                                 new_cfg: HashTableConfig, axis: str = "ht",
+                                 backend: str | None = None,
+                                 bucket_tiles: int | None = None):
+    """Shard-local geometry migration: every owner re-places its own
+    partition's records into the new ``(replicas, k)`` store shape (records
+    stay at their owners — the bucket axis is untouched — so like
+    :func:`make_distributed_compact` no exchange is needed).  Returns
+    ``f(table) -> table`` holding ``new_cfg``-shaped partitions; same
+    record-set contract per partition as ``engine.reconfigure``."""
+    from jax.experimental.shard_map import shard_map
+    n_dev = mesh.shape[axis]
+    cfg.validate_mesh(n_dev, axis)
+    new_cfg.validate_mesh(n_dev, axis)
+    in_spec = XorHashTable(P(), P(None, None, axis),
+                           P(None, None, axis), P(None, None, axis), cfg)
+    out_spec = XorHashTable(P(), P(None, None, axis),
+                            P(None, None, axis), P(None, None, axis), new_cfg)
+
+    def body(table):
+        local = XorHashTable(table.q_masks, table.store_keys,
+                             table.store_vals, table.store_valid, cfg)
+        return _engine.reconfigure(local, new_cfg, backend=backend,
+                                   bucket_tiles=bucket_tiles)
+
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=(in_spec,),
+                             out_specs=out_spec, check_rep=False))
 
 
 def make_distributed_step(mesh: Mesh, cfg: HashTableConfig, axis: str = "ht"):

@@ -79,7 +79,7 @@ __all__ = [
     "route_stream_grouped", "route_stream_grouped_bounded",
     "route_load_pass_grouped",
     "BulkBuildReport", "plan_bulk_build", "bulk_place_records",
-    "bulk_build", "extract_records", "compact",
+    "bulk_build", "extract_records", "compact", "reconfigure",
     "register_backend", "get_backend", "resolve_backend", "available_backends",
 ]
 
@@ -1684,3 +1684,52 @@ def compact(table: XorHashTable, backend: Optional[str] = None,
         jnp.zeros_like(table.store_valid),
         bucket, keys, vals, live, backend=backend, bucket_tiles=bucket_tiles)
     return XorHashTable(table.q_masks, sk, sv, sb, cfg)
+
+
+RECONFIGURE_FROZEN_FIELDS = ("p", "buckets", "slots", "key_words",
+                             "val_words", "queries_per_pe", "stagger_slots",
+                             "shards", "replica_groups")
+
+
+def reconfigure(table: XorHashTable, new_cfg: HashTableConfig,
+                backend: Optional[str] = None,
+                bucket_tiles: Optional[int] = None) -> XorHashTable:
+    """Migrate a live table into a different XOR-memory geometry.
+
+    ``new_cfg`` may change ``k`` (partial-store / write-port count) and
+    ``replicate_reads`` (read-replica count) — the lattice
+    ``perfmodel.plan_geometry`` searches — plus the non-layout knobs
+    (backend, router, op_mix).  Capacity fields are frozen: the H3 matrix,
+    bucket indices and slot positions all survive unchanged, so the
+    migration is :func:`extract_records` (decode live plaintext in (bucket,
+    slot) order) through the count-then-place sweep into freshly-zeroed
+    stores of the new ``(replicas, k)`` shape.  The record SET is exact
+    (every live key/value survives, spill impossible: at most S live
+    records per bucket re-place into S slots); the byte layout is the
+    canonical compacted one — identical to ``compact`` at the new geometry,
+    and bit-exact with a fresh ``bulk_build`` of the same records.
+
+    Works on a shard's local partition too (the bucket dimension is taken
+    from the store arrays, not ``cfg.buckets``), which is what
+    ``distributed.make_distributed_reconfigure`` maps over the mesh.
+    """
+    old = table.cfg
+    diffs = [f for f in RECONFIGURE_FROZEN_FIELDS
+             if getattr(old, f) != getattr(new_cfg, f)]
+    if diffs:
+        raise ValueError(
+            f"reconfigure migrates geometry (k, replicate_reads) only, but "
+            f"{diffs} differ between the live table's config and new_cfg — "
+            f"build new_cfg with dataclasses.replace(table.cfg, k=..., "
+            f"replicate_reads=...) (capacity changes are online resize's "
+            f"job, see ROADMAP)")
+    keys, vals, live, bucket = extract_records(table)
+    R, k = new_cfg.replicas, new_cfg.k
+    Bl, S = table.store_keys.shape[2], table.store_keys.shape[3]
+    sk, sv, sb, _, _, _, _, _ = bulk_place_records(
+        new_cfg,
+        jnp.zeros((R, k, Bl, S, old.key_words), jnp.uint32),
+        jnp.zeros((R, k, Bl, S, old.val_words), jnp.uint32),
+        jnp.zeros((R, k, Bl, S), jnp.uint32),
+        bucket, keys, vals, live, backend=backend, bucket_tiles=bucket_tiles)
+    return XorHashTable(table.q_masks, sk, sv, sb, new_cfg)

@@ -44,7 +44,7 @@ __all__ = [
     "OP_NOP", "OP_SEARCH", "OP_INSERT", "OP_DELETE",
     "XorHashTable", "QueryBatch", "StepResults",
     "init_table", "apply_step", "run_stream", "bulk_build", "compact",
-    "schedule_queries",
+    "reconfigure", "schedule_queries", "pack_trace",
 ]
 
 # Operation codes (OP_INSERT covers the paper's fused Insert/Update).
@@ -206,12 +206,26 @@ def compact(table: XorHashTable, backend: str | None = None,
     return _engine_compact(table, backend=backend, bucket_tiles=bucket_tiles)
 
 
+def reconfigure(table: XorHashTable, new_cfg: HashTableConfig,
+                backend: str | None = None,
+                bucket_tiles: int | None = None) -> XorHashTable:
+    """Migrate a live table into a different (k, replicate_reads) geometry —
+    record-set-exact, canonical compacted layout.  The lattice of legal
+    targets and the scoring that picks one live in
+    ``perfmodel.plan_geometry``; see ``engine.reconfigure`` (DESIGN.md §5).
+    """
+    from repro.core.engine import reconfigure as _engine_reconfigure
+    return _engine_reconfigure(table, new_cfg, backend=backend,
+                               bucket_tiles=bucket_tiles)
+
+
 # ---------------------------------------------------------------------------
 # Host-side router: enforce the NSQ-ratio workload contract (Definition 1)
 # ---------------------------------------------------------------------------
 
 def schedule_queries(op: np.ndarray, key: np.ndarray, val: np.ndarray,
-                     cfg: HashTableConfig, return_placement: bool = False):
+                     cfg: HashTableConfig, return_placement: bool = False,
+                     pe_of_lane=None):
     """Pack an arbitrary query trace into [T, N] step tensors.
 
     Preserves program order (required by the consistency model) while placing
@@ -219,9 +233,17 @@ def schedule_queries(op: np.ndarray, key: np.ndarray, val: np.ndarray,
     ``n % p``; a step therefore accepts at most ``k * queries_per_pe`` NSQs.
     Greedy packing: walk the trace, open a new step when either the NSQ
     capacity or the step width is exhausted.  Unused lanes become NOPs.
+
+    The lane classes re-derive from whatever ``cfg.k`` is passed, so a table
+    migrated by :func:`reconfigure` just routes subsequent traces through
+    the same call with the new config.  ``pe_of_lane`` overrides the
+    single-domain ``lane % p`` PE mapping for layouts that assign PEs
+    differently (the sharded mesh maps ``pe = lane // n_local`` — the
+    origin DEVICE); it takes the lane index and returns its PE id.
     """
     p, k, qpp = cfg.p, cfg.k, cfg.queries_per_pe
     N = cfg.queries_per_step
+    pe = (lambda n: n % p) if pe_of_lane is None else pe_of_lane
     key = np.asarray(key, dtype=np.uint32).reshape(len(op), cfg.key_words)
     val = np.asarray(val, dtype=np.uint32).reshape(len(op), cfg.val_words)
 
@@ -230,8 +252,8 @@ def schedule_queries(op: np.ndarray, key: np.ndarray, val: np.ndarray,
     cur_key = np.zeros((N, cfg.key_words), np.uint32)
     cur_val = np.zeros((N, cfg.val_words), np.uint32)
     # lanes for NSQs: pe < k; lanes for searches: prefer pe >= k
-    nsq_lanes = [n for n in range(N) if (n % p) < k]
-    srch_lanes = [n for n in range(N) if (n % p) >= k] + nsq_lanes
+    nsq_lanes = [n for n in range(N) if pe(n) < k]
+    srch_lanes = [n for n in range(N) if pe(n) >= k] + nsq_lanes
     ni = si = 0
 
     def flush():
@@ -275,3 +297,8 @@ def schedule_queries(op: np.ndarray, key: np.ndarray, val: np.ndarray,
     if return_placement:
         return out + (np.array(placement, np.int32).reshape(-1, 2),)
     return out
+
+
+# The NSQ packing router under the name the geometry-planning layer uses
+# (DESIGN.md §5): "pack a trace for this geometry".
+pack_trace = schedule_queries

@@ -24,11 +24,14 @@ measured-vs-modeled for every BENCH_stream.json column.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Sequence, Union
 
 from repro.core.config import HashTableConfig, memory_bytes
 
 __all__ = [
     "TPUSpec", "V5E", "FPGA_U250", "FpgaSpec",
+    "OpMix", "MIX_DEFAULT", "as_mix",
+    "GeometryPlan", "plan_geometry", "geometry_modeled_mops",
     "fpga_latency_ns", "fpga_throughput_mops", "table_step_bytes",
     "tpu_modeled_mops", "stream_commit_seconds", "stream_modeled_mops",
     "routed_width_lanes", "routed_exchange_bytes",
@@ -37,6 +40,98 @@ __all__ = [
     "serve_plan_seconds", "serve_loop_modeled",
     "bulk_build_seconds", "bulk_build_modeled_mops",
 ]
+
+
+# ---------------------------------------------------------------------------
+# OpMix: the single definition of a workload's search:NSQ composition.
+# Every model term that used to take a bare ``nsq_fraction`` float takes a
+# mix (floats still coerce via :func:`as_mix`, so call sites that only know
+# an NSQ fraction keep working); ``plan_geometry`` sizes the XOR memory
+# from it (paper Definition 1 / §V: fewer NSQ-capable PEs -> fewer partial
+# stores and fewer read replicas).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OpMix:
+    """Fractions of search/insert/update/delete in a query stream.
+
+    Normalized to sum 1 at construction (an all-zero mix degenerates to
+    pure search).  ``update`` exists for declared mixes; measured traces
+    fold updates into ``insert`` (the paper's fused Insert/Update — one op
+    code, ``OP_INSERT``).  ``nsq_fraction`` — the paper's non-search-query
+    fraction, the only number the roofline terms consume — is derived, so
+    there is exactly one definition of the mix.
+    """
+    search: float = 0.5
+    insert: float = 0.5
+    update: float = 0.0
+    delete: float = 0.0
+
+    def __post_init__(self):
+        parts = (self.search, self.insert, self.update, self.delete)
+        if any(f < 0 for f in parts):
+            raise ValueError(f"op-mix fractions must be nonnegative, "
+                             f"got {parts}")
+        tot = float(sum(parts))
+        if tot <= 0.0:
+            object.__setattr__(self, "search", 1.0)
+            tot = 1.0
+        for name in ("search", "insert", "update", "delete"):
+            object.__setattr__(self, name, float(getattr(self, name)) / tot)
+
+    @property
+    def nsq_fraction(self) -> float:
+        """Non-search-query fraction (paper Definition 1)."""
+        return self.insert + self.update + self.delete
+
+    @classmethod
+    def from_nsq(cls, nsq_fraction: float) -> "OpMix":
+        """Lift a bare NSQ fraction (the legacy float) into a mix; the
+        mutation mass lands on ``insert`` (measured traces cannot split
+        insert/update either — same op code)."""
+        f = float(nsq_fraction)
+        if not 0.0 <= f <= 1.0:
+            raise ValueError(f"nsq_fraction must be in [0, 1], got {f}")
+        return cls(search=1.0 - f, insert=f, update=0.0, delete=0.0)
+
+    @classmethod
+    def from_ops(cls, ops) -> "OpMix":
+        """Measure the mix of a trace (any shape of op codes; NOP padding
+        is excluded — it is dead capacity, not workload)."""
+        import numpy as np
+        ops = np.asarray(ops).reshape(-1)
+        counts = np.bincount(ops[ops > 0], minlength=4)
+        return cls.from_counts(search=int(counts[1]), insert=int(counts[2]),
+                               delete=int(counts[3]))
+
+    @classmethod
+    def from_counts(cls, search: float = 0, insert: float = 0,
+                    update: float = 0, delete: float = 0) -> "OpMix":
+        """Build a mix from accumulated op counts (e.g. a ``TableServer``'s
+        per-slab histogram); normalization happens in the constructor."""
+        return cls(search=float(search), insert=float(insert),
+                   update=float(update), delete=float(delete))
+
+    def as_tuple(self):
+        return (self.search, self.insert, self.update, self.delete)
+
+
+MIX_DEFAULT = OpMix()           # 50:50 — the historical nsq_fraction=0.5
+
+
+def as_mix(mix: Union["OpMix", float, Sequence, None]) -> "OpMix":
+    """Coerce a model-term argument into an :class:`OpMix`: an OpMix passes
+    through, a bare float is an NSQ fraction (the pre-OpMix signature), a
+    4-sequence is (search, insert, update, delete), None is the 50:50
+    default."""
+    if mix is None:
+        return MIX_DEFAULT
+    if isinstance(mix, OpMix):
+        return mix
+    if isinstance(mix, (int, float)):
+        return OpMix.from_nsq(mix)
+    return OpMix(*mix)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,17 +170,19 @@ def fpga_throughput_mops(p: int, fclk_mhz: float) -> float:
     return p * fclk_mhz
 
 
-def table_step_bytes(cfg: HashTableConfig, nsq_fraction: float = 0.5) -> float:
+def table_step_bytes(cfg: HashTableConfig,
+                     mix: Union[OpMix, float, None] = None) -> float:
     """HBM/VMEM bytes moved by one apply_step (per query averages)."""
+    mix = as_mix(mix)
     entry_bytes = 4 * cfg.entry_words
     n = cfg.queries_per_step
     gather = cfg.k * cfg.slots * entry_bytes          # read k stores x S slots
-    scatter = nsq_fraction * cfg.replicas * entry_bytes
+    scatter = mix.nsq_fraction * cfg.replicas * entry_bytes
     return n * (gather + scatter)
 
 
 def tpu_modeled_mops(cfg: HashTableConfig, spec: TPUSpec = V5E,
-                     nsq_fraction: float = 0.5) -> float:
+                     mix: Union[OpMix, float, None] = None) -> float:
     """Bandwidth-roofline MOPS for one chip.
 
     If the table fits in VMEM (the paper's on-chip regime) the gather stream
@@ -93,7 +190,7 @@ def tpu_modeled_mops(cfg: HashTableConfig, spec: TPUSpec = V5E,
     """
     fits_vmem = memory_bytes(cfg) <= spec.vmem_bytes
     bw = spec.vmem_gbps if fits_vmem else spec.hbm_gbps
-    bytes_per_query = table_step_bytes(cfg, nsq_fraction) / cfg.queries_per_step
+    bytes_per_query = table_step_bytes(cfg, mix) / cfg.queries_per_step
     return bw * 1e9 / bytes_per_query / 1e6
 
 
@@ -126,7 +223,7 @@ def stream_commit_seconds(cfg: HashTableConfig,
 def stream_modeled_mops(cfg: HashTableConfig, steps: int,
                         bucket_tiles: int = 1, binned: bool = True,
                         vectorized_commit: bool = True, fused: bool = True,
-                        nsq_fraction: float = 0.5,
+                        mix: Union[OpMix, float, None] = None,
                         spec: TPUSpec = V5E) -> float:
     """Roofline MOPS for a ``[T, N]`` stream through the stream seam.
 
@@ -148,10 +245,11 @@ def stream_modeled_mops(cfg: HashTableConfig, steps: int,
                     over the T steps that share the sweep.  Fused unblocked:
                     none (aliased VMEM-resident tiles).
     """
+    mix = as_mix(mix)
     n = cfg.queries_per_step
     entry_bytes = 4 * cfg.entry_words
     gather = cfg.k * cfg.slots * entry_bytes
-    scatter = nsq_fraction * entry_bytes
+    scatter = mix.nsq_fraction * entry_bytes
     lane_bytes = n * (gather + scatter)
     redundancy = 1 if (binned or bucket_tiles == 1) else bucket_tiles
     lane_s = redundancy * lane_bytes / (spec.vmem_gbps * 1e9)
@@ -261,7 +359,7 @@ def sharded_stream_modeled_mops(cfg: HashTableConfig, steps: int,
                                 n_local: int,
                                 routed_width: int | None = None,
                                 routed_steps: int | None = None,
-                                nsq_fraction: float = 0.5,
+                                mix: Union[OpMix, float, None] = None,
                                 spec: TPUSpec = V5E) -> float:
     """Roofline MOPS for the routed distributed stream across the mesh.
 
@@ -272,12 +370,13 @@ def sharded_stream_modeled_mops(cfg: HashTableConfig, steps: int,
     narrower routed width cuts the first two terms AND the exchange, which
     is why the bounded router's shrink shows up as throughput, not just
     buffer bytes."""
+    mix = as_mix(mix)
     d = cfg.shards
     width = d * n_local if routed_width is None else routed_width
     rows = steps if routed_steps is None else routed_steps
     entry_bytes = 4 * cfg.entry_words
     gather = cfg.k * cfg.slots * entry_bytes
-    scatter = nsq_fraction * entry_bytes
+    scatter = mix.nsq_fraction * entry_bytes
     lane_s = rows * width * (gather + scatter) / (spec.vmem_gbps * 1e9)
     commit_s = rows * 2 * width * VECTOR_LANE_NS * 1e-9
     ici_s = routed_exchange_bytes(cfg, steps, n_local, width) \
@@ -299,7 +398,8 @@ def sharded_stream_modeled_mops(cfg: HashTableConfig, steps: int,
 # ---------------------------------------------------------------------------
 
 
-def replica_copy_factor(cfg: HashTableConfig, nsq_fraction: float = 0.5,
+def replica_copy_factor(cfg: HashTableConfig,
+                        mix: Union[OpMix, float, None] = None,
                         shard_load_fraction: list | None = None) -> float:
     """Mean routed copies per source lane under ``cfg.replica_groups``.
 
@@ -309,6 +409,8 @@ def replica_copy_factor(cfg: HashTableConfig, nsq_fraction: float = 0.5,
     sizes by the stream's measured owner distribution (uniform when None) —
     a hot shard with a big group drags the factor up faster than a cold
     one.  Degenerates to 1.0 on the 1-D mesh."""
+    mix = as_mix(mix)
+    nsq_fraction = mix.nsq_fraction
     if not cfg.replicated:
         return 1.0
     sizes = cfg.group_sizes
@@ -325,7 +427,7 @@ def replica_copy_factor(cfg: HashTableConfig, nsq_fraction: float = 0.5,
 def replicated_read_mops(cfg: HashTableConfig, steps: int, n_local: int,
                          max_dest_load: int | None = None,
                          routed_steps: int | None = None,
-                         nsq_fraction: float = 0.5,
+                         mix: Union[OpMix, float, None] = None,
                          shard_load_fraction: list | None = None,
                          spec: TPUSpec = V5E) -> float:
     """Roofline MOPS for the routed stream on the 2-D grouped mesh.
@@ -340,8 +442,9 @@ def replicated_read_mops(cfg: HashTableConfig, steps: int, n_local: int,
     ``steps * mesh_devices * n_local``: broadcast copies are overhead, not
     throughput."""
     import math
+    mix = as_mix(mix)
     dv = cfg.mesh_devices
-    copies = replica_copy_factor(cfg, nsq_fraction, shard_load_fraction)
+    copies = replica_copy_factor(cfg, mix, shard_load_fraction)
     # broadcast floor: mean per-(step, dest) load is copies * n_local, so no
     # measurement can shrink the width below it — the mutation-broadcast
     # cost term, rising with the load-weighted mean group size
@@ -352,7 +455,7 @@ def replicated_read_mops(cfg: HashTableConfig, steps: int, n_local: int,
     rows = steps if routed_steps is None else routed_steps
     entry_bytes = 4 * cfg.entry_words
     gather = cfg.k * cfg.slots * entry_bytes
-    scatter = nsq_fraction * entry_bytes
+    scatter = mix.nsq_fraction * entry_bytes
     lane_s = rows * width * (gather + scatter) / (spec.vmem_gbps * 1e9)
     commit_s = rows * 2 * width * VECTOR_LANE_NS * 1e-9
     q_words = 3 + cfg.key_words + cfg.val_words
@@ -397,7 +500,7 @@ def serve_loop_modeled(cfg: HashTableConfig, slab_steps: int,
                        overlap_efficiency: float = 0.9,
                        plan_seconds: float = HOST_PLAN_SECONDS,
                        measure_ns_per_lane: float = HOST_MEASURE_NS_PER_LANE,
-                       nsq_fraction: float = 0.5,
+                       mix: Union[OpMix, float, None] = None,
                        spec: TPUSpec = V5E) -> dict:
     """Model one steady-state slab of the continuous-batching serve loop.
 
@@ -420,15 +523,14 @@ def serve_loop_modeled(cfg: HashTableConfig, slab_steps: int,
     retire latency — a request rides its slab through the
     ``window``-deep in-flight pipeline; p99 adds the cold-replan spike a
     cache-miss slab eats on top."""
+    mix = as_mix(mix)
     n = cfg.queries_per_step
     lanes = slab_steps * n
     if cfg.shards > 1:
         dev_mops = sharded_stream_modeled_mops(
-            cfg, slab_steps, n // cfg.shards, nsq_fraction=nsq_fraction,
-            spec=spec)
+            cfg, slab_steps, n // cfg.shards, mix=mix, spec=spec)
     else:
-        dev_mops = stream_modeled_mops(cfg, slab_steps,
-                                       nsq_fraction=nsq_fraction, spec=spec)
+        dev_mops = stream_modeled_mops(cfg, slab_steps, mix=mix, spec=spec)
     device_s = lanes / (dev_mops * 1e6)
     host_s = serve_plan_seconds(lanes, hit_rate, plan_seconds,
                                 measure_ns_per_lane)
@@ -444,3 +546,162 @@ def serve_loop_modeled(cfg: HashTableConfig, slab_steps: int,
         "p50_seconds": p50,
         "p99_seconds": p50 + plan_seconds,
     }
+
+
+# ---------------------------------------------------------------------------
+# Geometry planning (paper Definition 1 / §V, DESIGN.md §5).  The XOR memory
+# costs replicas * k * bucket-planes: k partial stores for k NSQ-capable PEs
+# plus a full read replica per PE when replicate_reads.  A measured OpMix
+# bounds how many NSQ-capable PEs the workload actually needs — the greedy
+# packing router (hash_table.pack_trace) fits an NSQ fraction f into lane
+# classes as long as f <= k/p per step on average — so a read-mostly table
+# can shed stores AND replicas.  Memory saved is capacity gained: dropping a
+# replica under VMEM_TABLE_BUDGET_BYTES moves the stream kernel from the
+# blocked (tiled HBM sweep) regime back to VMEM-resident, the 20x cliff
+# PR 4 measured.
+# ---------------------------------------------------------------------------
+
+
+def _planner_vmem_budget() -> int:
+    # the kernel dispatch's actual residency threshold; lazy import keeps
+    # core/ importable without the kernels package
+    from repro.kernels.ops import VMEM_TABLE_BUDGET_BYTES
+    return VMEM_TABLE_BUDGET_BYTES
+
+
+def _planner_bucket_tiles(replica_bytes: int, buckets: int,
+                          vmem_budget: int) -> int:
+    """Mirror of kernels.ops.stream_bucket_tiles on planned (not yet built)
+    geometry: double tiles until one tile's replica span fits the budget."""
+    tiles = 1
+    while replica_bytes // tiles > vmem_budget and tiles < buckets:
+        tiles *= 2
+    return tiles
+
+
+def geometry_modeled_mops(cfg: HashTableConfig,
+                          mix: Union[OpMix, float, None] = None,
+                          steps: int = 16,
+                          vmem_budget: int | None = None,
+                          spec: TPUSpec = V5E) -> float:
+    """Modeled stream MOPS of ``cfg``'s geometry under ``mix``, with the two
+    geometry-sensitive effects the plain roofline call misses:
+
+      residency   bucket_tiles is derived from the candidate's own replica
+                  bytes vs the VMEM budget, so a geometry that drops under
+                  the budget sheds the blocked regime's HBM sweep term — the
+                  discrete win :func:`plan_geometry` hunts for.
+      packing     a k < p geometry has only k NSQ-capable PEs, so a stream
+                  with NSQ fraction f > k/p stretches by f/(k/p) steps in
+                  the packing router.  Effective MOPS multiply by
+                  min(1, (k/p)/f) — the term that stops the planner from
+                  always answering k=1.
+    """
+    mix = as_mix(mix)
+    if vmem_budget is None:
+        vmem_budget = _planner_vmem_budget()
+    replica = memory_bytes(cfg) // cfg.replicas
+    tiles = _planner_bucket_tiles(replica, cfg.buckets, vmem_budget)
+    base = stream_modeled_mops(cfg, steps, bucket_tiles=tiles, binned=True,
+                               mix=mix, spec=spec)
+    cap = cfg.nsq_ratio                       # k/p, paper Definition 1
+    f = mix.nsq_fraction
+    stretch = 1.0 if f <= cap else cap / f
+    return base * stretch
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometryPlan:
+    """One point of the legal (k, replicate_reads) lattice, scored."""
+    k: int
+    replicate_reads: bool
+    replicas: int
+    mix: OpMix
+    table_bytes: int            # all replicas
+    replica_bytes: int          # one replica — the VMEM residency unit
+    bucket_tiles: int           # modeled kernel tiling at this geometry
+    fits_vmem: bool             # replica_bytes <= vmem_budget
+    modeled_mops: float
+    baseline_k: int
+    baseline_replicate_reads: bool
+    baseline_table_bytes: int
+    baseline_mops: float
+    vmem_budget: int
+
+    @property
+    def improvement(self) -> float:
+        return (self.modeled_mops / self.baseline_mops
+                if self.baseline_mops else float("inf"))
+
+    @property
+    def memory_saving(self) -> float:
+        return (self.baseline_table_bytes / self.table_bytes
+                if self.table_bytes else float("inf"))
+
+    @property
+    def changed(self) -> bool:
+        return (self.k != self.baseline_k
+                or self.replicate_reads != self.baseline_replicate_reads)
+
+    def apply(self, cfg: HashTableConfig) -> HashTableConfig:
+        """The planned geometry as a config (same table capacity — buckets
+        and slots never move, so ``engine.reconfigure`` can migrate into
+        it)."""
+        return dataclasses.replace(cfg, k=self.k,
+                                   replicate_reads=self.replicate_reads)
+
+
+def plan_geometry(cfg: HashTableConfig,
+                  mix: Union[OpMix, float, None] = None,
+                  vmem_budget: int | None = None,
+                  steps: int = 16,
+                  spec: TPUSpec = V5E) -> GeometryPlan:
+    """Pick the cheapest-memory legal geometry whose modeled throughput
+    under ``mix`` is no worse than ``cfg``'s current one.
+
+    The lattice is ``k in 1..p`` crossed with ``replicate_reads in {False,
+    True}``; replicated reads are only legal on the single-partition layout
+    (``shards == 1``, no replica_groups — the mesh mappings pin their own
+    replica axis).  Each candidate is scored by
+    :func:`geometry_modeled_mops`, which prices both the VMEM-residency
+    cliff and the packing stretch of starving the NSQ lanes; ties on bytes
+    break toward higher modeled MOPS, then larger k (port headroom)."""
+    mix = as_mix(mix)
+    if vmem_budget is None:
+        vmem_budget = _planner_vmem_budget()
+    baseline_mops = geometry_modeled_mops(cfg, mix, steps=steps,
+                                          vmem_budget=vmem_budget, spec=spec)
+    rep_options = [False]
+    if cfg.shards == 1 and not cfg.replicated:
+        rep_options.append(True)
+    best = None
+    for k in range(1, cfg.p + 1):
+        for rep in rep_options:
+            cand = dataclasses.replace(cfg, k=k, replicate_reads=rep)
+            mops = geometry_modeled_mops(cand, mix, steps=steps,
+                                         vmem_budget=vmem_budget, spec=spec)
+            if mops < baseline_mops * (1.0 - 1e-9):
+                continue
+            total = memory_bytes(cand)
+            replica = total // cand.replicas
+            score = (total, -mops, -k)
+            if best is None or score < best[0]:
+                best = (score, cand, mops, total, replica)
+    if best is None:
+        # no candidate met the baseline (possible when the current geometry
+        # sits outside the enumerable lattice, e.g. grouped replicas):
+        # keep what we have
+        total = memory_bytes(cfg)
+        best = (None, cfg, baseline_mops, total, total // cfg.replicas)
+    _, cand, mops, total, replica = best
+    tiles = _planner_bucket_tiles(replica, cand.buckets, vmem_budget)
+    return GeometryPlan(
+        k=cand.k, replicate_reads=cand.replicate_reads,
+        replicas=cand.replicas, mix=mix,
+        table_bytes=total, replica_bytes=replica,
+        bucket_tiles=tiles, fits_vmem=replica <= vmem_budget,
+        modeled_mops=mops,
+        baseline_k=cfg.k, baseline_replicate_reads=cfg.replicate_reads,
+        baseline_table_bytes=memory_bytes(cfg), baseline_mops=baseline_mops,
+        vmem_budget=vmem_budget,
+    )

@@ -29,7 +29,7 @@ SHAPES: Dict[str, Dict[str, Any]] = {
     "long_500k": dict(kind="decode", seq=524288, batch=1, rules="long"),
 }
 
-# archs with sub-quadratic long-context paths (see DESIGN.md §5)
+# archs with sub-quadratic long-context paths (see DESIGN.md §6)
 LONG_OK = {"gemma3_1b", "jamba_v01_52b", "xlstm_1_3b"}
 
 

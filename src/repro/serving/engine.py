@@ -98,6 +98,27 @@ class ServeConfig:
                                         # compute for the same core, so the
                                         # window degrades to synchronous
                                         # dispatch
+    # ---- op-mix-adaptive geometry (DESIGN.md §5) ----
+    geometry_replan: bool = True        # re-run perfmodel.plan_geometry on
+                                        # the accumulated served op mix at
+                                        # slab boundaries (the plan is always
+                                        # reported in stats(); migration
+                                        # additionally needs the hysteresis
+                                        # and a single-domain table)
+    geometry_hysteresis: float = 1.1    # migrate only when the planned
+                                        # geometry's modeled MOPS >= this
+                                        # factor x the current geometry's —
+                                        # keeps a drifting mix from thrashing
+                                        # reconfigure back and forth
+    geometry_min_slabs: int = 2         # served slabs before the first
+                                        # replan: one slab's mix is noise
+    geometry_vmem_budget: Optional[int] = None
+                                        # VMEM budget handed to plan_geometry
+                                        # (None == the kernel dispatch's
+                                        # VMEM_TABLE_BUDGET_BYTES); benchmarks
+                                        # scale it down to measure the
+                                        # blocked->resident crossing on
+                                        # CPU-sized tables
 
 
 @dataclasses.dataclass
@@ -271,7 +292,8 @@ class TableServer:
         self._stream = stream
         self._queue = SlabQueue(self.scfg.slab_steps, cfg.queries_per_step,
                                 cfg.key_words, cfg.val_words,
-                                max_requests=self.scfg.queue_requests)
+                                max_requests=self.scfg.queue_requests,
+                                nsq_lanes=self._nsq_mask(cfg))
         self._bounded = getattr(stream, "router", None) == "bounded"
         self.plan_cache = (
             PlanCache(cfg, plans=self.scfg.plan_cache_plans,
@@ -288,6 +310,29 @@ class TableServer:
         self.slabs = 0
         self.live_lanes = 0
         self.pad_lanes = 0
+        # op-mix-adaptive geometry (DESIGN.md §5): accumulated S/I/U/D
+        # histogram of served (live) lanes, the latest geometry plan drawn
+        # from it, and per-dest routed loads for the would-be replication plan
+        self._op_counts = np.zeros(4, np.int64)
+        self._dest_loads: Optional[np.ndarray] = None
+        self.geometry_plan = None
+        self.migrations = 0
+
+    @staticmethod
+    def _nsq_mask(cfg) -> Optional[np.ndarray]:
+        """Lane-class mask for the slab packer at this geometry: None at
+        k == p (every lane is NSQ-capable — contiguous packing), else the
+        lanes whose PE id is < k.  Single domain maps ``pe = lane % p``;
+        the sharded mesh maps ``pe = lane // n_local`` (the origin DEVICE,
+        the mapping the distributed mutation-legality check uses)."""
+        if cfg.k >= cfg.p:
+            return None
+        n = np.arange(cfg.queries_per_step)
+        if cfg.mesh_devices > 1:
+            pe = n // (cfg.queries_per_step // cfg.mesh_devices)
+        else:
+            pe = n % cfg.p
+        return pe < cfg.k
 
     # ---------------------------------------------------------------- submit
     def submit(self, ops, keys, vals=None) -> SlabRequest:
@@ -321,6 +366,10 @@ class TableServer:
             self._qm_host = np.asarray(jax.device_get(self.table.q_masks))
         loads, pair = measure_loads_host(self.cfg, self._qm_host, slab.keys,
                                          slab.ops)
+        # accumulate per-dest routed load for the would-be replication plan
+        dest = np.asarray(loads).sum(axis=0)
+        self._dest_loads = (dest if self._dest_loads is None
+                            else self._dest_loads + dest)
         plan, _ = self.plan_cache.lookup(
             loads, pair, op_mix_bucket(slab.ops),
             n_local=slab.keys.shape[1] // self.cfg.mesh_devices)
@@ -342,6 +391,8 @@ class TableServer:
         self.slabs += 1
         self.live_lanes += slab.live
         self.pad_lanes += slab.ops.size - slab.live
+        ops = slab.ops.reshape(-1)
+        self._op_counts += np.bincount(ops[ops > 0], minlength=4)
 
     def _retire_one(self) -> List[SlabRequest]:
         slab, res = self._inflight.popleft()
@@ -350,6 +401,10 @@ class TableServer:
         found = np.asarray(res.found).reshape(T * N)
         ok = np.asarray(res.ok).reshape(T * N)
         value = np.asarray(res.value).reshape(T * N, -1)
+        if slab.perm is not None:       # NSQ-aware packing: logical -> phys
+            found = found[slab.perm]
+            ok = ok[slab.perm]
+            value = value[slab.perm]
         finished, now = [], time.perf_counter()
         for req, r_off, f_off, cnt in slab.spans:
             req.found[r_off:r_off + cnt] = found[f_off:f_off + cnt]
@@ -361,6 +416,49 @@ class TableServer:
                 finished.append(req)
         return finished
 
+    # ------------------------------------------------- geometry replanning
+    @property
+    def served_mix(self):
+        """The accumulated served op mix as a ``perfmodel.OpMix`` (the
+        50:50 default until any live lane has been served)."""
+        from repro.core.perfmodel import OpMix
+        c = self._op_counts
+        if c.sum() == 0:
+            return OpMix()
+        return OpMix.from_counts(search=int(c[1]), insert=int(c[2]),
+                                 delete=int(c[3]))
+
+    def _maybe_replan(self) -> None:
+        """Slab-boundary geometry replan (DESIGN.md §5): score the lattice
+        against the accumulated served mix, record the plan for stats, and
+        migrate the live table through ``engine.reconfigure`` when (a) the
+        table is single-domain (a sharded stream's exchange shapes are baked
+        into its jitted wrapper, so mesh migration stays report-only), and
+        (b) the plan clears the hysteresis margin.  Runs between dispatches
+        — never mid-slab — and the table value chains functionally through
+        the in-flight window, so no drain or sync is needed."""
+        from repro.core import engine as _core_engine
+        from repro.core.perfmodel import plan_geometry
+        if not self.scfg.geometry_replan:
+            return
+        if self.slabs < self.scfg.geometry_min_slabs:
+            return
+        plan = plan_geometry(self.cfg, self.served_mix,
+                             vmem_budget=self.scfg.geometry_vmem_budget)
+        self.geometry_plan = plan
+        if (self.cfg.mesh_devices > 1 or not plan.changed
+                or plan.improvement < self.scfg.geometry_hysteresis):
+            return
+        new_cfg = plan.apply(self.cfg)
+        self.table = _core_engine.reconfigure(self.table, new_cfg)
+        self.cfg = new_cfg
+        self._queue.set_nsq_lanes(self._nsq_mask(new_cfg))
+        if self.plan_cache is not None:     # routed widths keyed on old k
+            self.plan_cache = PlanCache(new_cfg,
+                                        plans=self.scfg.plan_cache_plans,
+                                        slack=self.plan_cache.slack)
+        self.migrations += 1
+
     # ------------------------------------------------------------------ step
     def step(self) -> StepReport:
         """Pack + dispatch at most one slab, then retire anything past the
@@ -369,6 +467,7 @@ class TableServer:
         finished: List[SlabRequest] = []
         if self._queue.pending_requests:
             self._dispatch(self._queue.next_slab())
+            self._maybe_replan()
         # double-buffer discipline: block only on slabs leaving the window,
         # so the newest dispatch keeps executing while the host packs on
         while len(self._inflight) >= self._window:
@@ -405,3 +504,57 @@ class TableServer:
     def pad_fraction(self) -> float:
         tot = self.live_lanes + self.pad_lanes
         return self.pad_lanes / tot if tot else 0.0
+
+    def replication_plan(self) -> Optional[Tuple[int, ...]]:
+        """The would-be per-shard replica degrees ``engine.plan_replication``
+        picks from the accumulated slab load histograms (None until any
+        bounded sharded slab has been measured).  Report-only: replication
+        migration itself stays offline — the degrees change the mesh's
+        device count, which a live table cannot do."""
+        from repro.core import engine as _core_engine
+        if self._dest_loads is None or self.cfg.shards < 2:
+            return None
+        if self.cfg.replica_groups is not None:
+            # grouped histograms count per-DEVICE copies: fold each shard's
+            # group back onto the shard before planning new degrees
+            shard_of = np.asarray(
+                jax.device_get(_core_engine.replica_layout(self.cfg)[0]))
+            loads = np.zeros(self.cfg.shards, np.int64)
+            np.add.at(loads, shard_of, self._dest_loads.astype(np.int64))
+        else:
+            loads = self._dest_loads
+        return _core_engine.plan_replication(self.cfg, [int(x) for x in loads],
+                                             self.cfg.mesh_devices)
+
+    def stats(self) -> Dict[str, Any]:
+        """Serve-loop counters + the op-mix-adaptive geometry state: the
+        accumulated served mix, the latest ``GeometryPlan`` (with migration
+        count), and the would-be replication plan for sharded tables."""
+        mix = self.served_mix
+        plan = self.geometry_plan
+        out = {
+            "slabs": self.slabs,
+            "live_lanes": self.live_lanes,
+            "pad_lanes": self.pad_lanes,
+            "pad_fraction": self.pad_fraction,
+            "window": self.window,
+            "op_mix": mix.as_tuple(),
+            "nsq_fraction": mix.nsq_fraction,
+            "migrations": self.migrations,
+            "geometry": None if plan is None else {
+                "k": plan.k,
+                "replicate_reads": plan.replicate_reads,
+                "table_bytes": plan.table_bytes,
+                "replica_bytes": plan.replica_bytes,
+                "fits_vmem": plan.fits_vmem,
+                "modeled_mops": plan.modeled_mops,
+                "baseline_mops": plan.baseline_mops,
+                "improvement": plan.improvement,
+                "memory_saving": plan.memory_saving,
+                "changed": plan.changed,
+            },
+            "replication_plan": self.replication_plan(),
+        }
+        if self.plan_cache is not None:
+            out["plan_cache"] = self.plan_cache.stats()
+        return out

@@ -19,9 +19,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (HashTableConfig, OP_DELETE, OP_INSERT, OP_SEARCH,
-                        engine, init_table)
+                        engine, init_table, pack_trace)
 
-__all__ = ["PrefixCache", "chain_key"]
+__all__ = ["PrefixCache", "chain_key", "PREFIX_CACHE_MIX"]
+
+# The page table's declared workload (HashTableConfig.op_mix input): prefix
+# probing is read-mostly — every decode step's lookup fan-out vs occasional
+# admission inserts and LRU-eviction deletes.  Declaring it lets k="auto"
+# plan the compact geometry (paper Definition 1: ~1/8 NSQ traffic needs
+# ~p/8 write ports) instead of paying worst-case partial stores.
+PREFIX_CACHE_MIX = (0.875, 0.1, 0.0, 0.025)
 
 _MIX = np.uint64(0x9E3779B97F4A7C15)
 
@@ -54,7 +61,8 @@ class PrefixCache:
                  p: int = 8, seed: int = 0, backend: str = "auto",
                  shards: int = 1, router: str = "bounded",
                  replica_groups: Optional[Tuple[int, ...]] = None,
-                 plan_cache_plans: int = 16):
+                 plan_cache_plans: int = 16, k="auto",
+                 op_mix: Optional[Tuple[float, ...]] = PREFIX_CACHE_MIX):
         buckets = 1 << max(int(np.ceil(np.log2(max(num_pages, 2) * 2))), 4)
         # under replica_groups (the 2-D hot-shard read fan-out mesh,
         # DESIGN.md §2.3 — lookup_batch is search-only, the replicated
@@ -64,10 +72,14 @@ class PrefixCache:
             raise ValueError(f"need p % mesh_devices == 0, got p={p} "
                              f"mesh devices={mesh_devices} (shards={shards}"
                              f", replica_groups={replica_groups})")
+        # k="auto" (the default): the declared read-mostly mix resolves the
+        # compact write-port count via perfmodel.plan_geometry, and _run
+        # routes batches through the pack_trace lane classes whenever k < p
         self.cfg = HashTableConfig(
-            p=p, k=p, buckets=buckets, slots=4, key_words=2, val_words=2,
+            p=p, k=k, buckets=buckets, slots=4, key_words=2, val_words=2,
             replicate_reads=False, stagger_slots=True, backend=backend,
-            shards=shards, replica_groups=replica_groups, router=router)
+            shards=shards, replica_groups=replica_groups, router=router,
+            op_mix=op_mix)
         # probe+commit through the pluggable query engine (DESIGN.md §3/§4);
         # multi-step batches ride the stream seam — the fused xor_stream
         # kernel on pallas-capable backends, the scanned oracle on jnp.
@@ -119,16 +131,39 @@ class PrefixCache:
         keys = np.zeros((n, 2), np.uint32)
         keys[:, 0] = (keys64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
         keys[:, 1] = (keys64 >> np.uint64(32)).astype(np.uint32)
-        # pad to [T, N] step tensors (pad lanes are NOPs) and run the whole
+        # pack to [T, N] step tensors (pad lanes are NOPs) and run the whole
         # batch through engine.run_stream — one fused kernel launch instead
         # of one probe+commit dispatch per step on pallas-capable backends.
         # T rounds up to a power of two so fluctuating batch sizes compile
         # O(log max_T) stream programs instead of one per distinct T.
-        T = -(-n // N)
-        T = 1 << (T - 1).bit_length()
-        op_t = np.zeros(T * N, np.int32); op_t[:n] = ops
-        kk_t = np.zeros((T * N, 2), np.uint32); kk_t[:n] = keys
-        vv_t = np.zeros((T * N, 2), np.uint32); vv_t[:n] = vals
+        # At the planned compact geometry (k < p) the contiguous fill would
+        # put mutations on search-only lanes — port-illegal, silently
+        # rejected — so those batches route through the pack_trace lane
+        # classes instead, with the PE map of the actual layout (origin
+        # device on a mesh) and results gathered back via the placement.
+        if self.cfg.k < self.cfg.p:
+            pe_of = None
+            if self.cfg.mesh_devices > 1:
+                n_loc = N // self.cfg.mesh_devices
+                pe_of = lambda lane: lane // n_loc
+            op_s, kk_s, vv_s, placement = pack_trace(
+                ops, keys, vals, self.cfg, return_placement=True,
+                pe_of_lane=pe_of)
+            T = 1 << (max(op_s.shape[0], 1) - 1).bit_length()
+            op_t = np.zeros(T * N, np.int32)
+            kk_t = np.zeros((T * N, 2), np.uint32)
+            vv_t = np.zeros((T * N, 2), np.uint32)
+            op_t[:op_s.size] = op_s.reshape(-1)
+            kk_t[:op_s.size] = kk_s.reshape(-1, 2)
+            vv_t[:op_s.size] = vv_s.reshape(-1, 2)
+            flat = placement[:, 0].astype(np.int64) * N + placement[:, 1]
+        else:
+            T = -(-n // N)
+            T = 1 << (T - 1).bit_length()
+            op_t = np.zeros(T * N, np.int32); op_t[:n] = ops
+            kk_t = np.zeros((T * N, 2), np.uint32); kk_t[:n] = keys
+            vv_t = np.zeros((T * N, 2), np.uint32); vv_t[:n] = vals
+            flat = np.arange(n)
         extra = {}
         if self._plan_cache is not None:
             # host-side measurement (microseconds, no device sync) + LRU plan
@@ -148,8 +183,8 @@ class PrefixCache:
             self.table, jnp.array(op_t.reshape(T, N)),
             jnp.array(kk_t.reshape(T, N, 2)), jnp.array(vv_t.reshape(T, N, 2)),
             **extra)
-        found = np.asarray(res.found).reshape(T * N)[:n]
-        value = np.asarray(res.value).reshape(T * N, 2)[:n]
+        found = np.asarray(res.found).reshape(T * N)[flat]
+        value = np.asarray(res.value).reshape(T * N, 2)[flat]
         return found, value
 
     # ---------------------------------------------------------------- lookup

@@ -93,13 +93,18 @@ class SlabRequest:
 class Slab:
     """One packed ``[T, N]`` dispatch unit.  ``spans`` maps slab lanes back
     to their requests: ``(request, request_offset, flat_offset, count)``
-    with ``flat_offset`` indexing the row-major flattened ``[T * N]`` lane
-    space.  ``live`` counts non-pad lanes."""
+    with ``flat_offset`` indexing the LOGICAL packed-lane order.  For the
+    contiguous packing (``perm is None``) logical order IS the row-major
+    flattened ``[T * N]`` lane space; under NSQ-aware packing ``perm``
+    maps logical index -> physical flat ``step * N + lane`` slot (lane
+    classes force mutations onto NSQ-capable lanes, so physical placement
+    is no longer contiguous).  ``live`` counts non-pad lanes."""
     ops: np.ndarray                     # [T, N] int32 (NOP-padded)
     keys: np.ndarray                    # [T, N, Wk] uint32
     vals: np.ndarray                    # [T, N, Wv] uint32
     spans: List[Tuple[SlabRequest, int, int, int]]
     live: int
+    perm: Optional[np.ndarray] = None   # [live] logical -> physical flat
 
 
 class SlabQueue:
@@ -110,12 +115,33 @@ class SlabQueue:
     """
 
     def __init__(self, steps: int, lanes: int, key_words: int, val_words: int,
-                 max_requests: int = 0):
+                 max_requests: int = 0, nsq_lanes=None):
         self.steps, self.lanes = steps, lanes
         self.key_words, self.val_words = key_words, val_words
         self.max_requests = max_requests
         self._pending: Deque[SlabRequest] = collections.deque()
         self._cursor = 0                # head-request lanes already packed
+        self._nsq_lanes = None
+        self.set_nsq_lanes(nsq_lanes)
+
+    def set_nsq_lanes(self, mask) -> None:
+        """Install (or clear) the lane-class mask for NSQ-aware packing.
+
+        ``mask[n]`` True means physical lane ``n`` is NSQ-capable (its PE id
+        is < k).  With a mask, :meth:`next_slab` places mutations only on
+        masked lanes (searches prefer the unmasked ones) so a ``k < p``
+        geometry's port-legality contract holds; an all-True mask (k == p)
+        degenerates to the contiguous fast path.  ``TableServer`` re-derives
+        the mask from the new ``k`` after a geometry migration — this is the
+        serve-loop end of ``pack_trace``'s lane-class re-derivation."""
+        if mask is None:
+            self._nsq_lanes = None
+            return
+        mask = np.asarray(mask, bool).reshape(self.lanes)
+        if not mask.any():
+            raise ValueError("nsq_lanes mask has no NSQ-capable lane; "
+                             "every geometry has k >= 1")
+        self._nsq_lanes = None if mask.all() else mask
 
     @property
     def pending_requests(self) -> int:
@@ -140,6 +166,8 @@ class SlabQueue:
         dead-lane contract, exactly the prefix-cache admission padding."""
         if not self._pending:
             return None
+        if self._nsq_lanes is not None:
+            return self._next_slab_classed()
         T, N = self.steps, self.lanes
         cap = T * N
         op = np.zeros(cap, np.int32)            # OP_NOP == 0, key 0 == dead
@@ -163,6 +191,75 @@ class SlabQueue:
                     keys=kk.reshape(T, N, self.key_words),
                     vals=vv.reshape(T, N, self.val_words),
                     spans=spans, live=filled)
+
+    def _next_slab_classed(self) -> Slab:
+        """NSQ-aware packing: the greedy lane-class walk of
+        ``hash_table.pack_trace`` run over the admission queue.  Logical
+        (arrival) order is preserved — the step index only ever advances and
+        ``spans`` stay contiguous runs of logical offsets — while the
+        physical slot of logical lane ``i`` is recorded in ``perm[i]``.
+        A step closes when its NSQ capacity (the masked lanes) or its width
+        is exhausted; the slab closes after ``steps`` steps."""
+        T, N = self.steps, self.lanes
+        mask = self._nsq_lanes
+        nsq_order = np.flatnonzero(mask)
+        srch_order = np.concatenate([np.flatnonzero(~mask), nsq_order])
+        op = np.zeros((T, N), np.int32)
+        kk = np.zeros((T, N, self.key_words), np.uint32)
+        vv = np.zeros((T, N, self.val_words), np.uint32)
+        perm: List[int] = []
+        spans: List[Tuple[SlabRequest, int, int, int]] = []
+        cur = None                      # open span: [req, r_off, f_off, cnt]
+
+        def close_span():
+            nonlocal cur
+            if cur is not None:
+                spans.append(tuple(cur))
+                cur = None
+
+        step, ni, si = 0, 0, 0
+        used: set = set()
+        while self._pending and step < T:
+            req = self._pending[0]
+            off = self._cursor
+            o = int(req.ops[off])
+            order, idx = ((nsq_order, ni) if o in (OP_INSERT, OP_DELETE)
+                          else (srch_order, si))
+            lane = None
+            while idx < len(order):
+                cand = int(order[idx])
+                idx += 1
+                if cand not in used:
+                    lane = cand
+                    break
+            if o in (OP_INSERT, OP_DELETE):
+                ni = idx
+            else:
+                si = idx
+            if lane is None:            # class capacity / width exhausted
+                step += 1
+                ni = si = 0
+                used.clear()
+                continue
+            used.add(lane)
+            op[step, lane] = o
+            kk[step, lane] = req.keys[off]
+            vv[step, lane] = req.vals[off]
+            logical = len(perm)
+            perm.append(step * N + lane)
+            if cur is not None and cur[0] is req and cur[1] + cur[3] == off:
+                cur[3] += 1
+            else:
+                close_span()
+                cur = [req, off, logical, 1]
+            self._cursor = off + 1
+            if self._cursor == len(req.ops):
+                close_span()
+                self._pending.popleft()
+                self._cursor = 0
+        close_span()
+        return Slab(ops=op, keys=kk, vals=vv, spans=spans, live=len(perm),
+                    perm=np.asarray(perm, np.int64))
 
 
 # ---------------------------------------------------------------------------
