@@ -14,8 +14,8 @@ def main() -> None:
                             distributed_throughput,
                             fig4_memory, fig5_throughput, fig6_capacity,
                             fig7_nsq_ratio, fig10_latency, ht_hillclimb,
-                            serve_latency, stream_throughput,
-                            table12_resources, table3_sota)
+                            resize_migration, serve_latency,
+                            stream_throughput, table12_resources, table3_sota)
     from benchmarks import roofline
     mods = [("fig4", fig4_memory), ("fig5", fig5_throughput),
             ("fig6", fig6_capacity), ("fig7", fig7_nsq_ratio),
@@ -26,6 +26,7 @@ def main() -> None:
             ("distributed_throughput", distributed_throughput),
             ("serve_latency", serve_latency),
             ("bulk_build", bulk_build),
+            ("resize_migration", resize_migration),
             ("roofline", roofline)]
     failures = 0
     for name, mod in mods:

@@ -31,7 +31,8 @@ everything to the CI harness check.
 
 Per-mode results: best-of-N MOPS over live (non-padding) lanes, p50/p99
 submit->retire request latency from the best iteration, plan-cache stats
-and pad fraction.  Emits ``BENCH_serve.json`` (figure fig10_latency) with
+and pad fraction.  Full mode emits ``BENCH_serve.json`` (figure
+fig10_latency; ``--smoke`` never writes it) with
 the cached/oneshot and double/single A/B ratios in ``derived``;
 ``benchmarks/roofline.py`` re-derives every row from
 ``perfmodel.serve_loop_modeled``.  Re-execs in a subprocess with forced
@@ -232,6 +233,10 @@ def _sweep(smoke: bool) -> None:
     row("serve_latency_derived", 0.0,
         f"cached_over_oneshot={results['derived']['cached_over_oneshot']:.2f}"
         f";double_over_single={results['derived']['double_over_single']:.2f}")
+    if smoke:
+        # sibling contract: smoke never touches the committed full-mode JSON
+        print("smoke OK")
+        return
     out = os.path.join(_ROOT, "BENCH_serve.json")
     with open(out, "w") as f:
         json.dump(results, f, indent=2)
@@ -241,8 +246,7 @@ def _sweep(smoke: bool) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny shapes, 1 timed iter — CI harness check "
-                         "(still writes BENCH_serve.json)")
+                    help="tiny shapes — CI harness check, no JSON written")
     ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args.child:

@@ -34,8 +34,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple, Union
 
-__all__ = ["HashTableConfig", "sram_blocks_ours", "sram_blocks_laforest",
-           "memory_bytes", "round_up_lanes"]
+__all__ = ["HashTableConfig", "GrowthPolicy", "sram_blocks_ours",
+           "sram_blocks_laforest", "memory_bytes", "round_up_lanes"]
 
 
 def round_up_lanes(x: int, tile: int) -> int:
@@ -330,6 +330,48 @@ class HashTableConfig:
     @classmethod
     def tree_unflatten(cls, aux, _):
         return aux
+
+
+# ---------------------------------------------------------------------------
+# Online-growth policy (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GrowthPolicy:
+    """When and how far a serving table grows online (``TableServer``).
+
+    ``grow_load_factor`` is the trigger: at a slab boundary, if live records
+    / (buckets * slots) reaches it, a resize opens.  ``grow_target_occupancy``
+    sizes the successor: the smallest power-of-two bucket count (at least a
+    doubling) whose load factor lands at or below the target.  The gap
+    between trigger and target IS the hysteresis — after a grow the table
+    sits well below the trigger, so bursty traffic cannot thrash
+    grow-after-grow.  ``migrate_buckets_per_slab`` is the background slab
+    size: predecessor buckets moved between consecutive dispatches
+    (perfmodel.resize_migration_seconds prices the per-slab pause so a
+    latency budget can pick it)."""
+    grow_load_factor: float = 0.7
+    grow_target_occupancy: float = 0.35
+    migrate_buckets_per_slab: int = 64
+
+    def __post_init__(self):
+        if not (0.0 < self.grow_target_occupancy
+                < self.grow_load_factor <= 1.0):
+            raise ValueError(
+                f"need 0 < grow_target_occupancy < grow_load_factor <= 1 "
+                f"(the gap is the growth hysteresis), got target="
+                f"{self.grow_target_occupancy}, trigger="
+                f"{self.grow_load_factor}")
+        if self.migrate_buckets_per_slab < 1:
+            raise ValueError("migrate_buckets_per_slab must be >= 1")
+
+    def target_buckets(self, cfg: HashTableConfig, live_records: int) -> int:
+        """Successor bucket count: next power of two, at least a doubling,
+        such that ``live_records`` sits at or below the target occupancy."""
+        b = cfg.buckets * 2
+        while live_records > self.grow_target_occupancy * b * cfg.slots:
+            b *= 2
+        return b
 
 
 # ---------------------------------------------------------------------------

@@ -67,6 +67,7 @@ whole history lives on one owner processed in step order.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -81,7 +82,8 @@ from repro.core.hashing import h3_hash as _h3, make_h3_params
 
 __all__ = ["make_ht_mesh", "init_distributed_table", "make_distributed_step",
            "make_distributed_stream", "make_distributed_bulk_build",
-           "make_distributed_compact", "make_distributed_reconfigure"]
+           "make_distributed_compact", "make_distributed_reconfigure",
+           "make_distributed_resize", "DistributedResize"]
 
 
 def make_ht_mesh(n_devices: int | None = None, axis: str = "ht",
@@ -605,6 +607,202 @@ def make_distributed_reconfigure(mesh: Mesh, cfg: HashTableConfig,
 
     return jax.jit(shard_map(body, mesh=mesh, in_specs=(in_spec,),
                              out_specs=out_spec, check_rep=False))
+
+
+class DistributedResize:
+    """The sharded mesh's online-resize driver (built by
+    :func:`make_distributed_resize`); same watermark contract as the
+    single-domain ``engine`` seam, carried by the same
+    ``engine.ResizeState`` value.
+
+    The H3 rows are inserted at ``cfg.local_index_bits`` (the boundary
+    between the in-partition bits and the owner-shard bits), so a record's
+    OWNER NEVER CHANGES: routing is computed once from the predecessor hash,
+    the successor partitions live on the same devices (and the same
+    ``replica_groups``), and migration is embarrassingly shard-local —
+    every shard walks its own local bucket range ``[w, w + n)`` in lockstep
+    under ONE shared watermark.  Replica-group members migrate their
+    identical partition copies with identical inputs, so the copies stay
+    byte-identical through the resize.
+
+    ``stream`` runs the SKEW-PROOF exchange for the duration of the resize
+    window regardless of ``cfg.router``: the bounded router's measured
+    widths are a latency optimization, and re-measuring against two moving
+    tables per slab would cost more than the padding it saves — the serve
+    loop already bypasses its plan cache while a resize is open.
+    """
+
+    def __init__(self, begin, stream, migrate):
+        self.begin = begin      # (table, new_buckets, rng=None) -> ResizeState
+        self.stream = stream    # (state, ops, keys, vals) -> (state, results)
+        self.migrate = migrate  # (state, n_buckets) -> ResizeState
+
+    @staticmethod
+    def finish(state):
+        """Close a completed resize: the successor table (sharded)."""
+        return _engine.finish_resize(state)
+
+
+def make_distributed_resize(mesh: Mesh, cfg: HashTableConfig,
+                            new_buckets: int, axis: str = "ht",
+                            fused: bool | None = None,
+                            bucket_tiles: int | None = None,
+                            binned: bool | None = None,
+                            backend: str | None = None) -> DistributedResize:
+    """Build the sharded online-resize driver (class docstring above;
+    DESIGN.md §6).  ``new_buckets`` is the successor's GLOBAL bucket count
+    (power of two above ``cfg.buckets``; the shard count is fixed, so the
+    added index bits all land in the per-shard local range).  The stream and
+    migrate entry points are jitted shard_maps with the watermark riding as
+    a traced scalar — migration progress never recompiles."""
+    from jax.experimental.shard_map import shard_map
+    n_dev = mesh.shape[axis]
+    if cfg.shards == 1:
+        raise ValueError(
+            "the replicated mapping (cfg.shards == 1) resizes through the "
+            "single-domain engine seam (engine.begin_resize) — "
+            "make_distributed_resize drives bucket-sharded partitions")
+    cfg.validate_mesh(n_dev, axis)
+    if new_buckets & (new_buckets - 1) or new_buckets <= cfg.buckets:
+        raise ValueError(f"new_buckets must be a power of two above "
+                         f"buckets={cfg.buckets}, got {new_buckets}")
+    new_cfg = dataclasses.replace(cfg, buckets=new_buckets)
+    new_cfg.validate_mesh(n_dev, axis)
+    lib = cfg.local_index_bits
+    g = new_cfg.index_bits - cfg.index_bits
+    bl_old = cfg.local_buckets
+    Wk, Wv, S = cfg.key_words, cfg.val_words, cfg.slots
+    _shard_of = jnp.asarray(_engine.replica_layout(cfg)[0], jnp.int32)
+
+    pred_spec = XorHashTable(P(), P(None, None, axis),
+                             P(None, None, axis), P(None, None, axis), cfg)
+    succ_spec = XorHashTable(P(), P(None, None, axis), P(None, None, axis),
+                             P(None, None, axis), new_cfg)
+
+    def begin(table: XorHashTable, rng: jax.Array | None = None):
+        """Open the resize: allocate the empty sharded successor (extended
+        H3 matrix replicated, partitions on the same devices) at
+        watermark 0.  The masks are extended on the host — one small
+        gather/put beats an n_dev-way SPMD launch for a [index_bits, Wk]
+        matrix."""
+        if rng is None:
+            rng = jax.random.PRNGKey(new_buckets)
+        qm = _engine.successor_masks(
+            jnp.asarray(jax.device_get(table.q_masks)), cfg, new_cfg, rng)
+        rep = NamedSharding(mesh, P())
+        shard_b = NamedSharding(mesh, P(None, None, axis))
+        R, k = new_cfg.replicas, new_cfg.k
+        B = n_dev * new_cfg.local_buckets   # replica groups: copies per dev
+        zeros = lambda shape: jax.jit(lambda: jnp.zeros(shape, jnp.uint32),
+                                      out_shardings=shard_b)()
+        succ = XorHashTable(
+            q_masks=jax.device_put(qm, rep),
+            store_keys=zeros((R, k, B, S, Wk)),
+            store_vals=zeros((R, k, B, S, Wv)),
+            store_valid=zeros((R, k, B, S)),
+            cfg=new_cfg)
+        return _engine.ResizeState(pred=table, succ=succ, watermark=0)
+
+    def _local_stream(pred, succ, w, ops, keys, vals):
+        d = jax.lax.axis_index(axis)
+        T, n = ops.shape
+        flat = keys.reshape(T * n, Wk)
+        b_old = _h3(flat, pred.q_masks).reshape(T, n)
+        extra = _h3(flat, succ.q_masks[lib:lib + g]).reshape(T, n)
+        b_new = _engine.resize_buckets(b_old, extra, lib, g, bl_old)
+        # route ONCE by the (stable) owner; both buckets ride as payload
+        if cfg.replicated:
+            mut = ops >= _engine.OP_INSERT
+            (r_op, r_key, r_val, r_bo, r_bn), tgt = \
+                _engine.route_stream_grouped(cfg, axis, b_old, mut,
+                                             ops, keys, vals, b_old, b_new)
+        else:
+            (r_op, r_key, r_val, r_bo, r_bn), tgt = _engine.route_stream(
+                cfg, axis, b_old, ops, keys, vals, b_old, b_new)
+        pe = jnp.repeat(jnp.arange(n_dev, dtype=jnp.int32), n)
+        mig = (r_bo & jnp.uint32(bl_old - 1)) < w
+        # each side sees the other's lanes as dead NOP padding (routing
+        # padding already rides as op 0 — the same contract)
+        pk, pv, pb, f_p, ok_p, v_p = _engine.run_stream_local(
+            cfg, pred.store_keys, pred.store_vals, pred.store_valid,
+            pe, r_bo, jnp.where(mig, 0, r_op), r_key, r_val,
+            bucket_base=_shard_of[d] * bl_old,
+            fused=fused, bucket_tiles=bucket_tiles, binned=binned)
+        sk, sv, sb, f_s, ok_s, v_s = _engine.run_stream_local(
+            new_cfg, succ.store_keys, succ.store_vals, succ.store_valid,
+            pe, r_bn, jnp.where(mig, r_op, 0), r_key, r_val,
+            bucket_base=_shard_of[d] * new_cfg.local_buckets,
+            fused=fused, bucket_tiles=bucket_tiles, binned=binned)
+        found = jnp.where(mig, f_s, f_p)
+        ok = jnp.where(mig, ok_s, ok_p)
+        value = jnp.where(mig[..., None], v_s, v_p)
+        f_l, ok_l, v_l = _engine.inverse_route(axis, tgt, found, ok, value)
+        pred = XorHashTable(pred.q_masks, pk, pv, pb, cfg)
+        succ = XorHashTable(succ.q_masks, sk, sv, sb, new_cfg)
+        return pred, succ, StepResults(found=f_l, value=v_l, ok=ok_l,
+                                       bucket=b_new)
+
+    _stream_jit = jax.jit(shard_map(
+        _local_stream, mesh=mesh,
+        in_specs=(pred_spec, succ_spec, P(), P(None, axis), P(None, axis),
+                  P(None, axis)),
+        out_specs=(pred_spec, succ_spec, P(None, axis)),
+        check_rep=False,
+    ))
+
+    def stream(state, ops, keys, vals):
+        if ops.ndim != 2 or ops.shape[1] != cfg.queries_per_step:
+            raise ValueError(f"stream shape {ops.shape} != [T, p*qpp="
+                             f"{cfg.queries_per_step}]")
+        pred, succ, res = _stream_jit(
+            state.pred, state.succ, jnp.uint32(state.watermark),
+            ops, keys, vals)
+        return dataclasses.replace(state, pred=pred, succ=succ), res
+
+    @functools.lru_cache(maxsize=None)
+    def _migrate_jit(n: int):
+        def body(pred, succ, w):
+            d = jax.lax.axis_index(axis)
+            sl = lambda x: jax.lax.dynamic_slice_in_dim(x, w, n, axis=2)
+            pk = _engine.xor_reduce(sl(pred.store_keys)[0], axis=0)
+            pv = _engine.xor_reduce(sl(pred.store_vals)[0], axis=0)
+            pb = _engine.xor_reduce(sl(pred.store_valid)[0], axis=0)
+            keys = pk.reshape(n * S, Wk)
+            vals = pv.reshape(n * S, Wv)
+            live = (pb & 1).reshape(n * S).astype(jnp.bool_)
+            local = (w + jnp.repeat(jnp.arange(n, dtype=jnp.uint32), S))
+            b_old = (_shard_of[d].astype(jnp.uint32) << lib) | local
+            extra = _h3(keys, succ.q_masks[lib:lib + g])
+            b_new = _engine.resize_buckets(b_old, extra, lib, g, bl_old)
+            sk, sv, sb, _, _, _, _, _ = _engine.bulk_place_records(
+                new_cfg, succ.store_keys, succ.store_vals, succ.store_valid,
+                b_new, keys, vals, live,
+                bucket_base=_shard_of[d] * new_cfg.local_buckets,
+                backend=backend, bucket_tiles=bucket_tiles)
+            zero = lambda x: jax.lax.dynamic_update_slice_in_dim(
+                x, jnp.zeros(x.shape[:2] + (n,) + x.shape[3:], x.dtype),
+                w, axis=2)
+            pred = XorHashTable(pred.q_masks, zero(pred.store_keys),
+                                zero(pred.store_vals),
+                                zero(pred.store_valid), cfg)
+            succ = XorHashTable(succ.q_masks, sk, sv, sb, new_cfg)
+            return pred, succ
+
+        return jax.jit(shard_map(
+            body, mesh=mesh, in_specs=(pred_spec, succ_spec, P()),
+            out_specs=(pred_spec, succ_spec), check_rep=False))
+
+    def migrate(state, n_buckets: int):
+        """Every shard migrates its own local rows ``[w, w + n)`` — one
+        lockstep watermark, no exchange (owners never change)."""
+        w = state.watermark
+        n = min(n_buckets, bl_old - w)
+        if n <= 0:
+            return state
+        pred, succ = _migrate_jit(n)(state.pred, state.succ, jnp.uint32(w))
+        return _engine.ResizeState(pred=pred, succ=succ, watermark=w + n)
+
+    return DistributedResize(begin, stream, migrate)
 
 
 def make_distributed_step(mesh: Mesh, cfg: HashTableConfig, axis: str = "ht"):

@@ -63,7 +63,7 @@ import jax.numpy as jnp
 from repro.core.config import HashTableConfig, round_up_lanes as _round_up_lanes
 from repro.core.hash_table import (OP_DELETE, OP_INSERT, OP_SEARCH,
                                    QueryBatch, StepResults, XorHashTable)
-from repro.core.hashing import h3_hash as _h3_jnp
+from repro.core.hashing import h3_hash as _h3_jnp, make_h3_params
 from repro.core.xor_memory import xor_reduce
 
 __all__ = [
@@ -80,6 +80,9 @@ __all__ = [
     "route_load_pass_grouped",
     "BulkBuildReport", "plan_bulk_build", "bulk_place_records",
     "bulk_build", "extract_records", "compact", "reconfigure",
+    "RECONFIGURE_FROZEN_FIELDS",
+    "ResizeState", "successor_masks", "begin_resize", "run_stream_resize",
+    "migrate_slab", "finish_resize",
     "register_backend", "get_backend", "resolve_backend", "available_backends",
 ]
 
@@ -1686,50 +1689,400 @@ def compact(table: XorHashTable, backend: Optional[str] = None,
     return XorHashTable(table.q_masks, sk, sv, sb, cfg)
 
 
-RECONFIGURE_FROZEN_FIELDS = ("p", "buckets", "slots", "key_words",
-                             "val_words", "queries_per_pe", "stagger_slots",
+# ---------------------------------------------------------------------------
+# Stage six: online resize/rehash without stopping the stream (DESIGN.md §6)
+#
+# Capacity grows by adding H3 index bits: the successor table's q_masks are
+# the predecessor's with ``g`` fresh random rows INSERTED at bit position
+# ``lib == cfg.local_index_bits`` (for shards == 1 that is the top of the
+# index, the textbook split-in-place scheme).  Row ``j`` of the H3 matrix has
+# weight ``2^j`` (hashing.h3_hash), so:
+#
+#   * the low ``lib`` bits of every key's bucket are UNCHANGED — each old
+#     local bucket ``b`` splits in place into the 2^g successor buckets
+#     ``(e << lib) | b`` for the ``g`` new parity bits ``e``;
+#   * the high (owner-shard) bits are unchanged too — ``b_new >> (lib + g)
+#     == b_old >> lib`` — so a record's owner shard NEVER moves: routing is
+#     computed once from the predecessor hash, migration is shard-local, and
+#     the successor partitions land on the same replica groups.
+#
+# Live queries route by a per-bucket migration WATERMARK ``w`` over the old
+# LOCAL bucket index: bucket ``b`` is migrated iff ``(b & (Bl_old - 1)) <
+# w``.  ``run_stream_resize`` runs the trace through BOTH tables with the
+# other side's lanes masked to NOP (the repo-wide dead-lane contract makes
+# them inert) and merges per-lane results — one watermark scalar traces
+# through, so advancing it never recompiles.  ``migrate_slab`` moves rows
+# ``[w, w + n)``: decode the predecessor rows' plaintext, hash only the ``g``
+# new bits, count-then-place into the successor (those successor rows are
+# guaranteed empty — in-flight mutations only ever touch successor rows
+# below the watermark — and spill is impossible: one pred bucket's <= S
+# records fan out across 2^g successor buckets), zero the migrated
+# predecessor rows, advance ``w``.
+#
+# Replay rule (the mutation-record seam): encoded mutation records are
+# XOR-basis-relative to the snapshot they probed, so they cannot be
+# re-applied to the successor.  Instead the migration sweep consumes the
+# post-commit chained table VALUE of every dispatched slab — jax's
+# functional state threading replays in-flight mutations in value order by
+# construction, which is exactly program order.  Hence the stream contract:
+# results are bit-exact with a twin table born at the final capacity (same
+# successor q_masks) for any interleaving of slabs and migration, provided
+# no bucket overflows mid-resize (a not-yet-split predecessor bucket carries
+# its 2^g successors' combined load, so an insert can spill there where the
+# born-big twin still has room — tests/test_resize.py pins the contract).
+# ---------------------------------------------------------------------------
+
+
+def successor_masks(q_masks: jnp.ndarray, old_cfg: HashTableConfig,
+                    new_cfg: HashTableConfig, rng) -> jnp.ndarray:
+    """The successor table's H3 matrix: ``g = new - old`` index-bit rows
+    drawn from ``rng`` and inserted at bit position ``old_cfg.
+    local_index_bits``, preserving both the low in-partition bits and the
+    high owner-shard bits of every key's bucket (section comment above).
+    Exposed so a born-at-final-capacity twin can be built with byte-identical
+    q_masks (the resize conformance tests' oracle)."""
+    g = new_cfg.index_bits - old_cfg.index_bits
+    if g <= 0:
+        raise ValueError(f"successor needs more index bits than the "
+                         f"predecessor ({new_cfg.index_bits} vs "
+                         f"{old_cfg.index_bits})")
+    lib = old_cfg.local_index_bits
+    new_rows = make_h3_params(rng, old_cfg.key_words, g)
+    return jnp.concatenate([q_masks[:lib], new_rows, q_masks[lib:]], axis=0)
+
+
+@dataclasses.dataclass
+class ResizeState:
+    """An in-flight online resize: predecessor + successor table values and
+    the migration watermark (host int over the old LOCAL bucket index —
+    buckets below it serve from the successor).  The table values chain
+    functionally through :func:`run_stream_resize` / :func:`migrate_slab`;
+    the state is cheap to replace (arrays are shared, never copied)."""
+    pred: XorHashTable
+    succ: XorHashTable
+    watermark: int = 0
+
+    @property
+    def grow_bits(self) -> int:
+        """g: index bits added by this resize."""
+        return self.succ.cfg.index_bits - self.pred.cfg.index_bits
+
+    @property
+    def insert_bit(self) -> int:
+        """Bit position the new rows were inserted at (old local bits)."""
+        return self.pred.cfg.local_index_bits
+
+    @property
+    def done(self) -> bool:
+        return self.watermark >= self.pred.cfg.local_buckets
+
+    @property
+    def progress(self) -> float:
+        return self.watermark / self.pred.cfg.local_buckets
+
+
+def begin_resize(table: XorHashTable, new_buckets: int,
+                 rng=None) -> ResizeState:
+    """Open an online resize: allocate the empty successor (extended H3
+    matrix, ``new_buckets`` capacity, otherwise identical geometry) next to
+    the live predecessor at watermark 0.  Single-memory-domain tables only —
+    a sharded mesh resizes through ``distributed.make_distributed_resize``,
+    which places the successor partitions on the same devices.  ``rng``
+    draws the new H3 rows (deterministic default from ``new_buckets``)."""
+    cfg = table.cfg
+    if cfg.shards > 1:
+        raise ValueError(
+            "begin_resize drives a single memory domain; a bucket-sharded "
+            "table resizes through distributed.make_distributed_resize "
+            "(same watermark contract, shard-local migration slabs)")
+    if new_buckets & (new_buckets - 1) or new_buckets <= cfg.buckets:
+        raise ValueError(f"new_buckets must be a power of two above "
+                         f"buckets={cfg.buckets}, got {new_buckets}")
+    new_cfg = dataclasses.replace(cfg, buckets=new_buckets)
+    if rng is None:
+        rng = jax.random.PRNGKey(new_buckets)
+    qm = successor_masks(table.q_masks, cfg, new_cfg, rng)
+    R, k, S = new_cfg.replicas, new_cfg.k, new_cfg.slots
+    succ = XorHashTable(
+        qm,
+        jnp.zeros((R, k, new_buckets, S, cfg.key_words), jnp.uint32),
+        jnp.zeros((R, k, new_buckets, S, cfg.val_words), jnp.uint32),
+        jnp.zeros((R, k, new_buckets, S), jnp.uint32),
+        new_cfg)
+    return ResizeState(pred=table, succ=succ, watermark=0)
+
+
+def resize_buckets(b_old: jnp.ndarray, extra: jnp.ndarray, lib: int, g: int,
+                   bl_old: int) -> jnp.ndarray:
+    """Successor bucket of a key: insert its ``g`` new parity bits ``extra``
+    into ``b_old`` at bit ``lib`` — low in-partition bits and high owner
+    bits survive (the split-in-place map)."""
+    low = b_old & jnp.uint32(bl_old - 1)
+    return (((b_old >> lib) << (lib + g)) | (extra << lib) | low)
+
+
+def _resize_stream(pred, succ, w, ops, keys, vals, *,
+                   backend=None, fused=None, bucket_tiles=None,
+                   binned=None):
+    """The dual-table step body (jitted below): watermark ``w`` rides in as
+    a traced uint32 scalar, so migration progress never mints a recompile."""
+    cfg, new_cfg = pred.cfg, succ.cfg
+    lib = cfg.local_index_bits
+    g = new_cfg.index_bits - cfg.index_bits
+    bl = cfg.local_buckets
+    T, N = ops.shape
+    flat = keys.reshape(T * N, cfg.key_words)
+    b_old = _h3_jnp(flat, pred.q_masks).reshape(T, N)
+    extra = _h3_jnp(flat, succ.q_masks[lib:lib + g]).reshape(T, N)
+    mig = (b_old & jnp.uint32(bl - 1)) < w
+    # mask each side's foreign lanes to the dead-lane sentinel (op NOP,
+    # key 0): inert by the engine contract on every backend, and the masked
+    # results are discarded by the merge below anyway
+    zk = jnp.zeros_like(keys)
+    pred, rp = run_stream(pred, jnp.where(mig, 0, ops),
+                          jnp.where(mig[..., None], zk, keys), vals,
+                          backend=backend, fused=fused,
+                          bucket_tiles=bucket_tiles, binned=binned)
+    succ, rs = run_stream(succ, jnp.where(mig, ops, 0),
+                          jnp.where(mig[..., None], keys, zk), vals,
+                          backend=backend, fused=fused,
+                          bucket_tiles=bucket_tiles, binned=binned)
+    res = StepResults(
+        found=jnp.where(mig, rs.found, rp.found),
+        value=jnp.where(mig[..., None], rs.value, rp.value),
+        ok=jnp.where(mig, rs.ok, rp.ok),
+        bucket=resize_buckets(b_old, extra, lib, g, bl))
+    return pred, succ, res
+
+
+_resize_stream_jit = functools.partial(
+    jax.jit, static_argnames=("backend", "fused", "bucket_tiles", "binned")
+)(_resize_stream)
+# donated twin: pred/succ buffers update in place instead of being copied
+# per step — a full-table copy per dispatch would dominate the resize
+# window.  Only for linear-use callers (the serving loop rebinds the state
+# every call and never touches the stale one); the default stays copying.
+_resize_stream_jit_donated = functools.partial(
+    jax.jit, static_argnames=("backend", "fused", "bucket_tiles", "binned"),
+    donate_argnums=(0, 1),
+)(_resize_stream)
+
+
+def run_stream_resize(state: ResizeState, ops: jnp.ndarray,
+                      keys: jnp.ndarray, vals: jnp.ndarray,
+                      backend: Optional[str] = None,
+                      fused: Optional[bool] = None,
+                      bucket_tiles: Optional[int] = None,
+                      binned: Optional[bool] = None,
+                      donate: bool = False
+                      ) -> Tuple[ResizeState, StepResults]:
+    """Stream a ``[T, N]`` trace through an in-flight resize.
+
+    Lanes whose (predecessor-hash) bucket is below the watermark run against
+    the successor, the rest against the predecessor; each table sees the
+    other side's lanes as dead NOP padding and the per-lane results merge by
+    the same mask.  Cost is both streams for the duration of the resize
+    window — the 2x factor ``perfmodel.resize_migration_seconds`` prices.
+    Results are bit-exact with the born-at-final-capacity twin under the
+    no-mid-resize-overflow proviso (section comment); ``results.bucket``
+    reports the SUCCESSOR bucket (== the twin's) for every lane.
+
+    ``donate=True`` hands the state's pred/succ buffers to XLA for in-place
+    update (no per-step full-table copy).  Linear-use callers only — the
+    passed-in ``state`` is dead after the call; the serving loop's dispatch
+    path opts in, library callers that keep the old state must not."""
+    cfg = state.pred.cfg
+    if ops.ndim != 2 or ops.shape[1] != cfg.queries_per_step:
+        raise ValueError(f"stream shape {ops.shape} != [T, p*qpp="
+                         f"{cfg.queries_per_step}]")
+    step = _resize_stream_jit_donated if donate else _resize_stream_jit
+    pred, succ, res = step(
+        state.pred, state.succ, jnp.uint32(state.watermark), ops, keys, vals,
+        backend=backend, fused=fused, bucket_tiles=bucket_tiles,
+        binned=binned)
+    return dataclasses.replace(state, pred=pred, succ=succ), res
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "backend", "bucket_tiles"),
+                   donate_argnums=(0, 1))
+def _migrate_slab_jit(pred, succ, w, *, n, backend=None, bucket_tiles=None):
+    """The jitted slab body: pred/succ buffers are DONATED so XLA updates
+    the stores in place — an eager sweep would copy both full tables per
+    slab, turning the per-slab pause O(table) instead of O(slab) and
+    erasing online migration's whole latency advantage over a
+    stop-the-world rebuild.  ``w`` rides in traced (uint32), ``n`` is
+    static (one compile per distinct slab size, like the distributed
+    factory's per-``n`` cache)."""
+    cfg, new_cfg = pred.cfg, succ.cfg
+    lib = cfg.local_index_bits
+    g = new_cfg.index_bits - cfg.index_bits
+    S = cfg.slots
+    sl = lambda x: jax.lax.dynamic_slice_in_dim(x, w, n, axis=2)
+    pk = xor_reduce(sl(pred.store_keys)[0], axis=0)         # [n, S, Wk]
+    pv = xor_reduce(sl(pred.store_vals)[0], axis=0)
+    pb = xor_reduce(sl(pred.store_valid)[0], axis=0)
+    keys = pk.reshape(n * S, cfg.key_words)
+    vals = pv.reshape(n * S, cfg.val_words)
+    live = (pb & 1).reshape(n * S).astype(jnp.bool_)
+    # single-domain: local bucket == global bucket (the distributed factory
+    # runs its own shard-local copy of this sweep with the owner offset)
+    b_old = (w.astype(jnp.uint32)
+             + jnp.repeat(jnp.arange(n, dtype=jnp.uint32), S))
+    extra = _h3_jnp(keys, succ.q_masks[lib:lib + g])
+    b_new = resize_buckets(b_old, extra, lib, g, cfg.local_buckets)
+    # one whole-store place per slab: the scatter itself is O(slab) but XLA
+    # CPU materializes one store-sized copy per update chain, so a single
+    # bulk_place beats per-new-index-bit sliced updates (each full-size
+    # dynamic_update_slice pays that copy again)
+    ssk, ssv, ssb, _, _, _, _, _ = bulk_place_records(
+        new_cfg, succ.store_keys, succ.store_vals, succ.store_valid,
+        b_new, keys, vals, live, backend=backend, bucket_tiles=bucket_tiles)
+    zero = lambda x: jax.lax.dynamic_update_slice_in_dim(
+        x, jnp.zeros(x.shape[:2] + (n,) + x.shape[3:], x.dtype), w, axis=2)
+    return (XorHashTable(pred.q_masks, zero(pred.store_keys),
+                         zero(pred.store_vals), zero(pred.store_valid), cfg),
+            XorHashTable(succ.q_masks, ssk, ssv, ssb, new_cfg))
+
+
+def migrate_slab(state: ResizeState, n_buckets: int,
+                 backend: Optional[str] = None,
+                 bucket_tiles: Optional[int] = None) -> ResizeState:
+    """Migrate the next ``n_buckets`` predecessor rows ``[w, w + n)`` into
+    the successor and advance the watermark.
+
+    Decode the rows' live plaintext (replica 0 — replicas are identical),
+    hash only the ``g`` new index bits, count-then-place into the successor
+    (the target rows are empty and spill impossible — section comment), and
+    zero the migrated predecessor rows.  Runs jitted with donated buffers
+    (O(slab) in-place updates; the caller must drop the old state, which
+    every chaining caller does); interleave calls with
+    :func:`run_stream_resize` dispatches at whatever slab size the latency
+    budget allows (``config.GrowthPolicy.migrate_buckets_per_slab``)."""
+    cfg = state.pred.cfg
+    w = state.watermark
+    n = min(n_buckets, cfg.local_buckets - w)
+    if n <= 0:
+        return state
+    pred, succ = _migrate_slab_jit(state.pred, state.succ, jnp.uint32(w),
+                                   n=n, backend=backend,
+                                   bucket_tiles=bucket_tiles)
+    return ResizeState(pred=pred, succ=succ, watermark=w + n)
+
+
+def finish_resize(state: ResizeState) -> XorHashTable:
+    """Close a completed resize: returns the successor table (the live
+    value — all mutations since ``begin_resize`` chained into it)."""
+    if not state.done:
+        raise ValueError(
+            f"resize incomplete: watermark {state.watermark}/"
+            f"{state.pred.cfg.local_buckets} — migrate_slab the remaining "
+            f"buckets before finishing")
+    return state.succ
+
+
+RECONFIGURE_FROZEN_FIELDS = ("p", "key_words", "val_words",
+                             "queries_per_pe", "stagger_slots",
                              "shards", "replica_groups")
+
+
+def _shrunk_masks(q_masks: jnp.ndarray, old_cfg: HashTableConfig,
+                  new_cfg: HashTableConfig) -> jnp.ndarray:
+    """Inverse of :func:`successor_masks`: delete the index-bit rows
+    ``[new_lib, old_lib)`` so the table shrinks along the same in-place
+    split axis growth uses."""
+    return jnp.concatenate([q_masks[:new_cfg.local_index_bits],
+                            q_masks[old_cfg.local_index_bits:]], axis=0)
 
 
 def reconfigure(table: XorHashTable, new_cfg: HashTableConfig,
                 backend: Optional[str] = None,
-                bucket_tiles: Optional[int] = None) -> XorHashTable:
-    """Migrate a live table into a different XOR-memory geometry.
+                bucket_tiles: Optional[int] = None,
+                rng=None) -> XorHashTable:
+    """Migrate a live table into a different geometry or capacity.
 
-    ``new_cfg`` may change ``k`` (partial-store / write-port count) and
-    ``replicate_reads`` (read-replica count) — the lattice
-    ``perfmodel.plan_geometry`` searches — plus the non-layout knobs
-    (backend, router, op_mix).  Capacity fields are frozen: the H3 matrix,
-    bucket indices and slot positions all survive unchanged, so the
+    Two migration regimes, picked by what ``new_cfg`` changes:
+
+    **Geometry** (``k``, ``replicate_reads`` — the lattice
+    ``perfmodel.plan_geometry`` searches — plus non-layout knobs): the H3
+    matrix, bucket indices and slot positions survive unchanged, so the
     migration is :func:`extract_records` (decode live plaintext in (bucket,
     slot) order) through the count-then-place sweep into freshly-zeroed
     stores of the new ``(replicas, k)`` shape.  The record SET is exact
-    (every live key/value survives, spill impossible: at most S live
-    records per bucket re-place into S slots); the byte layout is the
-    canonical compacted one — identical to ``compact`` at the new geometry,
-    and bit-exact with a fresh ``bulk_build`` of the same records.
+    (spill impossible: at most S live records per bucket re-place into S
+    slots); the byte layout is the canonical compacted one.  Works on a
+    shard's local partition too (the bucket dimension is taken from the
+    store arrays), which is what ``distributed.make_distributed_reconfigure``
+    maps over the mesh.
 
-    Works on a shard's local partition too (the bucket dimension is taken
-    from the store arrays, not ``cfg.buckets``), which is what
-    ``distributed.make_distributed_reconfigure`` maps over the mesh.
+    **Capacity** (``buckets``, ``slots`` — single-memory-domain tables
+    only): the stop-the-world cousin of the online-resize seam.  Growth
+    extends the H3 matrix exactly like :func:`begin_resize`
+    (:func:`successor_masks`, ``rng`` draws the new rows), shrink deletes
+    the same rows; every live record is rehashed at the new index width and
+    re-placed in one sweep.  A shrink that cannot hold every live record
+    raises (reporting the spill count) instead of dropping records.  A
+    sharded mesh changes capacity through the live migration path
+    (``distributed.make_distributed_resize`` / ``TableServer`` growth)
+    instead — this entry raises with that pointer.
+
+    Genuinely frozen fields (``RECONFIGURE_FROZEN_FIELDS``: hash-input
+    width, value width, lane layout, mesh shape) still raise a fix-it error.
     """
     old = table.cfg
     diffs = [f for f in RECONFIGURE_FROZEN_FIELDS
              if getattr(old, f) != getattr(new_cfg, f)]
     if diffs:
         raise ValueError(
-            f"reconfigure migrates geometry (k, replicate_reads) only, but "
-            f"{diffs} differ between the live table's config and new_cfg — "
-            f"build new_cfg with dataclasses.replace(table.cfg, k=..., "
-            f"replicate_reads=...) (capacity changes are online resize's "
-            f"job, see ROADMAP)")
-    keys, vals, live, bucket = extract_records(table)
+            f"reconfigure migrates geometry (k, replicate_reads) and "
+            f"capacity (buckets, slots), but {diffs} differ between the "
+            f"live table's config and new_cfg — those fields are baked into "
+            f"every record (key/value widths, lane layout, mesh shape); "
+            f"build a fresh table and bulk_build the extracted records into "
+            f"it instead")
+    capacity = (old.buckets != new_cfg.buckets or old.slots != new_cfg.slots)
+    if not capacity:
+        keys, vals, live, bucket = extract_records(table)
+        R, k = new_cfg.replicas, new_cfg.k
+        Bl, S = table.store_keys.shape[2], table.store_keys.shape[3]
+        sk, sv, sb, _, _, _, _, _ = bulk_place_records(
+            new_cfg,
+            jnp.zeros((R, k, Bl, S, old.key_words), jnp.uint32),
+            jnp.zeros((R, k, Bl, S, old.val_words), jnp.uint32),
+            jnp.zeros((R, k, Bl, S), jnp.uint32),
+            bucket, keys, vals, live, backend=backend,
+            bucket_tiles=bucket_tiles)
+        return XorHashTable(table.q_masks, sk, sv, sb, new_cfg)
+    if old.shards > 1:
+        raise ValueError(
+            f"capacity reconfigure (buckets {old.buckets}->{new_cfg.buckets}"
+            f", slots {old.slots}->{new_cfg.slots}) drives a single memory "
+            f"domain; a bucket-sharded table changes capacity through the "
+            f"online-resize seam (distributed.make_distributed_resize, or "
+            f"TableServer growth) — per-partition reconfigure cannot "
+            f"re-home records across shards")
+    if new_cfg.buckets > old.buckets:
+        if rng is None:
+            rng = jax.random.PRNGKey(new_cfg.buckets)
+        q_masks = successor_masks(table.q_masks, old, new_cfg, rng)
+    elif new_cfg.buckets < old.buckets:
+        q_masks = _shrunk_masks(table.q_masks, old, new_cfg)
+    else:
+        q_masks = table.q_masks
+    keys, vals, live, _ = extract_records(table)
+    bucket = _h3_jnp(keys, q_masks)
     R, k = new_cfg.replicas, new_cfg.k
-    Bl, S = table.store_keys.shape[2], table.store_keys.shape[3]
-    sk, sv, sb, _, _, _, _, _ = bulk_place_records(
+    B, S = new_cfg.buckets, new_cfg.slots
+    sk, sv, sb, _, spilled, _, _, _ = bulk_place_records(
         new_cfg,
-        jnp.zeros((R, k, Bl, S, old.key_words), jnp.uint32),
-        jnp.zeros((R, k, Bl, S, old.val_words), jnp.uint32),
-        jnp.zeros((R, k, Bl, S), jnp.uint32),
+        jnp.zeros((R, k, B, S, old.key_words), jnp.uint32),
+        jnp.zeros((R, k, B, S, old.val_words), jnp.uint32),
+        jnp.zeros((R, k, B, S), jnp.uint32),
         bucket, keys, vals, live, backend=backend, bucket_tiles=bucket_tiles)
-    return XorHashTable(table.q_masks, sk, sv, sb, new_cfg)
+    spill_ct = jnp.sum(spilled.astype(jnp.int32))
+    if not isinstance(spill_ct, jax.core.Tracer) and int(spill_ct):
+        raise ValueError(
+            f"capacity reconfigure to (buckets={B}, slots={S}) would drop "
+            f"{int(spill_ct)} live records to bucket overflow — grow slots "
+            f"or buckets, or delete records first")
+    return XorHashTable(q_masks, sk, sv, sb, new_cfg)

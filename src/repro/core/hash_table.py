@@ -208,15 +208,18 @@ def compact(table: XorHashTable, backend: str | None = None,
 
 def reconfigure(table: XorHashTable, new_cfg: HashTableConfig,
                 backend: str | None = None,
-                bucket_tiles: int | None = None) -> XorHashTable:
-    """Migrate a live table into a different (k, replicate_reads) geometry —
-    record-set-exact, canonical compacted layout.  The lattice of legal
-    targets and the scoring that picks one live in
-    ``perfmodel.plan_geometry``; see ``engine.reconfigure`` (DESIGN.md §5).
+                bucket_tiles: int | None = None,
+                rng=None) -> XorHashTable:
+    """Migrate a live table into a different (k, replicate_reads) geometry
+    or a different (buckets, slots) capacity — record-set-exact, canonical
+    compacted layout.  The lattice of legal geometry targets and the scoring
+    that picks one live in ``perfmodel.plan_geometry``; capacity changes
+    rehash at the new index width (``rng`` draws the extra H3 rows on
+    growth); see ``engine.reconfigure`` (DESIGN.md §5, §6).
     """
     from repro.core.engine import reconfigure as _engine_reconfigure
     return _engine_reconfigure(table, new_cfg, backend=backend,
-                               bucket_tiles=bucket_tiles)
+                               bucket_tiles=bucket_tiles, rng=rng)
 
 
 # ---------------------------------------------------------------------------

@@ -39,6 +39,8 @@ __all__ = [
     "replica_copy_factor", "replicated_read_mops",
     "serve_plan_seconds", "serve_loop_modeled",
     "bulk_build_seconds", "bulk_build_modeled_mops",
+    "RESIZE_STREAM_FACTOR", "resize_migration_seconds",
+    "resize_total_seconds",
 ]
 
 
@@ -311,6 +313,66 @@ def bulk_build_modeled_mops(cfg: HashTableConfig, n: int,
     """Records per second (in MOPS) for one count-then-place build."""
     s = bulk_build_seconds(cfg, n, spec=spec)
     return n / s / 1e6 if s else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Online-resize migration model (DESIGN.md §6).  A growing table pays two
+# costs: background migration slabs (the count-then-place sweep over
+# ``buckets_per_slab`` predecessor rows, interleaved between dispatches) and
+# the dual-table stream during the window (every slab runs against BOTH the
+# predecessor and the successor until the watermark closes —
+# :data:`RESIZE_STREAM_FACTOR` on the stream terms).  The serve loop's
+# growth policy picks ``migrate_buckets_per_slab`` so the per-slab pause
+# fits its latency budget; the A/B against a stop-the-world rebuild is
+# benchmarks/resize_migration.py (BENCH_resize.json).
+# ---------------------------------------------------------------------------
+
+RESIZE_STREAM_FACTOR = 2.0      # both tables stream during the window
+
+
+def resize_migration_seconds(cfg: HashTableConfig,
+                             buckets_per_slab: int = 64,
+                             spec: TPUSpec = V5E) -> float:
+    """Cost of ONE background migration slab — the growth pause a dispatch
+    eats between slabs.
+
+    Terms (per slab of ``buckets_per_slab * slots`` candidate records):
+
+      decode  XOR-fold the slab rows' k partial stores into plaintext
+              (k reads per entry over HBM).
+      plan    the count-then-place sorts over the slab's records (the
+              :func:`bulk_build_seconds` sort/scan passes at VMEM
+              bandwidth — the slab is the build's n).
+      place   scatter the placed records into the successor: the port-0
+              plane write broadcast to all replicas.
+      zero    write back the migrated predecessor rows as zeros (all
+              ``replicas * k`` planes — the split-in-place invariant needs
+              the source rows dead).
+    """
+    import math
+    n = buckets_per_slab * cfg.slots
+    if n <= 0:
+        return 0.0
+    entry_bytes = 4 * cfg.entry_words
+    decode_bytes = cfg.k * n * entry_bytes
+    zero_bytes = cfg.replicas * cfg.k * n * entry_bytes
+    place_bytes = cfg.replicas * n * entry_bytes
+    passes = 2 * max(math.log2(max(n, 2)), 1.0) + PLAN_SCAN_PASSES
+    rec_bytes = n * 4 * (cfg.key_words + cfg.val_words + 2)
+    sort_s = passes * rec_bytes / (spec.vmem_gbps * 1e9)
+    hbm_s = (decode_bytes + zero_bytes + place_bytes) / (spec.hbm_gbps * 1e9)
+    return sort_s + hbm_s
+
+
+def resize_total_seconds(cfg: HashTableConfig,
+                         buckets_per_slab: int = 64,
+                         spec: TPUSpec = V5E) -> float:
+    """Whole-table background migration time: every shard walks its own
+    ``local_buckets`` in lockstep slabs (shard-locality makes the sharded
+    resize no slower per slab than the single-domain one)."""
+    import math
+    slabs = math.ceil(cfg.local_buckets / buckets_per_slab)
+    return slabs * resize_migration_seconds(cfg, buckets_per_slab, spec=spec)
 
 
 # ---------------------------------------------------------------------------
@@ -644,9 +706,11 @@ class GeometryPlan:
                 or self.replicate_reads != self.baseline_replicate_reads)
 
     def apply(self, cfg: HashTableConfig) -> HashTableConfig:
-        """The planned geometry as a config (same table capacity — buckets
-        and slots never move, so ``engine.reconfigure`` can migrate into
-        it)."""
+        """The planned geometry as a config.  Capacity is untouched — this
+        plan moves only (k, replicate_reads); growing buckets/slots is the
+        online-resize seam's job (``engine.begin_resize`` /
+        ``TableServer`` growth, priced by
+        :func:`resize_migration_seconds`)."""
         return dataclasses.replace(cfg, k=self.k,
                                    replicate_reads=self.replicate_reads)
 

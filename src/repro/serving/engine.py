@@ -34,6 +34,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.config import GrowthPolicy
+from repro.core.hash_table import OP_DELETE, OP_INSERT
 from repro.models.lm import init_cache, lm_decode_step, lm_prefill
 from repro.models.model_config import ModelConfig
 from repro.models.stack import cache_batch_slice, cache_batch_update
@@ -119,6 +121,18 @@ class ServeConfig:
                                         # scale it down to measure the
                                         # blocked->resident crossing on
                                         # CPU-sized tables
+    # ---- online growth (DESIGN.md §6) ----
+    growth: Optional[GrowthPolicy] = None
+                                        # when set, the server watches its
+                                        # live-record count at slab
+                                        # boundaries and opens an online
+                                        # resize once the load factor
+                                        # reaches the policy trigger;
+                                        # migration slabs interleave with
+                                        # the dispatch window and the served
+                                        # results stay bit-exact with a
+                                        # born-at-final-capacity twin.  None
+                                        # keeps capacity fixed at init
 
 
 @dataclasses.dataclass
@@ -129,10 +143,11 @@ class StepReport:
     finished: List
     queued: int                         # requests still waiting for admission
     occupied: int                       # slots / in-flight slabs still live
+    resizing: bool = False              # an online resize window still open
 
     @property
     def quiescent(self) -> bool:
-        return self.queued == 0 and self.occupied == 0
+        return self.queued == 0 and self.occupied == 0 and not self.resizing
 
 
 class Engine:
@@ -251,6 +266,40 @@ class Engine:
 # ---------------------------------------------------------------------------
 
 
+class _EngineResize:
+    """Single-domain resize driver: adapts the ``engine`` seam
+    (begin_resize / run_stream_resize / migrate_slab / finish_resize) to the
+    begin/stream/migrate/finish interface
+    ``distributed.DistributedResize`` exposes, so ``TableServer`` drives
+    both through one code path."""
+
+    def __init__(self, new_buckets: int):
+        self._new_buckets = new_buckets
+
+    def begin(self, table, rng=None):
+        from repro.core import engine as _core_engine
+        return _core_engine.begin_resize(table, self._new_buckets, rng=rng)
+
+    @staticmethod
+    def stream(state, ops, keys, vals):
+        from repro.core import engine as _core_engine
+        # linear use: the serve loop rebinds its state every dispatch and
+        # never reads the stale one, so donate the table buffers (a full
+        # pred+succ copy per step would dominate the resize window)
+        return _core_engine.run_stream_resize(state, ops, keys, vals,
+                                              donate=True)
+
+    @staticmethod
+    def migrate(state, n_buckets):
+        from repro.core import engine as _core_engine
+        return _core_engine.migrate_slab(state, n_buckets)
+
+    @staticmethod
+    def finish(state):
+        from repro.core import engine as _core_engine
+        return _core_engine.finish_resize(state)
+
+
 class TableServer:
     """Steady-state admission loop over the hash-table stream seam.
 
@@ -283,13 +332,37 @@ class TableServer:
     table state chains through dispatches, so the served results are
     bit-exact with running the identical concatenated trace through the
     one-shot path (tests/test_serve_loop.py).
+
+    **Online growth** (``scfg.growth``, DESIGN.md §6): retirement tracks
+    the live-record count (accepted first-time inserts minus accepted
+    deletes), and once the load factor reaches the policy trigger at a slab
+    boundary the server opens an online resize — dispatch switches to the
+    dual-table watermark stream, one migration slab
+    (``growth.migrate_buckets_per_slab`` predecessor buckets) runs between
+    consecutive dispatches on the chained table value, and when the
+    watermark closes the successor swaps in.  All of it is invisible to
+    retirement order (the in-flight window and span scatter are untouched)
+    and the retired results are bit-exact with a twin server born at the
+    final capacity (tests/test_resize.py).  The trigger/target gap in
+    ``GrowthPolicy`` is the growth hysteresis.  ``stream_factory`` rebuilds
+    the stream for the growing config after a swap (required when the
+    stream closure bakes the config — every ``make_distributed_stream``
+    wrapper does; the default keeps the existing stream, which is correct
+    for plain ``engine.run_stream``); ``resize_factory(cfg, new_buckets)``
+    builds the resize driver (default: the single-domain engine seam; a
+    sharded mesh passes ``lambda cfg, nb:
+    make_distributed_resize(mesh, cfg, nb)``).
     """
 
-    def __init__(self, cfg, table, stream, scfg: Optional[ServeConfig] = None):
+    def __init__(self, cfg, table, stream, scfg: Optional[ServeConfig] = None,
+                 *, stream_factory=None, resize_factory=None, rng=None):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
         self.table = table
         self._stream = stream
+        self._stream_factory = stream_factory
+        self._resize_factory = resize_factory
+        self._rng = jax.random.PRNGKey(0x5e51e) if rng is None else rng
         self._queue = SlabQueue(self.scfg.slab_steps, cfg.queries_per_step,
                                 cfg.key_words, cfg.val_words,
                                 max_requests=self.scfg.queue_requests,
@@ -317,6 +390,12 @@ class TableServer:
         self._dest_loads: Optional[np.ndarray] = None
         self.geometry_plan = None
         self.migrations = 0
+        # online growth (DESIGN.md §6): retirement-tracked occupancy, the
+        # open resize driver + state (None when capacity is steady)
+        self.live_records = 0
+        self._resize = None
+        self._resize_state = None
+        self.resizes = 0
 
     @staticmethod
     def _nsq_mask(cfg) -> Optional[np.ndarray]:
@@ -378,7 +457,13 @@ class TableServer:
     def _dispatch(self, slab) -> None:
         args = (jnp.asarray(slab.ops), jnp.asarray(slab.keys),
                 jnp.asarray(slab.vals))
-        if self._bounded:
+        if self._resize_state is not None:
+            # resize window: the dual-table watermark stream, bypassing the
+            # plan cache (the bounded widths are measured against one table;
+            # the resize stream runs skew-proof for its short window)
+            self._resize_state, res = self._resize.stream(
+                self._resize_state, *args)
+        elif self._bounded:
             plan = self._resolve_plan(slab)
             if plan is not None:
                 self.table, res = self._stream.dispatch(self.table, *args,
@@ -401,6 +486,17 @@ class TableServer:
         found = np.asarray(res.found).reshape(T * N)
         ok = np.asarray(res.ok).reshape(T * N)
         value = np.asarray(res.value).reshape(T * N, -1)
+        # occupancy tracking for the growth trigger, on the PHYSICAL layout
+        # (slab.ops is physical; the perm gather below reorders results to
+        # logical).  Counts accepted first-time inserts minus accepted
+        # deletes — same-step duplicate inserts of one new key each count
+        # (both probed the pre-step snapshot), so this can overcount under
+        # duplicate-heavy ingest: fine for a grow trigger, which only needs
+        # to err toward growing earlier
+        ops_phys = slab.ops.reshape(T * N)
+        self.live_records += int(((ops_phys == OP_INSERT) & ok
+                                  & ~found).sum())
+        self.live_records -= int(((ops_phys == OP_DELETE) & ok).sum())
         if slab.perm is not None:       # NSQ-aware packing: logical -> phys
             found = found[slab.perm]
             ok = ok[slab.perm]
@@ -447,7 +543,8 @@ class TableServer:
                              vmem_budget=self.scfg.geometry_vmem_budget)
         self.geometry_plan = plan
         if (self.cfg.mesh_devices > 1 or not plan.changed
-                or plan.improvement < self.scfg.geometry_hysteresis):
+                or plan.improvement < self.scfg.geometry_hysteresis
+                or self._resize_state is not None):
             return
         new_cfg = plan.apply(self.cfg)
         self.table = _core_engine.reconfigure(self.table, new_cfg)
@@ -459,6 +556,59 @@ class TableServer:
                                         slack=self.plan_cache.slack)
         self.migrations += 1
 
+    # ------------------------------------------------------- online growth
+    def _maybe_grow(self) -> None:
+        """Slab-boundary growth trigger (DESIGN.md §6): open an online
+        resize once the retirement-tracked load factor reaches the policy
+        trigger.  The trigger/target gap in :class:`GrowthPolicy` is the
+        hysteresis — after a grow the table sits well below the trigger."""
+        pol = self.scfg.growth
+        if pol is None or self._resize_state is not None:
+            return
+        if self.live_records < (pol.grow_load_factor
+                                * self.cfg.buckets * self.cfg.slots):
+            return
+        new_buckets = pol.target_buckets(self.cfg, self.live_records)
+        if self._resize_factory is not None:
+            self._resize = self._resize_factory(self.cfg, new_buckets)
+        elif self.cfg.mesh_devices > 1:
+            raise RuntimeError(
+                "growing a sharded TableServer needs resize_factory= (e.g. "
+                "lambda cfg, nb: make_distributed_resize(mesh, cfg, nb)) — "
+                "the default driver is the single-domain engine seam")
+        else:
+            self._resize = _EngineResize(new_buckets)
+        self._rng, sub = jax.random.split(self._rng)
+        self._resize_state = self._resize.begin(self.table, sub)
+
+    def _advance_resize(self) -> None:
+        """One background migration slab between dispatches, on the chained
+        table value; on watermark close, swap the successor in — rebuilding
+        the stream (config-baking closures), q_masks mirror and plan cache
+        for the new capacity."""
+        if self._resize_state is None:
+            return
+        self._resize_state = self._resize.migrate(
+            self._resize_state, self.scfg.growth.migrate_buckets_per_slab)
+        if not self._resize_state.done:
+            return
+        self.table = self._resize.finish(self._resize_state)
+        self._resize_state = None
+        self._resize = None
+        self.cfg = self.table.cfg
+        self._qm_host = None            # host mirror of the OLD q_masks
+        if self._stream_factory is not None:
+            self._stream = self._stream_factory(self.cfg)
+            self._bounded = getattr(self._stream, "router", None) == "bounded"
+        if self._bounded:               # cached widths measured at old B
+            slack = getattr(self._stream, "slack",
+                            None if self.plan_cache is None
+                            else self.plan_cache.slack)
+            self.plan_cache = PlanCache(self.cfg,
+                                        plans=self.scfg.plan_cache_plans,
+                                        slack=slack)
+        self.resizes += 1
+
     # ------------------------------------------------------------------ step
     def step(self) -> StepReport:
         """Pack + dispatch at most one slab, then retire anything past the
@@ -467,6 +617,7 @@ class TableServer:
         finished: List[SlabRequest] = []
         if self._queue.pending_requests:
             self._dispatch(self._queue.next_slab())
+            self._advance_resize()      # one migration slab per dispatch
             self._maybe_replan()
         # double-buffer discipline: block only on slabs leaving the window,
         # so the newest dispatch keeps executing while the host packs on
@@ -475,9 +626,16 @@ class TableServer:
         if not self._queue.pending_requests:
             while self._inflight:               # quiescent queue: drain
                 finished.extend(self._retire_one())
+            # idle: ONE background slab, never a drain-it-all loop — a
+            # request arriving mid-drain would eat the very stop-the-world
+            # stall the watermark walk exists to avoid.  The report says
+            # ``resizing`` so run() keeps stepping until the walk closes.
+            self._advance_resize()
+        self._maybe_grow()
         return StepReport(finished=finished,
                           queued=self._queue.pending_requests,
-                          occupied=len(self._inflight))
+                          occupied=len(self._inflight),
+                          resizing=self._resize_state is not None)
 
     # ------------------------------------------------------------------- run
     def run(self) -> List[SlabRequest]:
@@ -487,7 +645,8 @@ class TableServer:
         Returns every request finished during the call, in retire order."""
         finished: List[SlabRequest] = []
         report = StepReport(finished=[], queued=self._queue.pending_requests,
-                            occupied=len(self._inflight))
+                            occupied=len(self._inflight),
+                            resizing=self._resize_state is not None)
         while not report.quiescent:
             report = self.step()
             finished.extend(report.finished)
@@ -541,6 +700,12 @@ class TableServer:
             "op_mix": mix.as_tuple(),
             "nsq_fraction": mix.nsq_fraction,
             "migrations": self.migrations,
+            "live_records": self.live_records,
+            "load_factor": (self.live_records
+                            / (self.cfg.buckets * self.cfg.slots)),
+            "resizes": self.resizes,
+            "resize_progress": (None if self._resize_state is None
+                                else self._resize_state.progress),
             "geometry": None if plan is None else {
                 "k": plan.k,
                 "replicate_reads": plan.replicate_reads,

@@ -1,0 +1,71 @@
+"""Pin the bench --smoke contract: smoke runs are CI harness checks and
+must never touch the committed repo-root ``BENCH_*.json`` artifacts (those
+are full-mode results, regenerated deliberately).
+
+The regression this guards: ``serve_latency.py --smoke`` used to fall
+through ``_sweep`` into the unconditional ``json.dump`` and clobber the
+committed full-mode ``BENCH_serve.json`` with smoke-shape numbers.  Every
+bench now follows the sibling idiom — ``print("smoke OK"); return``
+*before* any repo-root write.
+
+The invocation list is parsed from the bench-smoke CI job in
+``.github/workflows/ci.yml`` so a bench added to CI is automatically
+covered here (and a bench added here without CI coverage stays visible in
+one place).  Each invocation runs in a subprocess from the repo root with
+the same environment CI uses; before/after we snapshot every repo-root
+``*.json`` (name + sha256) and assert the snapshot is unchanged.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_CI = os.path.join(_ROOT, ".github", "workflows", "ci.yml")
+
+
+def _ci_smoke_invocations():
+    """Every ``python benchmarks/<bench>.py --smoke ...`` line in ci.yml."""
+    with open(_CI) as f:
+        text = f.read()
+    cmds = re.findall(r"python (benchmarks/\S+\.py(?: --[\w-]+)*)", text)
+    return sorted({c for c in cmds if "--smoke" in c})
+
+
+def _snapshot():
+    """(name, sha256) for every repo-root ``*.json``."""
+    out = {}
+    for name in sorted(os.listdir(_ROOT)):
+        if name.endswith(".json"):
+            with open(os.path.join(_ROOT, name), "rb") as f:
+                out[name] = hashlib.sha256(f.read()).hexdigest()
+    return out
+
+
+def test_ci_lists_smoke_invocations():
+    """The parse itself: CI must keep a non-trivial bench-smoke matrix."""
+    cmds = _ci_smoke_invocations()
+    assert len(cmds) >= 9, cmds
+    assert any("serve_latency" in c for c in cmds), cmds
+
+
+@pytest.mark.parametrize("cmd", _ci_smoke_invocations())
+def test_smoke_leaves_repo_root_json_untouched(cmd):
+    before = _snapshot()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_ROOT, "src"), _ROOT, env.get("PYTHONPATH", "")])
+    r = subprocess.run([sys.executable] + cmd.split(),
+                       env=env, cwd=_ROOT, capture_output=True, text=True,
+                       timeout=600)
+    assert r.returncode == 0, f"{cmd}\n{r.stdout}\n{r.stderr}"
+    assert "smoke OK" in r.stdout, f"{cmd}\n{r.stdout}"
+    after = _snapshot()
+    assert after == before, (
+        f"{cmd} changed repo-root JSON artifacts: "
+        f"{sorted(set(before.items()) ^ set(after.items()))}")

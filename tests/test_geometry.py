@@ -288,11 +288,82 @@ def test_reconfigure_to_replicated_and_back(trace_gen):
     assert _record_set(reconfigure(compact, cfg)) == before
 
 
-def test_reconfigure_rejects_capacity_changes(trace_gen):
+def test_reconfigure_capacity_round_trip(trace_gen):
+    """Capacity deltas route through the migration path now (DESIGN.md §6):
+    grow rehashes at the wider index, shrink back is the inverse — the
+    record set survives both."""
     cfg = HashTableConfig(p=4, k=4, buckets=1 << 8, slots=2, key_words=2,
                           val_words=2)
     table = init_table(cfg, jax.random.key(0))
-    with pytest.raises(ValueError, match="buckets"):
+    op, keys, vals = trace_gen.mixed(200, key_words=2, val_words=2,
+                                     key_space=400)
+    op_s, kk_s, vv_s = pack_trace(op, keys, vals, cfg)
+    table, _ = run_stream(table, jnp.asarray(op_s), jnp.asarray(kk_s),
+                          jnp.asarray(vv_s))
+    before = _record_set(table)
+    assert before
+    big = reconfigure(table, dataclasses.replace(cfg, buckets=1 << 9),
+                      rng=jax.random.key(7))
+    assert big.store_keys.shape[2] == 1 << 9
+    assert big.q_masks.shape[0] == big.cfg.index_bits
+    assert _record_set(big) == before
+    # searches resolve on the grown table
+    rec = sorted(before)
+    skeys = np.array([r[:2] for r in rec], np.uint32)
+    svals = np.array([r[2:] for r in rec], np.uint32)
+    sop = np.full(len(rec), OP_SEARCH, np.int32)
+    op_q, kk_q, vv_q, place = pack_trace(sop, skeys, svals * 0, big.cfg,
+                                         return_placement=True)
+    _, res = run_stream(big, jnp.asarray(op_q), jnp.asarray(kk_q),
+                        jnp.asarray(vv_q))
+    N = big.cfg.queries_per_step
+    flat = place[:, 0].astype(np.int64) * N + place[:, 1]
+    assert bool(np.asarray(res.found).reshape(-1)[flat].all())
+    np.testing.assert_array_equal(
+        np.asarray(res.value).reshape(-1, 2)[flat], svals)
+    # shrink back deletes the same index rows; record set unchanged
+    back = reconfigure(big, cfg)
+    assert _record_set(back) == before
+
+
+def test_reconfigure_shrink_spill_raises():
+    """A shrink that cannot hold every live record reports the spill count
+    instead of dropping records."""
+    cfg = HashTableConfig(p=4, k=4, buckets=1 << 6, slots=2, key_words=2,
+                          val_words=2)
+    table = init_table(cfg, jax.random.key(2))
+    n = 64
+    keys = np.zeros((n, 2), np.uint32)
+    keys[:, 0] = np.arange(1, n + 1)
+    vals = np.ones((n, 2), np.uint32)
+    op = np.full(n, 2, np.int32)            # OP_INSERT
+    op_s, kk_s, vv_s = pack_trace(op, keys, vals, cfg)
+    table, res = run_stream(table, jnp.asarray(op_s), jnp.asarray(kk_s),
+                            jnp.asarray(vv_s))
+    with pytest.raises(ValueError, match="drop"):
+        reconfigure(table, dataclasses.replace(cfg, buckets=4, slots=1))
+
+
+def test_reconfigure_rejects_frozen_fields(trace_gen):
+    """Genuinely frozen fields (hash-input width, lane layout, mesh shape)
+    still get the fix-it error — only capacity and geometry migrate."""
+    cfg = HashTableConfig(p=4, k=4, buckets=1 << 8, slots=2, key_words=2,
+                          val_words=2)
+    table = init_table(cfg, jax.random.key(0))
+    with pytest.raises(ValueError, match="key_words"):
+        reconfigure(table, dataclasses.replace(cfg, key_words=4))
+
+
+def test_reconfigure_sharded_capacity_raises():
+    """Per-partition reconfigure cannot re-home records across shards —
+    sharded capacity changes go through the online-resize seam."""
+    cfg = HashTableConfig(p=4, k=2, buckets=1 << 8, slots=2, key_words=2,
+                          val_words=2, shards=4, replicate_reads=False)
+    local = HashTableConfig(p=4, k=2, buckets=1 << 8, slots=2, key_words=2,
+                            val_words=2)
+    table = init_table(local, jax.random.key(0))
+    table = dataclasses.replace(table, cfg=cfg)
+    with pytest.raises(ValueError, match="make_distributed_resize"):
         reconfigure(table, dataclasses.replace(cfg, buckets=1 << 9))
 
 
